@@ -1,0 +1,147 @@
+"""Paper figures 12-16 + Table 3 claim validation (one function per
+table/figure, per the deliverable).
+
+Figures 12-15: per-dataset streaming statistics (GPS / LiDAR / URBAN /
+UCR surrogates).  Figure 16: global ranking across all experiments.
+Table 3: the paper's distilled claims, checked programmatically.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+import numpy as np
+
+from .paper_eval import OUT_DIR, run_figure
+from repro.core import COMBINATIONS
+
+
+def fig12_gps():
+    return run_figure("gps", n=20000)
+
+
+def fig13_lidar():
+    return run_figure("lidar", n=20000)
+
+
+def fig14_urban():
+    return run_figure("urban", n=16000)
+
+
+def fig15_ucr():
+    return run_figure("ucr", n=4000, files=8)
+
+
+def fig16_ranking(all_results: Dict[str, Dict]) -> Dict:
+    """Sum of normalized mean statistics across experiments (paper Fig 16:
+    lower = better)."""
+    keys = list(COMBINATIONS)
+    score = {k: 0.0 for k in keys}
+    for ds, res in all_results.items():
+        for eps, combos in res.items():
+            for metric in ("ratio", "latency", "error"):
+                vals = {k: combos[k][metric]["mean"] for k in keys}
+                hi = max(vals.values()) or 1.0
+                for k in keys:
+                    score[k] += vals[k] / hi
+    ranked = sorted(score.items(), key=lambda kv: kv[1])
+    print("\n--- Figure 16: ranking (best -> worst, normalized sum) ---")
+    for i, (k, s) in enumerate(ranked):
+        m, p = COMBINATIONS[k]
+        print(f"{i+1:2}. {k:3}  {s:6.2f}   ({m}/{p})")
+    with open(os.path.join(OUT_DIR, "fig16_ranking.json"), "w") as f:
+        json.dump({"score": score,
+                   "ranking": [k for k, _ in ranked]}, f, indent=2)
+    return {"score": score, "ranking": [k for k, _ in ranked]}
+
+
+def table3_claims(all_results: Dict[str, Dict]) -> Dict[str, bool]:
+    """Programmatic validation of the paper's Table 3 claims."""
+    claims: Dict[str, bool] = {}
+
+    def every(pred):
+        outs = []
+        for ds, res in all_results.items():
+            for eps, combos in res.items():
+                outs.append(pred(combos))
+        return outs
+
+    # 1. TwoStreams never inflates data (overall ratio <= 1).
+    outs = every(lambda c: all(c[k]["overall_ratio"] <= 1.0 + 1e-9
+                               for k in ("A1", "C1", "L1")))
+    claims["twostreams_never_inflates"] = all(outs)
+
+    # 2. Classical (implicit) methods inflate under low compression
+    #    somewhere (overall ratio > 1 for at least one classical combo at
+    #    the tightest eps of some dataset).
+    outs = every(lambda c: any(c[k]["overall_ratio"] > 1.0
+                               for k in ("Sw", "Sl", "C", "M")))
+    claims["classical_inflate_somewhere"] = any(outs)
+
+    # 3. SingleStream/V give the best compression ratios (mean per point)
+    #    among the streaming protocols in most settings.
+    def best_compression(c):
+        ours = min(c[k]["ratio"]["mean"]
+                   for k in ("A2", "A3", "C2", "C3", "L2", "L3"))
+        others = min(c[k]["ratio"]["mean"] for k in ("A1", "C1", "L1"))
+        return ours <= others + 1e-12
+    outs = every(best_compression)
+    claims["singlestream_best_compression"] = \
+        sum(outs) >= 0.8 * len(outs)
+
+    # 4. The new protocols have lower average latency than the classical
+    #    implicit protocol on the same method (disjoint: C2 vs Sl).
+    outs = every(lambda c: c["C2"]["latency"]["mean"]
+                 <= c["Sl"]["latency"]["mean"] + 1e-9)
+    claims["new_protocols_lower_latency"] = sum(outs) >= 0.8 * len(outs)
+
+    # 5. Linear yields the smallest mean error among methods under the
+    #    same protocol (L2 vs A2/C2) in most settings.
+    outs = every(lambda c: c["L2"]["error"]["mean"]
+                 <= min(c["A2"]["error"]["mean"],
+                        c["C2"]["error"]["mean"]) + 1e-12)
+    claims["linear_smallest_error"] = sum(outs) >= 0.7 * len(outs)
+
+    # 6. MixedPLA achieves the best compression of the classical methods.
+    outs = every(lambda c: c["M"]["overall_ratio"]
+                 <= min(c["Sw"]["overall_ratio"], c["Sl"]["overall_ratio"],
+                        c["C"]["overall_ratio"]) + 1e-12)
+    claims["mixed_best_classical_compression"] = \
+        sum(outs) >= 0.8 * len(outs)
+
+    print("\n--- Table 3 claim validation ---")
+    for k, v in claims.items():
+        print(f"  {'PASS' if v else 'FAIL'}  {k}")
+    with open(os.path.join(OUT_DIR, "table3_claims.json"), "w") as f:
+        json.dump(claims, f, indent=2)
+    return claims
+
+
+def table1_features() -> None:
+    """Table 1: qualitative method features, measured on a reference
+    stream (segments count / record fields / latency class)."""
+    import numpy as np
+    from repro.core import METHODS, evaluate
+    rng = np.random.default_rng(0)
+    n = 4000
+    ts = np.arange(n, dtype=float)
+    ys = np.cumsum(rng.normal(0, 0.5, n))
+    eps = 1.0
+    rows = []
+    for key, method, proto in (("Sw", "swing", "implicit"),
+                               ("Sl", "disjoint", "implicit"),
+                               ("C", "continuous", "implicit"),
+                               ("M", "mixed", "implicit"),
+                               ("A2", "angle", "singlestream"),
+                               ("L2", "linear", "singlestream")):
+        r = evaluate(method, proto, ts, ys, eps)
+        out = METHODS[method](ts, ys, eps)
+        rows.append((key, method, len(out.segments),
+                     r.metrics.latency.mean(), r.overall_ratio))
+    print("\n--- Table 1 (measured): #segments / avg latency / overall "
+          "bytes ratio @ eps=1, random walk ---")
+    for key, m, segs, lat, ratio in rows:
+        print(f"  {key:3} {m:10} segments={segs:5d}  latency={lat:8.1f}  "
+              f"ratio={ratio:.4f}")

@@ -1,0 +1,91 @@
+"""Shared evaluation pipeline behind the paper's Figures 12-16 / Table 3.
+
+Runs the 13 (method x protocol) combinations of Table 2 over the four
+(synthetic-surrogate) datasets at the paper's three error thresholds and
+aggregates the three per-point streaming metrics exactly as the paper's
+box plots do (mean, quartiles, 1.5-IQR whiskers, extremes).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import COMBINATIONS, evaluate_all
+from repro.core.metrics import PointMetrics
+from repro.data.synthetic import EPS_GRID, make_dataset, ucr_eps
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "paper")
+
+
+def _agg(metrics_list: List[PointMetrics]) -> Dict:
+    out = {}
+    for name in ("ratio", "latency", "error"):
+        v = np.concatenate([getattr(m, name) for m in metrics_list])
+        q25, q75 = np.percentile(v, [25, 75])
+        iqr = q75 - q25
+        out[name] = {
+            "mean": float(v.mean()),
+            "q25": float(q25), "q75": float(q75),
+            "whisker_lo": float(v[v >= q25 - 1.5 * iqr].min()),
+            "whisker_hi": float(v[v <= q75 + 1.5 * iqr].max()),
+            "min": float(v.min()), "max": float(v.max()),
+        }
+    return out
+
+
+def eval_dataset(name: str, n: int = 20000, files: int = 1,
+                 seed: int = 0) -> Dict:
+    """Returns {eps_label: {combo_key: {metric: stats}}}."""
+    traces = make_dataset(name, n=n, seed=seed, files=files)
+    results: Dict = {}
+    for eps_spec in EPS_GRID[name]:
+        per_combo: Dict[str, List[PointMetrics]] = {k: []
+                                                    for k in COMBINATIONS}
+        per_combo_overall: Dict[str, List[float]] = {k: []
+                                                     for k in COMBINATIONS}
+        for ts, ys in traces:
+            eps = ucr_eps(ys, eps_spec) if isinstance(eps_spec, str) \
+                else float(eps_spec)
+            res = evaluate_all(ts, ys, eps)
+            for k, r in res.items():
+                per_combo[k].append(r.metrics)
+                per_combo_overall[k].append(r.overall_ratio)
+        results[str(eps_spec)] = {
+            k: {**_agg(v),
+                "overall_ratio": float(np.mean(per_combo_overall[k]))}
+            for k, v in per_combo.items()}
+    return results
+
+
+def print_figure(name: str, results: Dict) -> None:
+    """ASCII rendition of one dataset's figure (3 eps x 3 metrics)."""
+    for eps, combos in results.items():
+        print(f"\n--- {name} @ eps={eps} "
+              f"(mean [q25, q75] per point) ---")
+        hdr = f"{'key':4} | {'compression':>22} | {'latency':>22} | " \
+              f"{'error':>22}"
+        print(hdr)
+        print("-" * len(hdr))
+        for k, st in combos.items():
+            def fmt(m):
+                return (f"{st[m]['mean']:7.3f} "
+                        f"[{st[m]['q25']:6.2f},{st[m]['q75']:7.2f}]")
+            print(f"{k:4} | {fmt('ratio')} | {fmt('latency')} | "
+                  f"{fmt('error')}")
+
+
+def run_figure(dataset: str, n: int = 20000, files: int = 1) -> Dict:
+    t0 = time.time()
+    res = eval_dataset(dataset, n=n, files=files)
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"fig_{dataset}.json"), "w") as f:
+        json.dump(res, f, indent=2)
+    print_figure(dataset, res)
+    print(f"[{dataset}: {time.time()-t0:.1f}s]")
+    return res

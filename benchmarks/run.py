@@ -1,0 +1,47 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows plus the full figure tables; JSON artifacts go to
+# experiments/paper/.
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    from . import figures, framework_bench
+
+    csv_rows = []
+
+    def fig(name, fn):
+        t = time.time()
+        res = fn()
+        csv_rows.append((name, (time.time() - t) * 1e6, "figure"))
+        return res
+
+    all_results = {}
+    all_results["gps"] = fig("fig12_gps", figures.fig12_gps)
+    all_results["lidar"] = fig("fig13_lidar", figures.fig13_lidar)
+    all_results["urban"] = fig("fig14_urban", figures.fig14_urban)
+    all_results["ucr"] = fig("fig15_ucr", figures.fig15_ucr)
+    fig("fig16_ranking", lambda: figures.fig16_ranking(all_results))
+    fig("table1_features", figures.table1_features)
+    claims = figures.table3_claims(all_results)
+
+    csv_rows.extend(framework_bench.kernel_throughput())
+    csv_rows.extend(framework_bench.grad_compression_bench())
+    csv_rows.extend(framework_bench.kv_cache_bench())
+    csv_rows.extend(framework_bench.adaptive_eps_bench())
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.1f},{derived}")
+    n_fail = sum(not v for v in claims.values())
+    print(f"\n[benchmarks done in {time.time()-t0:.1f}s; "
+          f"table3 claims: {len(claims)-n_fail}/{len(claims)} pass]")
+    if n_fail:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,26 @@
+"""Splice generated report tables into EXPERIMENTS.md at the markers."""
+import subprocess
+import sys
+import os
+
+HERE = os.path.dirname(__file__)
+REPO = os.path.join(HERE, "..")
+
+out = subprocess.run(
+    [sys.executable, "-m", "repro.launch.report"],
+    capture_output=True, text=True,
+    env=dict(os.environ, PYTHONPATH=os.path.join(REPO, "src")), cwd=REPO)
+assert out.returncode == 0, out.stderr[-2000:]
+sections = out.stdout.split("\n\n### ")
+dry = sections[0]
+roof = "### " + sections[1]
+coll = "### " + sections[2]
+
+path = os.path.join(REPO, "EXPERIMENTS.md")
+s = open(path).read()
+s = s.replace("<!-- DRYRUN_TABLE -->", dry)
+s = s.replace("<!-- ROOFLINE_TABLE -->", roof)
+s = s.replace("<!-- COLLECTIVE_TABLE -->", coll)
+open(path, "w").write(s)
+print("spliced", len(dry.splitlines()), "+", len(roof.splitlines()),
+      "+", len(coll.splitlines()), "lines")

@@ -1,0 +1,79 @@
+"""Byte-level PLA compression for smooth checkpoint tensors.
+
+Paper scenario (2): storage reduction of received streams.  Optimizer
+second moments / EMA tensors are smooth along the flattened index, so
+PLA with a small relative eps compresses them well; exact tensors (the
+weights themselves) stay raw.  The byte format is the paper's
+SingleStream protocol packed with ``struct`` (repro.core.protocols), so
+on-disk sizes are real bytes, not estimates.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.jax_pla import (PLARecords, decode_records, angle_segment,
+                                to_records)
+
+_MAGIC = b"PLA1"
+_CHUNK = 256
+
+
+def encode_array(x: np.ndarray, eps_rel: float = 1e-3) -> bytes:
+    """Compress a float array; returns a self-describing blob."""
+    x = np.asarray(x)
+    flat = x.astype(np.float32).reshape(-1)
+    n = flat.size
+    rows = -(-n // _CHUNK)
+    y = np.pad(flat, (0, rows * _CHUNK - n)).reshape(rows, _CHUNK)
+    eps = float(eps_rel * (np.sqrt(np.mean(flat * flat)) + 1e-20))
+    seg = angle_segment(jnp.asarray(y), eps, max_run=_CHUNK)
+    # Variable-length SingleStream packing per row: (n, a, v) triplets.
+    breaks = np.asarray(seg.breaks)
+    a = np.asarray(seg.a)
+    v = np.asarray(seg.v)
+    buf = bytearray()
+    buf += _MAGIC
+    buf += struct.pack("<IIf", n, rows, eps)
+    buf += struct.pack("<I", len(x.shape))
+    buf += struct.pack(f"<{len(x.shape)}I", *x.shape)
+    for r in range(rows):
+        idx = np.flatnonzero(breaks[r])
+        buf += struct.pack("<H", len(idx))
+        prev = -1
+        for i in idx:
+            # (length-1: u8, slope: f32, value-at-end: f32)
+            buf += struct.pack("<Bff", i - prev - 1, float(a[r, i]),
+                               float(v[r, i]))
+            prev = i
+    return bytes(buf)
+
+
+def decode_array(blob: bytes) -> Tuple[np.ndarray, float]:
+    """Returns (array, eps)."""
+    assert blob[:4] == _MAGIC
+    off = 4
+    n, rows, eps = struct.unpack_from("<IIf", blob, off)
+    off += 12
+    (ndim,) = struct.unpack_from("<I", blob, off)
+    off += 4
+    shape = struct.unpack_from(f"<{ndim}I", blob, off)
+    off += 4 * ndim
+    out = np.zeros((rows, _CHUNK), np.float32)
+    for r in range(rows):
+        (cnt,) = struct.unpack_from("<H", blob, off)
+        off += 2
+        pos = 0
+        for _ in range(cnt):
+            ln1, a, v = struct.unpack_from("<Bff", blob, off)
+            off += 9
+            end = pos + ln1  # index of the segment's last point
+            t = np.arange(pos, end + 1)
+            out[r, pos:end + 1] = v + a * (t - end)
+            pos = end + 1
+    return out.reshape(-1)[:n].reshape(shape), eps

@@ -1,0 +1,121 @@
+"""eps-bounded PLA compression of cold KV-cache blocks (paper scenario 2).
+
+Serving keeps a *hot window* of raw KV entries; blocks older than the
+window are compressed channel-wise along time — each (head, channel) is a
+stream, the block length (256 by default) is the paper's segment cap.
+Decode-time attention against cold history reconstructs blocks on the fly
+(or in batched prefetch); the eps guarantee bounds the L-inf perturbation
+of every K/V value, which in turn bounds the attention-score perturbation
+by ``|q|_1 * eps / sqrt(hd)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jax_pla import (PLARecords, angle_segment, decode_records,
+                                to_records)
+
+
+@dataclasses.dataclass(frozen=True)
+class PLAKVConfig:
+    block: int = 256        # tokens per cold block (= paper's cap)
+    k_max: int = 48         # record slots per stream
+    eps: float = 0.02       # absolute tolerance on K/V values
+    coef_dtype: str = "float16"
+    # NOTE: keys must be compressed PRE-RoPE — the rotary phase makes
+    # post-RoPE K oscillate along time (nearly incompressible); decode
+    # re-applies the rotation after reconstruction (cheap: O(T*hd)).
+
+
+class CompressedKVBlock(NamedTuple):
+    k_rec: PLARecords       # streams = B * KH * hd
+    v_rec: PLARecords
+    # Raw escape for streams whose segmentation overflowed the slot
+    # budget (the paper's singleton mechanism at block granularity):
+    # these rows are stored verbatim; byte accounting reflects that.
+    k_raw: jax.Array        # (S, block) in coef dtype
+    v_raw: jax.Array
+    shape: Tuple[int, ...]  # (B, block, KH, hd)
+
+
+def _to_streams(x: jax.Array) -> jax.Array:
+    """(B, T, KH, hd) -> (B*KH*hd, T) time-major streams."""
+    B, T, KH, D = x.shape
+    return x.transpose(0, 2, 3, 1).reshape(B * KH * D, T)
+
+
+def _from_streams(y: jax.Array, shape) -> jax.Array:
+    B, T, KH, D = shape
+    return y.reshape(B, KH, D, T).transpose(0, 3, 1, 2)
+
+
+def compress_kv_block(k: jax.Array, v: jax.Array, cfg: PLAKVConfig
+                      ) -> CompressedKVBlock:
+    """Compress one cold block of (pre-RoPE) K / V: (B, block, KH, hd)."""
+    cd = jnp.dtype(cfg.coef_dtype)
+
+    def comp(x):
+        y = _to_streams(x.astype(jnp.float32))
+        seg = angle_segment(y, cfg.eps, max_run=cfg.block)
+        rec = to_records(seg, cfg.k_max)
+        packed = PLARecords(rec.seg_end.astype(jnp.uint8),
+                            rec.a.astype(cd), rec.v.astype(cd),
+                            rec.count.astype(jnp.uint8), rec.overflow)
+        return packed, y.astype(cd)
+
+    k_rec, k_raw = comp(k)
+    v_rec, v_raw = comp(v)
+    return CompressedKVBlock(k_rec, v_rec, k_raw, v_raw, tuple(k.shape))
+
+
+def decompress_kv_block(blk: CompressedKVBlock, cfg: PLAKVConfig
+                        ) -> Tuple[jax.Array, jax.Array]:
+    def dec(rec, raw):
+        rec32 = PLARecords(rec.seg_end.astype(jnp.int32),
+                           rec.a.astype(jnp.float32),
+                           rec.v.astype(jnp.float32),
+                           rec.count.astype(jnp.int32), rec.overflow)
+        y = decode_records(rec32, blk.shape[1])
+        # Overflow rows fall back to their raw copy (eps holds everywhere).
+        y = jnp.where(rec.overflow[:, None], raw.astype(jnp.float32), y)
+        return _from_streams(y, blk.shape)
+
+    return dec(blk.k_rec, blk.k_raw), dec(blk.v_rec, blk.v_raw)
+
+
+def block_nbytes(rec: PLARecords, block: int, cfg: PLAKVConfig) -> int:
+    """Storage bytes: variable-length SingleStream records (paper §5.2.2)
+    for fitting rows — storage is ragged, unlike collectives — plus raw
+    bytes (1 counter + block values) for overflow rows."""
+    from repro.core.jax_pla import singlestream_nbytes
+    vb = jnp.dtype(cfg.coef_dtype).itemsize
+    rec32 = PLARecords(rec.seg_end.astype(jnp.int32),
+                       rec.a.astype(jnp.float32),
+                       rec.v.astype(jnp.float32),
+                       rec.count.astype(jnp.int32), rec.overflow)
+    per_row = singlestream_nbytes(rec32, block, value_bytes=vb)
+    raw_row = 1 + block * vb
+    return int(jnp.where(rec.overflow, raw_row, per_row).sum())
+
+
+def kv_compression_stats(k: jax.Array, v: jax.Array, cfg: PLAKVConfig):
+    """Bytes + error report for one block (benchmarks/examples)."""
+    blk = compress_kv_block(k, v, cfg)
+    kd, vd = decompress_kv_block(blk, cfg)
+    raw = (k.size + v.size) * jnp.dtype(jnp.bfloat16).itemsize
+    comp = block_nbytes(blk.k_rec, cfg.block, cfg) + \
+        block_nbytes(blk.v_rec, cfg.block, cfg)
+    return {
+        "raw_bytes": int(raw),
+        "compressed_bytes": int(comp),
+        "ratio": float(comp / raw),
+        "k_max_err": float(jnp.abs(kd - k.astype(jnp.float32)).max()),
+        "v_max_err": float(jnp.abs(vd - v.astype(jnp.float32)).max()),
+        "k_overflow_rows": int(blk.k_rec.overflow.sum()),
+        "v_overflow_rows": int(blk.v_rec.overflow.sum()),
+    }

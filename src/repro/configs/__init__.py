@@ -1,0 +1,41 @@
+"""Architecture registry: 10 assigned archs + the paper's own config.
+
+Each ``<id>.py`` exports ``FULL`` (the exact published config) and
+``SMOKE`` (a reduced same-family config for CPU tests).  Shapes and
+skip rules live in :mod:`repro.configs.shapes`.
+"""
+
+from importlib import import_module
+from typing import Dict
+
+from repro.models.base import ModelConfig
+
+ARCHS = (
+    "yi_6b", "gemma_2b", "yi_9b", "granite_3_2b", "recurrentgemma_2b",
+    "mamba2_780m", "llama4_maverick", "olmoe_1b_7b", "whisper_base",
+    "qwen2_vl_7b",
+)
+
+# canonical --arch ids (dashes) -> module names
+ALIASES = {
+    "yi-6b": "yi_6b",
+    "gemma-2b": "gemma_2b",
+    "yi-9b": "yi_9b",
+    "granite-3-2b": "granite_3_2b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "mamba2-780m": "mamba2_780m",
+    "llama4-maverick-400b-a17b": "llama4_maverick",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "whisper-base": "whisper_base",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+}
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    mod_name = ALIASES.get(name, name.replace("-", "_"))
+    mod = import_module(f"repro.configs.{mod_name}")
+    return mod.SMOKE if smoke else mod.FULL
+
+
+def all_configs(smoke: bool = False) -> Dict[str, ModelConfig]:
+    return {a: get_config(a, smoke) for a in ARCHS}

@@ -1,0 +1,15 @@
+"""Gemma-2B — GeGLU, head_dim=256, MQA [arXiv:2403.08295; hf]."""
+
+from repro.models.base import ModelConfig
+
+FULL = ModelConfig(
+    name="gemma-2b", family="dense",
+    n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1, head_dim=256,
+    d_ff=16384, vocab=256000, act="gelu", tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="gemma-2b-smoke", family="dense",
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=1, head_dim=32,
+    d_ff=256, vocab=512, act="gelu", tie_embeddings=True,
+)

@@ -1,0 +1,16 @@
+"""Granite-3.0-2B — deep-narrow dense GQA
+[hf:ibm-granite/granite-3.0-2b-base]."""
+
+from repro.models.base import ModelConfig
+
+FULL = ModelConfig(
+    name="granite-3-2b", family="dense",
+    n_layers=40, d_model=2048, n_heads=32, n_kv_heads=8, head_dim=64,
+    d_ff=8192, vocab=49155, act="silu", tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="granite-3-2b-smoke", family="dense",
+    n_layers=3, d_model=128, n_heads=8, n_kv_heads=2, head_dim=16,
+    d_ff=256, vocab=512, act="silu", tie_embeddings=True,
+)

@@ -1,0 +1,25 @@
+"""Llama-4-Maverick-400B-A17B — interleaved MoE, 128 experts top-1
+[hf:meta-llama/Llama-4-*; unverified].
+
+Per the HF config family: every 2nd layer is MoE (128 routed experts,
+top-1, expert d_ff 8192) with a shared expert; the dense layers use
+d_ff_mlp = 16384.  ~400B total / ~17B active.  bf16 moments + f32 master
+recommended on a single 256-chip pod (see configs note in DESIGN.md).
+"""
+
+from repro.models.base import ModelConfig
+
+FULL = ModelConfig(
+    name="llama4-maverick-400b-a17b", family="moe",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+    d_ff=16384, d_ff_expert=8192, vocab=202048, act="silu",
+    n_experts=128, top_k=1, moe_interleave=2, shared_expert=True,
+    capacity_factor=1.25,
+)
+
+SMOKE = ModelConfig(
+    name="llama4-maverick-smoke", family="moe",
+    n_layers=4, d_model=128, n_heads=8, n_kv_heads=2, head_dim=16,
+    d_ff=256, d_ff_expert=128, vocab=512, act="silu",
+    n_experts=8, top_k=1, moe_interleave=2, shared_expert=True,
+)

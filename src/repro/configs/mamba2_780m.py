@@ -1,0 +1,25 @@
+"""Mamba2-780m — SSD (state-space duality), attention-free
+[arXiv:2405.21060].
+
+d_inner = 2 * 1536 = 3072; 48 heads of dim 64; state N = 128; the
+paper's-technique note: no KV cache exists, so PLA KV compression is
+inapplicable (constant-size state) — recorded in DESIGN.md.
+"""
+
+from repro.models.base import ModelConfig
+
+FULL = ModelConfig(
+    name="mamba2-780m", family="ssm",
+    n_layers=48, d_model=1536, vocab=50280,
+    n_heads=1, n_kv_heads=1, d_ff=0,
+    ssm_state=128, ssm_head_dim=64, ssm_expand=2, ssm_chunk=256,
+    conv_width=4, tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="mamba2-780m-smoke", family="ssm",
+    n_layers=3, d_model=128, vocab=512,
+    n_heads=1, n_kv_heads=1, d_ff=0,
+    ssm_state=16, ssm_head_dim=16, ssm_expand=2, ssm_chunk=32,
+    conv_width=4, tie_embeddings=True,
+)

@@ -1,0 +1,18 @@
+"""OLMoE-1B-7B — 64 experts, top-8, every layer MoE [arXiv:2409.02060; hf]."""
+
+from repro.models.base import ModelConfig
+
+FULL = ModelConfig(
+    name="olmoe-1b-7b", family="moe",
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128,
+    d_ff=1024, d_ff_expert=1024, vocab=50304, act="silu",
+    n_experts=64, top_k=8, moe_interleave=1, shared_expert=False,
+    capacity_factor=1.25,
+)
+
+SMOKE = ModelConfig(
+    name="olmoe-smoke", family="moe",
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, head_dim=32,
+    d_ff=128, d_ff_expert=128, vocab=512, act="silu",
+    n_experts=8, top_k=4, moe_interleave=1,
+)

@@ -1,0 +1,21 @@
+"""Qwen2-VL-7B — M-RoPE decoder backbone [arXiv:2409.12191; hf].
+
+Vision tower is a STUB per brief: input_specs feeds precomputed patch
+embeddings added at image-token positions plus the (t, h, w) M-RoPE
+position ids.  mrope_sections (16, 24, 24) over head_dim/2 = 64.
+"""
+
+from repro.models.base import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen2-vl-7b", family="vlm",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4, head_dim=128,
+    d_ff=18944, vocab=152064, act="silu", rope_theta=1_000_000.0,
+    mrope_sections=(16, 24, 24),
+)
+
+SMOKE = ModelConfig(
+    name="qwen2-vl-smoke", family="vlm",
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+    d_ff=256, vocab=512, act="silu", mrope_sections=(4, 6, 6),
+)

@@ -1,0 +1,24 @@
+"""RecurrentGemma-2B (Griffin) — RG-LRU + local attention, 1 attn : 2 rec
+[arXiv:2402.19427; hf].
+
+26 layers = 8 x (rec, rec, attn) superblocks + 2 trailing recurrent.
+Local attention window 2048; MQA (kv=1), head_dim 256.
+PLA KV compression applies only to the (bounded) local-attention windows
+(DESIGN.md §Arch-applicability).
+"""
+
+from repro.models.base import ModelConfig
+
+FULL = ModelConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    n_layers=26, d_model=2560, n_heads=10, n_kv_heads=1, head_dim=256,
+    d_ff=7680, vocab=256000, act="gelu", attn_window=2048,
+    hybrid_period=3, rnn_width=2560, conv_width=4, tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="recurrentgemma-2b-smoke", family="hybrid",
+    n_layers=5, d_model=128, n_heads=4, n_kv_heads=1, head_dim=32,
+    d_ff=256, vocab=512, act="gelu", attn_window=32,
+    hybrid_period=3, rnn_width=128, conv_width=4, tie_embeddings=True,
+)

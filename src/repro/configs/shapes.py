@@ -1,0 +1,54 @@
+"""Assigned input shapes x applicability rules (brief: 40 cells).
+
+=============  ========== ============ =================
+shape          seq_len     global_batch  lowers
+=============  ========== ============ =================
+train_4k       4,096       256          train_step
+prefill_32k    32,768      32           prefill (train fwd machinery)
+decode_32k     32,768      128          serve_step (1 token, 32k cache)
+long_500k      524,288     1            serve_step (1 token, 500k context)
+=============  ========== ============ =================
+
+``long_500k`` needs sub-quadratic attention: it runs only for the SSM
+(mamba2) and hybrid (recurrentgemma, local-window attention) families; the
+8 pure full-attention archs skip it (recorded, per the brief).  Whisper is
+encoder-decoder (it has a decoder) so decode shapes run against the
+decoder with the stub-encoded 1500-frame source.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+from repro.models.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """(runs?, reason-if-skipped)."""
+    if shape == "long_500k" and cfg.family not in SUBQUADRATIC_FAMILIES:
+        return False, ("full quadratic attention at 524k tokens — skipped "
+                       "per brief (sub-quadratic archs only)")
+    return True, ""
+
+
+def cells(cfg: ModelConfig) -> List[str]:
+    return [s for s in SHAPES if applicable(cfg, s)[0]]

@@ -1,0 +1,19 @@
+"""Whisper-base — encoder-decoder audio backbone [arXiv:2212.04356].
+
+Conv/mel frontend is a STUB per brief: input_specs feeds precomputed
+(B, 1500, 512) frame embeddings.  6 encoder + 6 decoder layers, MHA.
+"""
+
+from repro.models.base import ModelConfig
+
+FULL = ModelConfig(
+    name="whisper-base", family="encdec",
+    n_layers=6, n_enc_layers=6, d_model=512, n_heads=8, n_kv_heads=8,
+    head_dim=64, d_ff=2048, vocab=51865, act="gelu", enc_seq=1500,
+)
+
+SMOKE = ModelConfig(
+    name="whisper-base-smoke", family="encdec",
+    n_layers=2, n_enc_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+    head_dim=32, d_ff=256, vocab=512, act="gelu", enc_seq=64,
+)

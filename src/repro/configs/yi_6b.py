@@ -1,0 +1,15 @@
+"""Yi-6B — llama-arch dense GQA [arXiv:2403.04652; hf]."""
+
+from repro.models.base import ModelConfig
+
+FULL = ModelConfig(
+    name="yi-6b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=4, head_dim=128,
+    d_ff=11008, vocab=64000, act="silu", rope_theta=5_000_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="yi-6b-smoke", family="dense",
+    n_layers=2, d_model=128, n_heads=8, n_kv_heads=2, head_dim=16,
+    d_ff=344, vocab=512, act="silu",
+)

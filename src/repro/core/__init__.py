@@ -1,0 +1,27 @@
+"""repro.core — the paper's contribution: streaming PLA methods, protocols,
+metrics and their exact sequential reference implementations.
+
+JAX-vectorized forms live in :mod:`repro.core.jax_pla`; TPU Pallas kernels
+in :mod:`repro.kernels`.
+"""
+
+from .types import (CompressionRecord, DisjointKnot, JointKnot, Line,
+                    MethodOutput, Segment)
+from .methods import (METHODS, run_angle, run_continuous, run_disjoint,
+                      run_linear, run_mixed, run_swing)
+from .protocols import (PROTOCOL_CAPS, PROTOCOLS, protocol_implicit,
+                        protocol_singlestream, protocol_singlestreamv,
+                        protocol_twostreams)
+from .metrics import PointMetrics, overall_compression, point_metrics
+from .evaluate import COMBINATIONS, EvalResult, evaluate, evaluate_all
+from .adaptive import AdaptiveEps, compare_fixed_vs_adaptive
+
+__all__ = [
+    "CompressionRecord", "DisjointKnot", "JointKnot", "Line", "MethodOutput",
+    "Segment", "METHODS", "run_angle", "run_continuous", "run_disjoint",
+    "run_linear", "run_mixed", "run_swing", "PROTOCOL_CAPS", "PROTOCOLS",
+    "protocol_implicit", "protocol_singlestream", "protocol_singlestreamv",
+    "protocol_twostreams", "PointMetrics", "overall_compression",
+    "point_metrics", "COMBINATIONS", "EvalResult", "evaluate", "evaluate_all",
+    "AdaptiveEps", "compare_fixed_vs_adaptive",
+]

@@ -1,0 +1,88 @@
+"""End-to-end evaluation of (PLA method x protocol) combinations — the
+pipeline behind the paper's Figures 12-16 and Table 3.
+
+The 13 combinations of Table 2:
+
+=====  ============  =============
+Key    Method        Protocol
+=====  ============  =============
+A1-A3  angle         twostreams / singlestream / singlestreamv
+C1-C3  disjoint      twostreams / singlestream / singlestreamv
+L1-L3  linear        twostreams / singlestream / singlestreamv
+Sw     swing         implicit
+Sl     disjoint      implicit   (SlideFilter == optimal disjoint output)
+C      continuous    implicit
+M      mixed         implicit
+=====  ============  =============
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from .methods import METHODS
+from .metrics import PointMetrics, overall_compression, point_metrics
+from .protocols import PROTOCOL_CAPS, PROTOCOLS
+from .types import CompressionRecord
+
+# Table 2 of the paper.
+COMBINATIONS: Dict[str, Tuple[str, str]] = {
+    "A1": ("angle", "twostreams"),
+    "A2": ("angle", "singlestream"),
+    "A3": ("angle", "singlestreamv"),
+    "C1": ("disjoint", "twostreams"),
+    "C2": ("disjoint", "singlestream"),
+    "C3": ("disjoint", "singlestreamv"),
+    "L1": ("linear", "twostreams"),
+    "L2": ("linear", "singlestream"),
+    "L3": ("linear", "singlestreamv"),
+    "Sw": ("swing", "implicit"),
+    "Sl": ("disjoint", "implicit"),
+    "C": ("continuous", "implicit"),
+    "M": ("mixed", "implicit"),
+}
+
+
+@dataclasses.dataclass
+class EvalResult:
+    key: str
+    method: str
+    protocol: str
+    eps: float
+    n_points: int
+    metrics: PointMetrics
+    overall_ratio: float          # total compressed bytes / raw y bytes
+    n_records: int
+
+    def summary(self) -> Dict:
+        s = self.metrics.summary()
+        s["overall_ratio"] = self.overall_ratio
+        return s
+
+
+def run_combination(key: str, ts, ys, eps: float) -> EvalResult:
+    method_name, proto_name = COMBINATIONS[key]
+    return evaluate(method_name, proto_name, ts, ys, eps, key=key)
+
+
+def evaluate(method_name: str, proto_name: str, ts, ys, eps: float,
+             key: str | None = None) -> EvalResult:
+    cap = PROTOCOL_CAPS[proto_name]
+    out = METHODS[method_name](ts, ys, eps, max_run=cap) \
+        if method_name in ("angle", "disjoint", "linear") \
+        else METHODS[method_name](ts, ys, eps)
+    records: List[CompressionRecord] = PROTOCOLS[proto_name](out, ts, ys)
+    pm = point_metrics(records, ts, ys, eps=eps)
+    return EvalResult(
+        key=key or f"{method_name}/{proto_name}",
+        method=method_name, protocol=proto_name, eps=eps, n_points=len(ts),
+        metrics=pm, overall_ratio=overall_compression(records, len(ts)),
+        n_records=len(records))
+
+
+def evaluate_all(ts, ys, eps: float,
+                 keys: Sequence[str] = tuple(COMBINATIONS)) -> Dict[str, EvalResult]:
+    return {k: run_combination(k, ts, ys, eps) for k in keys}

@@ -1,0 +1,282 @@
+"""Geometric machinery shared by the PLA methods.
+
+Every method in the paper reduces to maintaining, for the *current* run of
+points, the set of lines that intersect a sequence of vertical *constraint
+intervals* ``(t, lo, hi)`` (the error segments ``[y-eps, y+eps]``, plus —
+for the continuous method — a *gate* interval inherited from the previous
+segment).  Two data structures cover all cases:
+
+- :class:`SlopeWedge` — lines through a **fixed origin point**: the O(1)
+  per-point "angle/swing" structure of SwingFilter / the Angle method.
+- :class:`HullFitter` — lines through a sequence of intervals with **free
+  origin**: the convex-hull structure of the optimal disjoint method
+  (O'Rourke / SlideFilter / Xie et al.), also usable with a custom first
+  interval as the gate of the continuous method, and as the validity
+  checker of the best-fit (Linear) method.
+
+Both expose the same ``can_add`` / ``add`` / line-selection interface.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Tuple
+
+from .types import Line
+
+_EPS_NUM = 1e-12  # numerical slack for feasibility checks
+
+
+# ---------------------------------------------------------------------------
+# Convex hull chains
+# ---------------------------------------------------------------------------
+
+def _cross(o: Tuple[float, float], a: Tuple[float, float],
+           b: Tuple[float, float]) -> float:
+    """Cross product (a-o) x (b-o); >0 = counter-clockwise turn."""
+    return (a[0] - o[0]) * (b[1] - o[1]) - (a[1] - o[1]) * (b[0] - o[0])
+
+
+class _HullChain:
+    """Incremental convex-hull chain over points with increasing t.
+
+    ``upper=True`` keeps the upper hull (the cap seen from above, i.e. the
+    binding envelope for "line must pass above these points"); ``False``
+    keeps the lower hull.
+    """
+
+    def __init__(self, upper: bool):
+        self.upper = upper
+        self.pts: List[Tuple[float, float]] = []
+
+    def add(self, p: Tuple[float, float]) -> None:
+        pts = self.pts
+        if self.upper:
+            # pop while the middle point is below/on the chord (cw turns kept)
+            while len(pts) >= 2 and _cross(pts[-2], pts[-1], p) >= 0:
+                pts.pop()
+        else:
+            while len(pts) >= 2 and _cross(pts[-2], pts[-1], p) <= 0:
+                pts.pop()
+        pts.append(p)
+
+    def __iter__(self):
+        return iter(self.pts)
+
+    def __len__(self) -> int:
+        return len(self.pts)
+
+    def line_clears(self, line: Line, tol: float = _EPS_NUM) -> bool:
+        """True iff the line is on the correct side of every hull vertex."""
+        if self.upper:  # line must pass above (>=) all points of the cap
+            return all(line(t) >= y - tol for (t, y) in self.pts)
+        return all(line(t) <= y + tol for (t, y) in self.pts)
+
+
+# ---------------------------------------------------------------------------
+# O(1) wedge through a fixed origin (Swing / Angle)
+# ---------------------------------------------------------------------------
+
+class SlopeWedge:
+    """Feasible-slope interval for lines through a fixed origin point."""
+
+    def __init__(self, origin_t: float, origin_y: float):
+        self.ot = origin_t
+        self.oy = origin_y
+        self.slo = -math.inf
+        self.shi = math.inf
+
+    def slope_bounds_for(self, t: float, lo: float, hi: float) -> Tuple[float, float]:
+        """Slope interval so that ``origin + a*(t-ot)`` lands in [lo, hi].
+
+        Handles constraint points on either side of the origin (``dt`` of
+        any sign) — the bounds swap when extrapolating backwards.
+        """
+        dt = t - self.ot
+        if dt == 0.0:
+            # Constraint at the origin's own t: no slope restriction (the
+            # origin must already lie inside [lo, hi] by construction).
+            return (-math.inf, math.inf)
+        b1 = (lo - self.oy) / dt
+        b2 = (hi - self.oy) / dt
+        return (b1, b2) if b1 <= b2 else (b2, b1)
+
+    def can_add(self, t: float, lo: float, hi: float) -> bool:
+        if t == self.ot:
+            return lo - _EPS_NUM <= self.oy <= hi + _EPS_NUM
+        nlo, nhi = self.slope_bounds_for(t, lo, hi)
+        return max(self.slo, nlo) <= min(self.shi, nhi) + _EPS_NUM
+
+    def add(self, t: float, lo: float, hi: float) -> None:
+        nlo, nhi = self.slope_bounds_for(t, lo, hi)
+        self.slo = max(self.slo, nlo)
+        self.shi = min(self.shi, nhi)
+
+    @property
+    def feasible(self) -> bool:
+        return self.slo <= self.shi + _EPS_NUM
+
+    def mid_line(self) -> Line:
+        if math.isinf(self.slo) and math.isinf(self.shi):
+            a = 0.0
+        elif math.isinf(self.slo):
+            a = self.shi
+        elif math.isinf(self.shi):
+            a = self.slo
+        else:
+            a = 0.5 * (self.slo + self.shi)
+        return Line(a, self.oy - a * self.ot)
+
+    def line_with_slope(self, a: float) -> Line:
+        return Line(a, self.oy - a * self.ot)
+
+    def value_range_at(self, tau: float) -> Tuple[float, float]:
+        """Range of feasible line values at ``tau`` (any side of origin)."""
+        dt = tau - self.ot
+        v1 = self.oy + self.slo * dt
+        v2 = self.oy + self.shi * dt
+        return (min(v1, v2), max(v1, v2))
+
+
+# ---------------------------------------------------------------------------
+# Free-origin fitter with convex hulls (optimal disjoint / continuous gate)
+# ---------------------------------------------------------------------------
+
+class HullFitter:
+    """Maintains the set of lines intersecting all added intervals.
+
+    Exact incremental algorithm (O'Rourke 1981 / Xie et al. 2014 style):
+    keeps the extreme-slope feasible lines ``lmin`` / ``lmax`` and the two
+    binding hull envelopes:
+
+    - ``env_lo``: *upper* hull of interval lower endpoints ``(t, lo)`` —
+      feasible lines pass on/above it;
+    - ``env_hi``: *lower* hull of interval upper endpoints ``(t, hi)`` —
+      feasible lines pass on/below it.
+
+    The reference implementation recomputes pivot searches by scanning the
+    (small, pruned-by-convexity) hull chains; amortized behaviour matches
+    the literature and exactness is what matters for the oracle role.
+    """
+
+    def __init__(self) -> None:
+        self.env_lo = _HullChain(upper=True)
+        self.env_hi = _HullChain(upper=False)
+        self.constraints: List[Tuple[float, float, float]] = []
+        self.lmin: Optional[Line] = None
+        self.lmax: Optional[Line] = None
+
+    # -- queries ----------------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return len(self.constraints)
+
+    def can_add(self, t: float, lo: float, hi: float) -> bool:
+        if self.n <= 1:
+            return True
+        assert self.lmax is not None and self.lmin is not None
+        return (self.lmax(t) >= lo - _EPS_NUM) and (self.lmin(t) <= hi + _EPS_NUM)
+
+    def value_range_at(self, tau: float) -> Tuple[float, float]:
+        """Feasible-value range at ``tau`` outside the constraint t-span.
+
+        For ``tau`` >= last constraint t the bounds are (lmin, lmax)(tau);
+        for ``tau`` <= first constraint t they swap.  With fewer than two
+        constraints the range degenerates appropriately.
+        """
+        if self.n == 0:
+            return (-math.inf, math.inf)
+        if self.n == 1:
+            t, lo, hi = self.constraints[0]
+            if tau == t:
+                return (lo, hi)
+            return (-math.inf, math.inf)
+        assert self.lmin is not None and self.lmax is not None
+        v1, v2 = self.lmin(tau), self.lmax(tau)
+        return (min(v1, v2), max(v1, v2))
+
+    # -- updates ----------------------------------------------------------
+
+    def add(self, t: float, lo: float, hi: float) -> None:
+        """Add interval; caller must have verified :meth:`can_add`."""
+        if self.n == 0:
+            self.constraints.append((t, lo, hi))
+            self.env_lo.add((t, lo))
+            self.env_hi.add((t, hi))
+            return
+        if self.n == 1:
+            t0, lo0, hi0 = self.constraints[0]
+            self.lmax = Line.through((t0, lo0), (t, hi))
+            self.lmin = Line.through((t0, hi0), (t, lo))
+            self.constraints.append((t, lo, hi))
+            self.env_lo.add((t, lo))
+            self.env_hi.add((t, hi))
+            return
+
+        assert self.lmax is not None and self.lmin is not None
+        # Tighten the max-slope line: must not exceed the new upper endpoint.
+        if self.lmax(t) > hi:
+            best_a = math.inf
+            pivot = None
+            for (qt, qy) in self.env_lo:
+                if qt >= t:
+                    continue
+                a = (hi - qy) / (t - qt)
+                if a < best_a:
+                    best_a, pivot = a, (qt, qy)
+            if pivot is not None:
+                self.lmax = Line(best_a, hi - best_a * t)
+        # Tighten the min-slope line: must not undershoot the new lower one.
+        if self.lmin(t) < lo:
+            best_a = -math.inf
+            pivot = None
+            for (qt, qy) in self.env_hi:
+                if qt >= t:
+                    continue
+                a = (lo - qy) / (t - qt)
+                if a > best_a:
+                    best_a, pivot = a, (qt, qy)
+            if pivot is not None:
+                self.lmin = Line(best_a, lo - best_a * t)
+
+        self.constraints.append((t, lo, hi))
+        self.env_lo.add((t, lo))
+        self.env_hi.add((t, hi))
+
+    # -- line selection ----------------------------------------------------
+
+    def _single_constraint_line(self) -> Line:
+        t, lo, hi = self.constraints[0]
+        return Line(0.0, 0.5 * (lo + hi))
+
+    def mid_line(self) -> Line:
+        """'Average of the extreme slope lines' (paper, footnote 2).
+
+        Line through the intersection point of lmin/lmax with the average
+        slope; verified against all buffered constraints with fallback to
+        whichever extreme line is feasible (guards float corner cases).
+        """
+        if self.n == 0:
+            return Line(0.0, 0.0)
+        if self.n == 1:
+            return self._single_constraint_line()
+        assert self.lmin is not None and self.lmax is not None
+        a1, b1 = self.lmin.a, self.lmin.b
+        a2, b2 = self.lmax.a, self.lmax.b
+        # Parameter-space midpoint == mid slope through the extreme lines'
+        # intersection (the feasible set is convex in (a, b)), but without
+        # the cancellation-prone division.
+        cand = Line(0.5 * (a1 + a2), 0.5 * (b1 + b2))
+        for line in (cand, self.lmax, self.lmin):
+            if self._line_ok(line):
+                return line
+        return cand  # unreachable in practice; keep deterministic
+
+    def _line_ok(self, line: Line, tol: float = 1e-9) -> bool:
+        for (t, lo, hi) in self.constraints:
+            v = line(t)
+            span = max(1.0, abs(lo), abs(hi))
+            if v < lo - tol * span or v > hi + tol * span:
+                return False
+        return True

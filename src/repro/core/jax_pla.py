@@ -1,0 +1,524 @@
+"""Vectorized (batched) streaming PLA in pure JAX.
+
+This is the TPU-native adaptation of the paper's sequential algorithms
+(DESIGN.md §3): the parallel axis is *streams* (S independent rows), time is
+walked by ``jax.lax.scan``, and the dynamic convex hulls are replaced by
+exact bounded-window vector reductions (the paper's own protocols cap
+segments at 256 points, so the current segment always fits a window).
+
+Three segmenters, mirroring the methods the paper pairs with its streaming
+protocols:
+
+- :func:`angle_segment`    — O(1)-state greedy (Angle, §3.1)
+- :func:`disjoint_segment` — optimal greedy (ConvexHull, §3.2) with the
+  hull replaced by an exact masked argmin/argmax over the run window
+- :func:`linear_segment`   — best-fit line (Linear, §3.5) with window
+  revalidation instead of hull checks
+
+All take ``y: (S, T)`` on the regular grid ``t = 0..T-1`` (the framework's
+streams — gradient rows, KV-cache channels, telemetry — are index-stamped)
+and return dense, shape-static output:
+
+- ``breaks: (S, T) bool`` — True where a segment *ends* (last covered t)
+- ``a, v:   (S, T) f32``  — the segment's line as (slope, value at the
+  break position).  The *anchored* form ``y(t) = v + a*(t - t_break)``
+  keeps float32 exact for streams as long as 2^24 (global-intercept form
+  ``a*t + b`` loses ~|a|*t*2^-24 to cancellation — fatal at T=500k).
+
+:func:`propagate_lines` turns that into per-point reconstruction;
+:func:`to_records` / :func:`decode_records` give the fixed-slot record form
+used by the compressed collectives, with SingleStream byte accounting.
+All internal line state is likewise anchored at the current run's start, so
+t enters only through differences bounded by the run cap.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "SegmentOutput", "angle_segment", "disjoint_segment", "linear_segment",
+    "swing_segment",
+    "propagate_lines", "to_records", "decode_records",
+    "singlestream_nbytes", "PLARecords",
+]
+
+_BIG = jnp.float32(3.4e38)
+
+
+class SegmentOutput(NamedTuple):
+    breaks: jax.Array  # (S, T) bool — segment ends here
+    a: jax.Array       # (S, T) — slope, valid at break positions
+    v: jax.Array       # (S, T) — line value AT the break position
+
+
+# ---------------------------------------------------------------------------
+# Angle: O(1) state per stream
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("max_run",))
+def angle_segment(y: jax.Array, eps: jax.Array, max_run: int = 256
+                  ) -> SegmentOutput:
+    """Batched Angle method (greedy wedge from the extreme-line crossing).
+
+    ``eps`` may be scalar or per-row ``(S,)``.
+    """
+    S, T = y.shape
+    dtype = y.dtype
+    eps = jnp.broadcast_to(jnp.asarray(eps, dtype), (S,))
+
+    def step(state, inp):
+        (phase, p0y, od, oy, slo, shi, run_len) = state
+        # ``od`` = origin position relative to the *current* step t:
+        # origin_t = t - od (od grows by 1 each step).
+        t, yt = inp
+        t = jnp.broadcast_to(t, (S,)).astype(dtype)
+
+        # Phase 0 -> 1: origin from p0 = (t-1, p0y) and this error segment,
+        # all in origin-relative coordinates (p0 at offset 0, t at +1).
+        amax = (yt + eps) - (p0y - eps)
+        amin = (yt - eps) - (p0y + eps)
+        # Extreme lines in the relative frame: max-slope through (0, p0y-e)
+        # and (1, y+e); min-slope through (0, p0y+e) and (1, y-e).  Their
+        # crossing: x = 2*eps / (amax - amin) with value amax*x + p0y - eps.
+        da = amax - amin
+        das = jnp.where(jnp.abs(da) < 1e-30, 1.0, da)
+        ox_rel = jnp.where(jnp.abs(da) < 1e-30, 0.5, 2.0 * eps / das)
+        oy_new = amax * ox_rel + (p0y - eps)
+        od_new0 = 1.0 - ox_rel   # distance from origin to current t
+
+        # Phase 1: wedge update (origin at t - od).
+        dt = od
+        dts = jnp.where(dt == 0, 1.0, dt)
+        n1 = (yt - eps - oy) / dts
+        n2 = (yt + eps - oy) / dts
+        nlo = jnp.minimum(n1, n2)
+        nhi = jnp.maximum(n1, n2)
+        t_slo = jnp.maximum(slo, nlo)
+        t_shi = jnp.minimum(shi, nhi)
+        feasible = t_slo <= t_shi
+        cap_hit = run_len >= max_run
+        brk = (phase == 1) & (~feasible | cap_hit)
+
+        # Finalized segment line, anchored at the break position (t-1).
+        a_out = jnp.where(phase == 1, 0.5 * (slo + shi), 0.0)
+        v_out = jnp.where(phase == 1, oy + a_out * (od - 1.0), p0y)
+
+        new_phase = jnp.where(brk, 0, 1).astype(jnp.int32)
+        new_p0y = jnp.where(brk, yt, p0y)
+        go0 = (phase == 0) & ~brk
+        new_od = jnp.where(go0, od_new0 + 1.0, jnp.where(brk, 0.0, od + 1.0))
+        new_oy = jnp.where(go0, oy_new, oy)
+        new_slo = jnp.where(go0, amin, jnp.where(brk, -_BIG, t_slo))
+        new_shi = jnp.where(go0, amax, jnp.where(brk, _BIG, t_shi))
+        new_run_len = jnp.where(brk, 1, run_len + 1)
+        new_state = (new_phase, new_p0y, new_od, new_oy,
+                     new_slo, new_shi, new_run_len)
+        return new_state, (brk, a_out, v_out)
+
+    init = (
+        jnp.zeros((S,), jnp.int32),          # phase
+        y[:, 0],                             # p0y
+        jnp.zeros((S,), dtype),              # od (origin offset)
+        jnp.zeros((S,), dtype),              # oy
+        jnp.full((S,), -_BIG, dtype), jnp.full((S,), _BIG, dtype),
+        jnp.ones((S,), jnp.int32),           # run_len
+    )
+    ts = jnp.arange(1, T, dtype=dtype)
+    state, (brk_seq, a_seq, v_seq) = jax.lax.scan(step, init, (ts, y[:, 1:].T))
+    breaks = jnp.zeros((S, T), bool).at[:, :-1].set(brk_seq.T)
+    a = jnp.zeros((S, T), dtype).at[:, :-1].set(a_seq.T)
+    v = jnp.zeros((S, T), dtype).at[:, :-1].set(v_seq.T)
+    # Flush trailing run at T-1.  ``od`` is pre-incremented at commit time
+    # (it holds the origin distance for the *next* step), so the distance
+    # from the origin to T-1 is od - 1.
+    (phase, p0y, od, oy, slo, shi, _) = state
+    a_f = jnp.where(phase == 0, 0.0, 0.5 * (slo + shi))
+    v_f = jnp.where(phase == 0, p0y, oy + a_f * (od - 1.0))
+    breaks = breaks.at[:, T - 1].set(True)
+    a = a.at[:, T - 1].set(a_f)
+    v = v.at[:, T - 1].set(v_f)
+    return SegmentOutput(breaks, a, v)
+
+
+# ---------------------------------------------------------------------------
+# SwingFilter: O(1) state, joint knots (origin = previous segment's end)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("max_run",))
+def swing_segment(y: jax.Array, eps: jax.Array, max_run: int = 256
+                  ) -> SegmentOutput:
+    """Batched SwingFilter (paper §3.1, Elmeleegy et al.).
+
+    The wedge origin is the chosen end point of the previous segment (the
+    joint knot), so consecutive segment lines are connected.  Output uses
+    the same (breaks, a, v) form — reconstruction is identical; the joint
+    property shows as v[k] continuity across breaks.
+    """
+    S, T = y.shape
+    dtype = y.dtype
+    eps = jnp.broadcast_to(jnp.asarray(eps, dtype), (S,))
+
+    def step(state, inp):
+        (od, oy, slo, shi, run_len) = state
+        # origin sits od steps behind the current t
+        t, yt = inp
+        dts = jnp.where(od == 0, 1.0, od)
+        n1 = (yt - eps - oy) / dts
+        n2 = (yt + eps - oy) / dts
+        nlo = jnp.minimum(n1, n2)
+        nhi = jnp.maximum(n1, n2)
+        t_slo = jnp.maximum(slo, nlo)
+        t_shi = jnp.minimum(shi, nhi)
+        feasible = t_slo <= t_shi
+        cap_hit = run_len >= max_run
+        brk = ~feasible | cap_hit
+
+        a_out = 0.5 * (slo + shi)
+        v_out = oy + a_out * (od - 1.0)   # knot at t-1 (on the old line)
+
+        # on break: new origin = the knot (t-1, v_out); re-add this point.
+        b_lo = (yt - eps - v_out)          # dt == 1 from the new origin
+        b_hi = (yt + eps - v_out)
+        new_od = jnp.where(brk, 1.0, od) + 1.0
+        new_oy = jnp.where(brk, v_out, oy)
+        new_slo = jnp.where(brk, jnp.minimum(b_lo, b_hi), t_slo)
+        new_shi = jnp.where(brk, jnp.maximum(b_lo, b_hi), t_shi)
+        new_run_len = jnp.where(brk, 1, run_len + 1)
+        return (new_od, new_oy, new_slo, new_shi, new_run_len), \
+            (brk, a_out, v_out)
+
+    init = (jnp.ones((S,), dtype),            # od: origin at t0, next t=1
+            y[:, 0],                          # oy = y0 (exact first origin)
+            jnp.full((S,), -_BIG, dtype), jnp.full((S,), _BIG, dtype),
+            jnp.ones((S,), jnp.int32))
+    ts = jnp.arange(1, T, dtype=dtype)
+    state, (brk_seq, a_seq, v_seq) = jax.lax.scan(step, init,
+                                                  (ts, y[:, 1:].T))
+    breaks = jnp.zeros((S, T), bool).at[:, :-1].set(brk_seq.T)
+    a = jnp.zeros((S, T), dtype).at[:, :-1].set(a_seq.T)
+    v = jnp.zeros((S, T), dtype).at[:, :-1].set(v_seq.T)
+    (od, oy, slo, shi, run_len) = state
+    a_f = jnp.where(jnp.isfinite(slo) & jnp.isfinite(shi) & (run_len > 0),
+                    0.5 * (slo + shi), 0.0)
+    a_f = jnp.where(run_len >= 1, a_f, 0.0)
+    v_f = oy + a_f * (od - 1.0)
+    breaks = breaks.at[:, T - 1].set(True)
+    a = a.at[:, T - 1].set(a_f)
+    v = v.at[:, T - 1].set(v_f)
+    return SegmentOutput(breaks, a, v)
+
+
+# ---------------------------------------------------------------------------
+# Disjoint (optimal greedy) with exact bounded-window pivot search
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("max_run", "window"))
+def disjoint_segment(y: jax.Array, eps: jax.Array, max_run: int = 256,
+                     window: Optional[int] = None) -> SegmentOutput:
+    """Batched optimal-disjoint method (ConvexHull / SlideFilter).
+
+    The extreme-slope lines are retightened by an exact masked reduction
+    over the current run's window (all run points), which equals the hull
+    pivot search because the binding extremum over the hull equals the
+    extremum over all points (DESIGN.md §3).  Lines are anchored at the
+    run start.  ``window`` defaults to ``max_run``.
+    """
+    S, T = y.shape
+    dtype = y.dtype
+    W = window or max_run
+    if W < max_run:
+        raise ValueError("window must be >= max_run")
+    eps = jnp.broadcast_to(jnp.asarray(eps, dtype), (S,))
+
+    def step(state, inp):
+        (ybuf, run_start, run_len, a_lo, v_lo, a_hi, v_hi, prev_y, y0) = state
+        # lines anchored at run_start: line(t) = v + a * (t - run_start)
+        t_i, yt = inp
+        t = jnp.broadcast_to(t_i, (S,)).astype(dtype)
+        rs = run_start.astype(dtype)
+        rel = t - rs
+
+        lo_i, hi_i = yt - eps, yt + eps
+        vmax = a_hi * rel + v_hi
+        vmin = a_lo * rel + v_lo
+        feas2 = (vmax >= lo_i) & (vmin <= hi_i)
+        feasible = jnp.where(run_len >= 2, feas2, True)
+        cap_hit = run_len >= max_run
+        brk = ~feasible | cap_hit
+
+        # Chosen line anchored at the break position (t-1): parameter-space
+        # midpoint of the extreme lines (feasible by convexity).
+        am = 0.5 * (a_lo + a_hi)
+        vm = 0.5 * (v_lo + v_hi) + am * (rel - 1.0)
+        a_out = jnp.where(run_len >= 2, am, 0.0)
+        v_out = jnp.where(run_len >= 2, vm, prev_y)
+
+        # ---- retightening over the run window -----------------------------
+        abs_pos = t_i - 1 - jnp.arange(W)            # absolute positions
+        pos = (abs_pos % W).astype(jnp.int32)
+        in_run = (abs_pos >= run_start[:, None]) & (abs_pos >= 0)
+        yw = jnp.take_along_axis(ybuf, jnp.broadcast_to(pos, (S, W)), axis=1)
+        dtw = t[:, None] - abs_pos.astype(dtype)[None, :]
+        dtw_safe = jnp.where(in_run, dtw, 1.0)
+
+        need_hi = vmax > hi_i
+        slopes_hi = (hi_i[:, None] - (yw - eps[:, None])) / dtw_safe
+        slopes_hi = jnp.where(in_run, slopes_hi, _BIG)
+        a_hi_new = jnp.min(slopes_hi, axis=1)
+        v_hi_new = hi_i - a_hi_new * rel             # value at run_start
+        a_hi_u = jnp.where(need_hi, a_hi_new, a_hi)
+        v_hi_u = jnp.where(need_hi, v_hi_new, v_hi)
+
+        need_lo = vmin < lo_i
+        slopes_lo = (lo_i[:, None] - (yw + eps[:, None])) / dtw_safe
+        slopes_lo = jnp.where(in_run, slopes_lo, -_BIG)
+        a_lo_new = jnp.max(slopes_lo, axis=1)
+        v_lo_new = lo_i - a_lo_new * rel
+        a_lo_u = jnp.where(need_lo, a_lo_new, a_lo)
+        v_lo_u = jnp.where(need_lo, v_lo_new, v_lo)
+
+        # Second point of a run initializes the extreme lines.
+        rel_s = jnp.maximum(rel, 1.0)
+        a_hi_2 = (hi_i - (y0 - eps)) / rel_s
+        v_hi_2 = y0 - eps
+        a_lo_2 = (lo_i - (y0 + eps)) / rel_s
+        v_lo_2 = y0 + eps
+
+        second = run_len == 1
+        a_hi_n = jnp.where(second, a_hi_2, a_hi_u)
+        v_hi_n = jnp.where(second, v_hi_2, v_hi_u)
+        a_lo_n = jnp.where(second, a_lo_2, a_lo_u)
+        v_lo_n = jnp.where(second, v_lo_2, v_lo_u)
+
+        # ---- commit --------------------------------------------------------
+        new_run_start = jnp.where(brk, t_i, run_start)
+        new_run_len = jnp.where(brk, 1, run_len + 1)
+        ybuf_n = ybuf.at[:, (t_i % W).astype(jnp.int32)].set(yt)
+        z = jnp.zeros_like(a_lo_n)
+        new_state = (ybuf_n, new_run_start, new_run_len,
+                     jnp.where(brk, z, a_lo_n), jnp.where(brk, z, v_lo_n),
+                     jnp.where(brk, z, a_hi_n), jnp.where(brk, z, v_hi_n),
+                     yt, jnp.where(brk, yt, y0))
+        return new_state, (brk, a_out, v_out)
+
+    ybuf0 = jnp.zeros((S, W), dtype).at[:, 0].set(y[:, 0])
+    z = jnp.zeros((S,), dtype)
+    init = (ybuf0,
+            jnp.zeros((S,), jnp.int32),       # run_start (absolute pos)
+            jnp.ones((S,), jnp.int32),        # run_len
+            z, z, z, z,                       # extreme lines (a, v@rs)
+            y[:, 0], y[:, 0])                 # prev_y, y0
+    ts = jnp.arange(1, T, dtype=jnp.int32)
+    state, (brk_seq, a_seq, v_seq) = jax.lax.scan(step, init, (ts, y[:, 1:].T))
+    breaks = jnp.zeros((S, T), bool).at[:, :-1].set(brk_seq.T)
+    a = jnp.zeros((S, T), dtype).at[:, :-1].set(a_seq.T)
+    v = jnp.zeros((S, T), dtype).at[:, :-1].set(v_seq.T)
+    # Flush trailing run.
+    (ybuf, run_start, run_len, a_lo, v_lo, a_hi, v_hi, prev_y, y0) = state
+    rel = (T - 1) - run_start.astype(dtype)
+    am = 0.5 * (a_lo + a_hi)
+    a_f = jnp.where(run_len >= 2, am, 0.0)
+    v_f = jnp.where(run_len >= 2, 0.5 * (v_lo + v_hi) + am * rel, y[:, T - 1])
+    breaks = breaks.at[:, T - 1].set(True)
+    a = a.at[:, T - 1].set(a_f)
+    v = v.at[:, T - 1].set(v_f)
+    return SegmentOutput(breaks, a, v)
+
+
+# ---------------------------------------------------------------------------
+# Linear (best-fit) with window revalidation
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("max_run", "window"))
+def linear_segment(y: jax.Array, eps: jax.Array, max_run: int = 256,
+                   window: Optional[int] = None) -> SegmentOutput:
+    """Batched Linear (best-fit) method with exact window revalidation.
+
+    The running least-squares fit is kept in Welford form over
+    *run-relative* time; the hull-based validity check of the paper becomes
+    a masked max-residual reduction over the run window.
+    """
+    S, T = y.shape
+    dtype = y.dtype
+    W = window or max_run
+    if W < max_run:
+        raise ValueError("window must be >= max_run")
+    eps = jnp.broadcast_to(jnp.asarray(eps, dtype), (S,))
+
+    def step(state, inp):
+        (ybuf, run_start, nn, mt, my, stt, sty, va, vv) = state
+        # mt = mean of run-relative t; (va, vv) = last valid fit as
+        # (slope, value at the previous point) — the break anchor.
+        t_i, yt = inp
+        t = jnp.broadcast_to(t_i, (S,)).astype(dtype)
+        rs = run_start.astype(dtype)
+        rel = t - rs
+
+        n1 = nn + 1.0
+        d_t = rel - mt
+        d_y = yt - my
+        mt1 = mt + d_t / n1
+        my1 = my + d_y / n1
+        stt1 = stt + d_t * (rel - mt1)
+        sty1 = sty + d_t * (yt - my1)
+        a_fit = jnp.where(stt1 > 0, sty1 / jnp.where(stt1 > 0, stt1, 1.0), 0.0)
+        b_fit = my1 - a_fit * mt1    # value at rel == 0 (run start)
+
+        # Window revalidation.
+        abs_pos = t_i - 1 - jnp.arange(W)
+        pos = (abs_pos % W).astype(jnp.int32)
+        in_run = (abs_pos >= run_start[:, None]) & (abs_pos >= 0)
+        yw = jnp.take_along_axis(ybuf, jnp.broadcast_to(pos, (S, W)), axis=1)
+        relw = abs_pos.astype(dtype)[None, :] - rs[:, None]
+        res = jnp.abs(yw - (a_fit[:, None] * relw + b_fit[:, None]))
+        res = jnp.where(in_run, res, 0.0)
+        max_res = jnp.maximum(jnp.max(res, axis=1),
+                              jnp.abs(yt - (a_fit * rel + b_fit)))
+        tol = eps * (1 + 1e-6) + 1e-12
+        valid = max_res <= tol
+        cap_hit = nn >= max_run
+        brk = ~valid | cap_hit
+
+        a_out, v_out = va, vv  # last valid fit, anchored at t-1
+
+        new_run_start = jnp.where(brk, t_i, run_start)
+        new_nn = jnp.where(brk, 1.0, n1)
+        new_mt = jnp.where(brk, 0.0, mt1)
+        new_my = jnp.where(brk, yt, my1)
+        new_stt = jnp.where(brk, 0.0, stt1)
+        new_sty = jnp.where(brk, 0.0, sty1)
+        new_va = jnp.where(brk, 0.0, a_fit)
+        # value of the (new) valid fit at the *current* point t.
+        new_vv = jnp.where(brk, yt, a_fit * rel + b_fit)
+        ybuf_n = ybuf.at[:, (t_i % W).astype(jnp.int32)].set(yt)
+        new_state = (ybuf_n, new_run_start, new_nn, new_mt, new_my,
+                     new_stt, new_sty, new_va, new_vv)
+        return new_state, (brk, a_out, v_out)
+
+    ybuf0 = jnp.zeros((S, W), dtype).at[:, 0].set(y[:, 0])
+    init = (ybuf0,
+            jnp.zeros((S,), jnp.int32),
+            jnp.ones((S,), dtype),                      # n
+            jnp.zeros((S,), dtype), y[:, 0],            # means (rel t, y)
+            jnp.zeros((S,), dtype), jnp.zeros((S,), dtype),  # stt, sty
+            jnp.zeros((S,), dtype), y[:, 0])            # valid fit (0, y0)
+    ts = jnp.arange(1, T, dtype=jnp.int32)
+    state, (brk_seq, a_seq, v_seq) = jax.lax.scan(step, init, (ts, y[:, 1:].T))
+    breaks = jnp.zeros((S, T), bool).at[:, :-1].set(brk_seq.T)
+    a = jnp.zeros((S, T), dtype).at[:, :-1].set(a_seq.T)
+    v = jnp.zeros((S, T), dtype).at[:, :-1].set(v_seq.T)
+    (_, _, _, _, _, _, _, va, vv) = state
+    breaks = breaks.at[:, T - 1].set(True)
+    a = a.at[:, T - 1].set(va)
+    v = v.at[:, T - 1].set(vv)
+    return SegmentOutput(breaks, a, v)
+
+
+# ---------------------------------------------------------------------------
+# Reconstruction and record framing
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def propagate_lines(seg: SegmentOutput) -> jax.Array:
+    """Per-point reconstruction: each point uses the line of the segment
+    that ends at the next break at-or-after it (reverse scan), evaluated in
+    the anchored form ``v + a * (t - t_break)``."""
+    breaks, a, v = seg
+    S, T = a.shape
+    dtype = a.dtype
+
+    def back(carry, inp):
+        ca, cv, cd = carry  # slope, value at anchor, distance to anchor
+        brk, at, vt = inp
+        ca = jnp.where(brk, at, ca)
+        cv = jnp.where(brk, vt, cv)
+        cd = jnp.where(brk, jnp.zeros_like(cd), cd)
+        out = cv - ca * cd
+        return (ca, cv, cd + 1.0), out
+
+    init = (a[:, T - 1], v[:, T - 1], jnp.zeros((S,), dtype))
+    _, out = jax.lax.scan(back, init,
+                          (breaks.T[::-1], a.T[::-1], v.T[::-1]))
+    return out[::-1].T
+
+
+class PLARecords(NamedTuple):
+    """Fixed-slot record form for shape-static collectives/storage.
+
+    ``seg_end[s, k]`` = absolute index of the last point of segment k
+    (padded by repeating the final segment); lines are anchored there:
+    ``y(t) = v[k] + a[k] * (t - seg_end[k])``.  ``count`` = true number of
+    segments; ``overflow`` = row had more than K segments (its tail is
+    covered by extending slot K-1's line — callers relying on the eps
+    guarantee must check/react, e.g. error feedback or eps escalation).
+    """
+
+    seg_end: jax.Array  # (S, K) int32
+    a: jax.Array        # (S, K)
+    v: jax.Array        # (S, K)
+    count: jax.Array    # (S,) int32
+    overflow: jax.Array  # (S,) bool
+
+
+@functools.partial(jax.jit, static_argnames=("k_max",))
+def to_records(seg: SegmentOutput, k_max: int) -> PLARecords:
+    breaks, a, v = seg
+    S, T = a.shape
+    count = breaks.sum(axis=1).astype(jnp.int32)
+
+    def row(brk, ar, vr):
+        idx = jnp.nonzero(brk, size=k_max, fill_value=T - 1)[0].astype(jnp.int32)
+        return idx, ar[idx], vr[idx]
+
+    idx, ak, vk = jax.vmap(row)(breaks, a, v)
+    # Forward-fill padding slots with the last real segment.
+    kk = jnp.arange(k_max)[None, :]
+    last = jnp.clip(count - 1, 0, k_max - 1)[:, None]
+    src = jnp.minimum(kk, last).astype(jnp.int32)
+    idx = jnp.take_along_axis(idx, src, axis=1)
+    ak = jnp.take_along_axis(ak, src, axis=1)
+    vk = jnp.take_along_axis(vk, src, axis=1)
+    overflow = count > k_max
+    idx = idx.at[:, k_max - 1].set(jnp.where(overflow, T - 1, idx[:, k_max - 1]))
+    return PLARecords(idx, ak, vk, jnp.minimum(count, k_max), overflow)
+
+
+@functools.partial(jax.jit, static_argnames=("t_len",))
+def decode_records(rec: PLARecords, t_len: int) -> jax.Array:
+    """Reconstruct (S, T) values from fixed-slot records."""
+    t = jnp.arange(t_len, dtype=jnp.int32)
+
+    def row(seg_end, a, v):
+        j = jnp.searchsorted(seg_end, t, side="left")
+        j = jnp.clip(j, 0, seg_end.shape[0] - 1)
+        dt = (t - seg_end[j]).astype(a.dtype)   # <= 0, small
+        return v[j] + a[j] * dt
+
+    return jax.vmap(row)(rec.seg_end, rec.a, rec.v)
+
+
+def singlestream_nbytes(rec: PLARecords, t_len: int,
+                        value_bytes: int = 4, counter_bytes: int = 1
+                        ) -> jax.Array:
+    """Per-row SingleStream wire size (paper §5.2.2) for this segmentation.
+
+    Segments of >= 3 points cost ``counter + 2 * value`` bytes; shorter
+    segments flush as singletons at ``counter + value`` bytes each.
+    """
+    seg_end, a, v, count, _ = rec
+    S, K = seg_end.shape
+    prev_end = jnp.concatenate(
+        [jnp.full((S, 1), -1, seg_end.dtype), seg_end[:, :-1]], axis=1)
+    lengths = seg_end - prev_end
+    valid = jnp.arange(K)[None, :] < count[:, None]
+    lengths = jnp.where(valid, lengths, 0)
+    is_seg = lengths >= 3
+    seg_cost = counter_bytes + 2 * value_bytes
+    single_cost = counter_bytes + value_bytes
+    return (is_seg * seg_cost
+            + (~is_seg) * lengths * single_cost).sum(axis=1)

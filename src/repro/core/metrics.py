@@ -1,0 +1,98 @@
+"""The paper's three per-point streaming performance metrics (§4.2).
+
+For input tuple i with completing compression record r = record(i):
+
+- compression ratio  = |r| / |reconstruct(r)|   (|r| in units of one y-value)
+- reconstruction latency = time(r) - i          (in number of input tuples)
+- approximation error = |y'_i - y_i|            (0 for singleton records)
+
+plus the aggregate statistics the paper plots: mean, 25th/75th percentiles,
+1.5-IQR whiskers and extremes (box plots of Figures 12-15).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from .types import POINT_BYTES, CompressionRecord
+
+
+@dataclasses.dataclass
+class PointMetrics:
+    """Per-point metric arrays over one evaluated stream."""
+
+    ratio: np.ndarray     # bytes(record)/record-coverage, in y-value units
+    latency: np.ndarray   # tuples between input and reconstructability
+    error: np.ndarray     # |y' - y|
+
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        out = {}
+        for name in ("ratio", "latency", "error"):
+            v = getattr(self, name)
+            q25, q75 = np.percentile(v, [25, 75])
+            iqr = q75 - q25
+            lo_w = v[v >= q25 - 1.5 * iqr].min() if len(v) else math.nan
+            hi_w = v[v <= q75 + 1.5 * iqr].max() if len(v) else math.nan
+            out[name] = {
+                "mean": float(v.mean()),
+                "q25": float(q25),
+                "q75": float(q75),
+                "whisker_lo": float(lo_w),
+                "whisker_hi": float(hi_w),
+                "min": float(v.min()),
+                "max": float(v.max()),
+            }
+        return out
+
+
+def point_metrics(records: Sequence[CompressionRecord], ts, ys,
+                  eps: float | None = None,
+                  check_coverage: bool = True) -> PointMetrics:
+    """Compute the three per-point metrics from a compression-record stream.
+
+    Verifies (optionally) that the records cover every input point exactly
+    once and — when ``eps`` is given — that every reconstructed value obeys
+    the max-error guarantee (with a tiny float tolerance).
+    """
+    n = len(ts)
+    ratio = np.full(n, np.nan)
+    latency = np.full(n, np.nan)
+    error = np.full(n, np.nan)
+    seen = np.zeros(n, dtype=bool)
+    for r in records:
+        m = len(r.covers)
+        if m == 0:
+            continue
+        rr = (r.nbytes / POINT_BYTES) / m
+        for k, i in enumerate(r.covers):
+            if check_coverage and seen[i]:
+                raise ValueError(f"input point {i} covered twice")
+            seen[i] = True
+            ratio[i] = rr
+            latency[i] = r.emitted_at - i
+            error[i] = abs(r.values[k] - float(ys[i]))
+    if check_coverage and not seen.all():
+        missing = int(np.flatnonzero(~seen)[0])
+        raise ValueError(f"input point {missing} never reconstructed")
+    if eps is not None:
+        bad = error > eps * (1 + 1e-9) + 1e-12
+        if bad.any():
+            i = int(np.flatnonzero(bad)[0])
+            raise ValueError(
+                f"max-error guarantee violated at point {i}: "
+                f"err={error[i]:.3e} > eps={eps:.3e}")
+    return PointMetrics(ratio=ratio, latency=latency, error=error)
+
+
+def total_bytes(records: Sequence[CompressionRecord]) -> float:
+    return float(sum(r.nbytes for r in records))
+
+
+def overall_compression(records: Sequence[CompressionRecord], n_points: int
+                        ) -> float:
+    """Whole-stream bytes ratio: compressed bytes / raw y-value bytes."""
+    return total_bytes(records) / (POINT_BYTES * n_points)

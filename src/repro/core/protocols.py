@@ -1,0 +1,352 @@
+"""Streaming PLA compression protocols (paper §5).
+
+A protocol turns a :class:`~repro.core.types.MethodOutput` into the stream
+of *compression records* that would actually be transmitted / stored, and
+provides the matching reconstruction algorithm.  Four protocols:
+
+- ``implicit``     — the literature's mechanism: PLA records emitted as
+  computed; disjoint knots streamed in two parts with the negative-timestamp
+  sign trick (Luo et al.).  Works with every method, including joint knots.
+- ``twostreams``   — segments ``(t0, n, a, b)`` on one stream, raw singleton
+  y-values on a second; min segment length 4 ⇒ **never inflates** the data.
+- ``singlestream`` — records ``(n, a, b)`` / ``(1, y)`` on one stream.
+- ``singlestreamv``— like singlestream, but singletons buffered into bursts
+  ``(-m, y_1..y_m)``; counter is a signed byte ⇒ caps at 127.
+
+Byte accounting (paper §6.2): doubles cost 8 bytes, counters 1 byte.
+Timestamps are carried by a separate (possibly nil-error compressed) channel
+common to all protocols and — as in the paper — do not enter the per-record
+compression-ratio accounting; what is compared is record bytes vs. the
+8-byte y-values they reconstruct.
+
+Every protocol also has a *byte-level codec* (``encode_* / decode_*``): the
+record stream is packed with ``struct`` and decoded back, proving both the
+byte accounting and the reconstruction algorithm are real.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import List, Sequence, Tuple
+
+from .types import (COUNTER_BYTES, VALUE_BYTES, CompressionRecord,
+                    DisjointKnot, JointKnot, MethodOutput)
+
+__all__ = [
+    "protocol_implicit", "protocol_twostreams", "protocol_singlestream",
+    "protocol_singlestreamv", "PROTOCOLS", "PROTOCOL_CAPS",
+    "encode_implicit", "decode_implicit",
+    "encode_twostreams", "decode_twostreams",
+    "encode_singlestream", "decode_singlestream",
+    "encode_singlestreamv", "decode_singlestreamv",
+]
+
+
+# ---------------------------------------------------------------------------
+# Implicit protocol (classical methods)
+# ---------------------------------------------------------------------------
+
+def protocol_implicit(out: MethodOutput, ts, ys) -> List[CompressionRecord]:
+    """One record per segment: the knot that terminates it.
+
+    Terminating joint knots cost 2 fields (16 B), disjoint knots 3 fields
+    (24 B; streamed in two parts).  A segment's points become
+    reconstructable when both its start value (the *second* part of the
+    left knot, if disjoint) and its end (the *first* part of the right
+    knot) are available — the max of the two emission times.
+    """
+    records: List[CompressionRecord] = []
+    segs, knots = out.segments, out.knots
+    assert len(knots) == len(segs) + 1, (len(knots), len(segs))
+    for j, seg in enumerate(segs):
+        left, right = knots[j], knots[j + 1]
+        left_t = left.emitted_at if isinstance(left, JointKnot) \
+            else left.emitted_at_second
+        if isinstance(right, JointKnot):
+            right_t, nbytes, fields = right.emitted_at, 2 * VALUE_BYTES, 2
+        else:
+            right_t, nbytes, fields = right.emitted_at_first, 3 * VALUE_BYTES, 3
+        covers = range(seg.i0, seg.i1)
+        values = [seg.line(float(ts[i])) for i in covers]
+        records.append(CompressionRecord(
+            kind="disjoint" if fields == 3 else "joint",
+            nbytes=nbytes, fields=fields,
+            emitted_at=max(left_t, right_t), covers=covers, values=values))
+    return records
+
+
+# ---------------------------------------------------------------------------
+# New protocols (greedy disjoint methods only)
+# ---------------------------------------------------------------------------
+
+def _segment_records(out: MethodOutput, ts, ys, *, min_len: int,
+                     seg_bytes: float, seg_fields: int,
+                     singleton_bytes: float, singleton_fields: float,
+                     ) -> List[CompressionRecord]:
+    """Shared frame: long-enough runs become segment records, short runs
+    flush as per-point singletons (exact values, zero error)."""
+    records: List[CompressionRecord] = []
+    for seg in out.segments:
+        if seg.n >= min_len:
+            covers = range(seg.i0, seg.i1)
+            values = [seg.line(float(ts[i])) for i in covers]
+            records.append(CompressionRecord(
+                kind="segment", nbytes=seg_bytes, fields=seg_fields,
+                emitted_at=seg.finalized_at, covers=covers, values=values,
+                meta_line=(seg.line.a, seg.line.b), meta_t0=float(ts[seg.i0])))
+        else:
+            for i in range(seg.i0, seg.i1):
+                records.append(CompressionRecord(
+                    kind="singleton", nbytes=singleton_bytes,
+                    fields=singleton_fields, emitted_at=seg.finalized_at,
+                    covers=range(i, i + 1), values=[float(ys[i])]))
+    return records
+
+
+def protocol_twostreams(out: MethodOutput, ts, ys) -> List[CompressionRecord]:
+    """Segments (t0, n, a, b) = 25 B; singletons are bare 8 B values."""
+    return _segment_records(
+        out, ts, ys, min_len=4,
+        seg_bytes=3 * VALUE_BYTES + COUNTER_BYTES, seg_fields=4,
+        singleton_bytes=VALUE_BYTES, singleton_fields=1)
+
+
+def protocol_singlestream(out: MethodOutput, ts, ys) -> List[CompressionRecord]:
+    """Segments (n, a, b) = 17 B; singletons (1, y) = 9 B."""
+    return _segment_records(
+        out, ts, ys, min_len=3,
+        seg_bytes=2 * VALUE_BYTES + COUNTER_BYTES, seg_fields=3,
+        singleton_bytes=VALUE_BYTES + COUNTER_BYTES, singleton_fields=2)
+
+
+def protocol_singlestreamv(out: MethodOutput, ts, ys,
+                           burst_cap: int = 127) -> List[CompressionRecord]:
+    """Segments (n, a, b) = 17 B; singleton bursts (-m, y_1..y_m) = 1+8m B.
+
+    A burst is emitted when the next segment record is emitted, when it
+    reaches ``burst_cap`` values, or at end of stream.
+    """
+    records: List[CompressionRecord] = []
+    pending: List[int] = []  # input indices buffered as singletons
+
+    def _flush_burst(emit_idx: int) -> None:
+        if not pending:
+            return
+        covers = range(pending[0], pending[-1] + 1)
+        assert list(covers) == pending, "singleton burst must be contiguous"
+        records.append(CompressionRecord(
+            kind="burst", nbytes=COUNTER_BYTES + VALUE_BYTES * len(pending),
+            fields=1 + len(pending), emitted_at=emit_idx, covers=covers,
+            values=[float(ys[i]) for i in pending]))
+        pending.clear()
+
+    last_idx = 0
+    for seg in out.segments:
+        last_idx = max(last_idx, seg.finalized_at)
+        if seg.n >= 3:
+            _flush_burst(seg.finalized_at)
+            covers = range(seg.i0, seg.i1)
+            values = [seg.line(float(ts[i])) for i in covers]
+            records.append(CompressionRecord(
+                kind="segment", nbytes=2 * VALUE_BYTES + COUNTER_BYTES,
+                fields=3, emitted_at=seg.finalized_at, covers=covers,
+                values=values,
+                meta_line=(seg.line.a, seg.line.b), meta_t0=float(ts[seg.i0])))
+        else:
+            for i in range(seg.i0, seg.i1):
+                pending.append(i)
+                if len(pending) >= burst_cap:
+                    _flush_burst(seg.finalized_at)
+    _flush_burst(last_idx if last_idx else (len(ts) - 1))
+    return records
+
+
+PROTOCOLS = {
+    "implicit": protocol_implicit,
+    "twostreams": protocol_twostreams,
+    "singlestream": protocol_singlestream,
+    "singlestreamv": protocol_singlestreamv,
+}
+
+# Max points per segment each protocol supports (drives the method's
+# ``max_run``): one unsigned byte for the single/two-stream counters, a fair
+# signed-byte split for the V variant, unbounded for the implicit protocol.
+PROTOCOL_CAPS = {
+    "implicit": None,
+    "twostreams": 256,
+    "singlestream": 256,
+    "singlestreamv": 127,
+}
+
+
+# ---------------------------------------------------------------------------
+# Byte-level codecs — prove the accounting and the reconstruction algorithm
+# ---------------------------------------------------------------------------
+
+def encode_implicit(records: Sequence[CompressionRecord], out: MethodOutput
+                    ) -> bytes:
+    """Pack the knot stream with Luo et al.'s sign trick.
+
+    Joint knot -> (t, y); disjoint knot -> (-t, y') ... y'' (the bare y''
+    value is emitted later, interleaved exactly in knot order).
+    """
+    buf = bytearray()
+    pending_y2: List[float] = []
+    for k in out.knots:
+        if isinstance(k, JointKnot):
+            if pending_y2:
+                buf += struct.pack("<d", pending_y2.pop())
+            buf += struct.pack("<dd", k.t, k.y)
+        else:
+            assert isinstance(k, DisjointKnot) and k.y2 is not None
+            if pending_y2:
+                buf += struct.pack("<d", pending_y2.pop())
+            buf += struct.pack("<dd", -k.t, k.y1)
+            pending_y2.append(k.y2)
+    if pending_y2:
+        buf += struct.pack("<d", pending_y2.pop())
+    return bytes(buf)
+
+
+def decode_implicit(data: bytes, ts: Sequence[float]) -> List[float]:
+    """Reconstruct y-values from the implicit byte stream + timestamps."""
+    vals: List[float] = []
+    off = 0
+    knots: List[Tuple[float, float, float]] = []  # (t, y_end, y_start_next)
+    expect_y2 = False
+    while off < len(data):
+        if expect_y2:
+            (y2,) = struct.unpack_from("<d", data, off)
+            off += 8
+            t, y1, _ = knots[-1]
+            knots[-1] = (t, y1, y2)
+            expect_y2 = False
+            continue
+        t, y = struct.unpack_from("<dd", data, off)
+        off += 16
+        if t >= 0:
+            knots.append((t, y, y))
+        else:
+            knots.append((-t, y, float("nan")))
+            expect_y2 = True
+    # Walk timestamps through consecutive knot pairs.
+    j = 0
+    for t in ts:
+        t = float(t)
+        while j + 1 < len(knots) - 1 and t >= knots[j + 1][0]:
+            j += 1
+        (t0, _, y0), (t1, y1, _) = knots[j], knots[j + 1]
+        if t1 == t0:
+            vals.append(y1)
+        else:
+            a = (y1 - y0) / (t1 - t0)
+            vals.append(y0 + a * (t - t0))
+    return vals
+
+
+def encode_twostreams(records: Sequence[CompressionRecord]
+                      ) -> Tuple[bytes, bytes]:
+    """Returns (segment stream, singleton stream)."""
+    seg_buf = bytearray()
+    single_buf = bytearray()
+    for r in records:
+        if r.kind == "segment":
+            t0 = r.meta_t0  # type: ignore[attr-defined]
+            a, b = r.meta_line  # type: ignore[attr-defined]
+            seg_buf += struct.pack("<dBdd", t0, len(r.covers) - 1, a, b)
+        else:
+            single_buf += struct.pack("<d", r.values[0])
+    return bytes(seg_buf), bytes(single_buf)
+
+
+def decode_twostreams(seg_stream: bytes, single_stream: bytes,
+                      ts: Sequence[float]) -> List[float]:
+    vals: List[float] = []
+    soff = goff = 0
+    next_seg: Tuple[float, int, float, float] | None = None
+    i = 0
+    n_ts = len(ts)
+    while i < n_ts:
+        if next_seg is None and goff < len(seg_stream):
+            t0, nm1, a, b = struct.unpack_from("<dBdd", seg_stream, goff)
+            goff += 25
+            next_seg = (t0, nm1 + 1, a, b)
+        if next_seg is not None and float(ts[i]) >= next_seg[0]:
+            t0, n, a, b = next_seg
+            for _ in range(n):
+                vals.append(a * float(ts[i]) + b)
+                i += 1
+            next_seg = None
+        else:
+            (y,) = struct.unpack_from("<d", single_stream, soff)
+            soff += 8
+            vals.append(y)
+            i += 1
+    return vals
+
+
+def encode_singlestream(records: Sequence[CompressionRecord]) -> bytes:
+    buf = bytearray()
+    for r in records:
+        if r.kind == "segment":
+            a, b = r.meta_line  # type: ignore[attr-defined]
+            buf += struct.pack("<Bdd", len(r.covers) - 1, a, b)
+        else:
+            buf += struct.pack("<Bd", 0, r.values[0])
+    return bytes(buf)
+
+
+def decode_singlestream(data: bytes, ts: Sequence[float]) -> List[float]:
+    vals: List[float] = []
+    off = 0
+    i = 0
+    while off < len(data):
+        (nm1,) = struct.unpack_from("<B", data, off)
+        off += 1
+        if nm1 == 0:
+            (y,) = struct.unpack_from("<d", data, off)
+            off += 8
+            vals.append(y)
+            i += 1
+        else:
+            a, b = struct.unpack_from("<dd", data, off)
+            off += 16
+            for _ in range(nm1 + 1):
+                vals.append(a * float(ts[i]) + b)
+                i += 1
+    return vals
+
+
+def encode_singlestreamv(records: Sequence[CompressionRecord]) -> bytes:
+    buf = bytearray()
+    for r in records:
+        if r.kind == "segment":
+            a, b = r.meta_line  # type: ignore[attr-defined]
+            buf += struct.pack("<bdd", len(r.covers), a, b)
+        else:  # burst
+            buf += struct.pack("<b", -len(r.values))
+            for v in r.values:
+                buf += struct.pack("<d", v)
+    return bytes(buf)
+
+
+def decode_singlestreamv(data: bytes, ts: Sequence[float]) -> List[float]:
+    vals: List[float] = []
+    off = 0
+    i = 0
+    while off < len(data):
+        (n,) = struct.unpack_from("<b", data, off)
+        off += 1
+        if n < 0:
+            for _ in range(-n):
+                (y,) = struct.unpack_from("<d", data, off)
+                off += 8
+                vals.append(y)
+                i += 1
+        else:
+            a, b = struct.unpack_from("<dd", data, off)
+            off += 16
+            for _ in range(n):
+                vals.append(a * float(ts[i]) + b)
+                i += 1
+    return vals

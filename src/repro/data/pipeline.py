@@ -1,0 +1,52 @@
+"""Deterministic, resumable LM token pipeline.
+
+Production property that matters for fault tolerance: the batch for step N
+is a pure function of (seed, step, host slice) — no stateful iterators, so
+restart-from-checkpoint reproduces the exact data order with zero
+coordination.  Backed here by a synthetic corpus (structured Zipfian
+n-gram-ish stream); a real deployment swaps ``_tokens_for`` for a
+deterministic fetch of preprocessed shards.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    vocab: int
+    global_batch: int
+    seq_len: int
+    seed: int = 1234
+
+
+class TokenPipeline:
+    def __init__(self, cfg: PipelineConfig):
+        self.cfg = cfg
+
+    def batch_at(self, step: int) -> dict:
+        """Global batch for a step (jit-friendly, pure function)."""
+        cfg = self.cfg
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+        # Zipfian unigram stream with local repetition structure.
+        k1, k2, k3 = jax.random.split(key, 3)
+        ranks = jax.random.exponential(
+            k1, (cfg.global_batch, cfg.seq_len)) * 2.0
+        toks = jnp.clip(jnp.exp(ranks).astype(jnp.int32), 1, cfg.vocab - 1)
+        # splice in repeated spans to create learnable structure
+        span = jax.random.randint(k2, (cfg.global_batch, 1), 2, 32)
+        pos = jnp.arange(cfg.seq_len)[None, :]
+        toks = jnp.where(pos % span < span // 2,
+                         jnp.roll(toks, 1, axis=1), toks)
+        return {"tokens": toks}
+
+    def host_batch_at(self, step: int, host_id: int, n_hosts: int) -> dict:
+        full = self.batch_at(step)
+        per = self.cfg.global_batch // n_hosts
+        return jax.tree.map(
+            lambda x: x[host_id * per:(host_id + 1) * per], full)

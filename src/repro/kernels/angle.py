@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: batched Angle PLA segmentation (paper §3.1).
+
+O(1) state per stream: the wedge origin (intersection of the two extreme
+lines through the first two error segments) plus the feasible slope
+interval.  Streams ride the lane dimension; time is walked sequentially by
+the inner grid dimension with carry state in VMEM scratch.
+
+All line state is *anchored* (origin kept as an offset from the current
+step; outputs are (slope, value-at-break)) so float32 stays exact for
+arbitrarily long streams — see repro.core.jax_pla.
+
+Event semantics (see kernels/common.py): processing time ``t`` may emit
+"segment ended at t-1" at event row ``t``; a forced break is injected at
+``t == t_real`` (the first padded step) so the trailing run flushes without
+cross-block writes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import BLOCK_S, BLOCK_T, interpret_mode
+
+_BIG = 3.4e38
+
+
+def _angle_kernel(y_ref, brk_ref, a_ref, v_ref,
+                  phase, p0y, od, oy, slo, shi, runl,
+                  *, eps: float, bt: int, t_real: int, max_run: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        phase[...] = jnp.zeros_like(phase)
+        p0y[...] = jnp.zeros_like(p0y)
+        od[...] = jnp.zeros_like(od)
+        oy[...] = jnp.zeros_like(oy)
+        slo[...] = jnp.full_like(slo, -_BIG)
+        shi[...] = jnp.full_like(shi, _BIG)
+        runl[...] = jnp.zeros_like(runl)
+
+    def step(j, _):
+        t_abs = ti * bt + j
+        yt = pl.load(y_ref, (pl.ds(j, 1), slice(None)))  # (1, BS)
+
+        is_first = t_abs == 0
+        ph, py = phase[...], p0y[...]
+        o_d, o_y, s_lo, s_hi, rl = od[...], oy[...], slo[...], shi[...], runl[...]
+
+        # Phase 0 -> 1: origin from p0=(offset 0) and this point (offset 1).
+        amax = (yt + eps) - (py - eps)
+        amin = (yt - eps) - (py + eps)
+        da = amax - amin
+        das = jnp.where(jnp.abs(da) < 1e-30, 1.0, da)
+        ox_rel = jnp.where(jnp.abs(da) < 1e-30, 0.5, 2.0 * eps / das)
+        oy_new = amax * ox_rel + (py - eps)
+        od_new0 = 1.0 - ox_rel
+
+        # Phase 1: wedge update; origin sits o_d steps behind t.
+        dts = jnp.where(o_d == 0, 1.0, o_d)
+        n1 = (yt - eps - o_y) / dts
+        n2 = (yt + eps - o_y) / dts
+        nlo = jnp.minimum(n1, n2)
+        nhi = jnp.maximum(n1, n2)
+        t_slo = jnp.maximum(s_lo, nlo)
+        t_shi = jnp.minimum(s_hi, nhi)
+        feasible = t_slo <= t_shi
+        cap_hit = rl >= max_run
+        force = t_abs == t_real
+        brk = ((ph == 1) & (~feasible | cap_hit) | force) & ~is_first
+
+        a_out = jnp.where(ph == 1, 0.5 * (s_lo + s_hi), 0.0)
+        v_out = jnp.where(ph == 1, o_y + a_out * (o_d - 1.0), py)
+
+        pl.store(brk_ref, (pl.ds(j, 1), slice(None)), brk.astype(jnp.int8))
+        pl.store(a_ref, (pl.ds(j, 1), slice(None)), jnp.where(brk, a_out, 0.0))
+        pl.store(v_ref, (pl.ds(j, 1), slice(None)), jnp.where(brk, v_out, 0.0))
+
+        # Commit next state.
+        go0 = (ph == 0) & ~brk & ~is_first     # origin just built
+        phase[...] = jnp.where(brk | is_first, 0, 1).astype(jnp.int32)
+        p0y[...] = jnp.where(brk | is_first, yt, py)
+        od[...] = jnp.where(go0, od_new0 + 1.0,
+                            jnp.where(brk | is_first, 0.0, o_d + 1.0))
+        oy[...] = jnp.where(go0, oy_new, o_y)
+        slo[...] = jnp.where(go0, amin, jnp.where(brk, -_BIG, t_slo))
+        shi[...] = jnp.where(go0, amax, jnp.where(brk, _BIG, t_shi))
+        runl[...] = jnp.where(brk | is_first, 1, rl + 1).astype(jnp.int32)
+        return 0
+
+    jax.lax.fori_loop(0, bt, step, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eps", "t_real", "max_run",
+                                    "block_s", "block_t"))
+def angle_pallas(y_t: jax.Array, *, eps: float, t_real: int, max_run: int = 256,
+                 block_s: int = BLOCK_S, block_t: int = BLOCK_T):
+    """Run the Angle kernel on time-major ``y_t: (Tp, Sp)``.
+
+    Returns event arrays ``(brk_i8, a, v)`` of shape (Tp, Sp).
+    """
+    Tp, Sp = y_t.shape
+    assert Tp % block_t == 0 and Sp % block_s == 0
+    grid = (Sp // block_s, Tp // block_t)
+    kernel = functools.partial(_angle_kernel, eps=eps, bt=block_t,
+                               t_real=t_real, max_run=max_run)
+    spec = pl.BlockSpec((block_t, block_s), lambda si, ti: (ti, si))
+    scratch = [pltpu.VMEM((1, block_s), jnp.int32),    # phase
+               pltpu.VMEM((1, block_s), jnp.float32),  # p0y
+               pltpu.VMEM((1, block_s), jnp.float32),  # od (origin offset)
+               pltpu.VMEM((1, block_s), jnp.float32),  # oy
+               pltpu.VMEM((1, block_s), jnp.float32),  # slo
+               pltpu.VMEM((1, block_s), jnp.float32),  # shi
+               pltpu.VMEM((1, block_s), jnp.int32)]    # run_len
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=[pl.BlockSpec((block_t, block_s), lambda si, ti: (ti, si))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((Tp, Sp), jnp.int8),
+                   jax.ShapeDtypeStruct((Tp, Sp), jnp.float32),
+                   jax.ShapeDtypeStruct((Tp, Sp), jnp.float32)],
+        scratch_shapes=scratch,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret_mode(),
+    )(y_t)

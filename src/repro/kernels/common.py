@@ -1,0 +1,69 @@
+"""Shared plumbing for the PLA Pallas TPU kernels.
+
+Layout convention: kernels take the stream batch in **time-major** layout
+``y_t: (T, S)`` so that streams ride the TPU lane dimension (128-wide) and
+the sequential time walk indexes the sublane dimension, which supports
+dynamic row slicing.  The public ops (``repro.kernels.ops``) accept the
+framework's natural ``(S, T)`` layout and transpose/pad at the boundary.
+
+Grid convention: ``grid = (S // BS, T // BT)`` with
+``dimension_semantics = ("parallel", "arbitrary")`` — stream blocks are
+independent; time blocks are walked sequentially with per-stream carry
+state living in VMEM scratch, re-initialized at the first time block.
+
+Event semantics: while processing time index ``t`` a kernel may detect that
+the current segment *ended at* ``t-1``; it records the event at row ``t``
+of its event outputs (no cross-block writes).  The trailing run is flushed
+into dedicated ``(1, BS)`` outputs by the last time block.
+:func:`assemble_segments` shifts events into the canonical
+:class:`repro.core.jax_pla.SegmentOutput` form.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jax_pla import SegmentOutput
+
+# Default tile sizes: 128 streams on lanes; 128 time steps per block keeps
+# (BT, BS) f32 tiles at 64 KiB — far under VMEM even with ring buffers.
+BLOCK_S = 128
+BLOCK_T = 128
+
+_BIG = jnp.float32(3.4e38)
+
+
+def interpret_mode() -> bool:
+    """Pallas interpret=True everywhere except a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def pad_streams(y: jax.Array, bs: int, bt: int):
+    """Pad (S, T) to multiples of (bs, bt); returns (padded, S, T).
+
+    Time padding *always* adds at least one step (repeating the final
+    value): the kernel injects a forced break at ``t == T`` so the trailing
+    run flushes through the regular event path (no cross-block writes).
+    Stream padding appends zero rows.
+    """
+    S, T = y.shape
+    Sp = (S + bs - 1) // bs * bs
+    Tp = (T // bt + 1) * bt
+    y = jnp.concatenate([y, jnp.repeat(y[:, -1:], Tp - T, axis=1)], axis=1)
+    if Sp != S:
+        y = jnp.concatenate([y, jnp.zeros((Sp - S, Tp), y.dtype)], axis=0)
+    return y, S, T
+
+
+def assemble_segments(ev_brk, ev_a, ev_b, S: int, T: int) -> SegmentOutput:
+    """Shift kernel events into canonical (S, T) SegmentOutput.
+
+    ``ev_*`` are (Tp, Sp) time-major event arrays; an event at row t means
+    "a segment ended at t-1".  The forced break at row T closes the
+    trailing run, so rows 1..T cover break positions 0..T-1 completely.
+    """
+    breaks = ev_brk[1:T + 1, :S].T.astype(bool)
+    a = ev_a[1:T + 1, :S].T
+    b = ev_b[1:T + 1, :S].T
+    return SegmentOutput(breaks, a, b)

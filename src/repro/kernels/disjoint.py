@@ -1,0 +1,168 @@
+"""Pallas TPU kernel: batched optimal-disjoint PLA segmentation (§3.2).
+
+The convex-hull pivot search of the sequential algorithm is replaced by an
+exact masked min/max reduction over the current run's window — valid
+because (a) the protocols cap runs at <= 256 points, so the run always fits
+a VMEM ring buffer, and (b) the binding extremum over all run points equals
+the extremum over the hull (DESIGN.md §3).
+
+Lines are anchored at the run start (``line(t) = v + a * (t - run_start)``)
+so float32 stays exact for arbitrarily long streams.
+
+Ring-buffer trick: no gathers.  Slot ``r`` of the (W, BS) ring holds the
+value at absolute position ``p_r = t-1 - ((t-1-r) mod W)``; the in-run mask
+and per-slot timestamps are pure arithmetic on an iota.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import BLOCK_S, BLOCK_T, interpret_mode
+
+_BIG = 3.4e38
+
+
+def _disjoint_kernel(y_ref, brk_ref, a_ref, v_ref,
+                     ring, run_start, runl, y0s, prev_y,
+                     a_lo, v_lo, a_hi, v_hi,
+                     *, eps: float, bt: int, t_real: int, max_run: int,
+                     window: int):
+    ti = pl.program_id(1)
+    W = window
+
+    @pl.when(ti == 0)
+    def _init():
+        ring[...] = jnp.zeros_like(ring)
+        run_start[...] = jnp.zeros_like(run_start)
+        runl[...] = jnp.zeros_like(runl)
+        y0s[...] = jnp.zeros_like(y0s)
+        prev_y[...] = jnp.zeros_like(prev_y)
+        a_lo[...] = jnp.zeros_like(a_lo)
+        v_lo[...] = jnp.zeros_like(v_lo)
+        a_hi[...] = jnp.zeros_like(a_hi)
+        v_hi[...] = jnp.zeros_like(v_hi)
+
+    slot_iota = jax.lax.broadcasted_iota(jnp.float32, (W, 1), 0)
+
+    def step(j, _):
+        t_abs = ti * bt + j
+        t = t_abs.astype(jnp.float32)
+        yt = pl.load(y_ref, (pl.ds(j, 1), slice(None)))  # (1, BS)
+        is_first = t_abs == 0
+
+        rs, rl = run_start[...], runl[...]
+        al, vl, ah, vh = a_lo[...], v_lo[...], a_hi[...], v_hi[...]
+        y0, py = y0s[...], prev_y[...]
+        rel = t - rs
+
+        lo_i, hi_i = yt - eps, yt + eps
+        vmax = ah * rel + vh
+        vmin = al * rel + vl
+        feas2 = (vmax >= lo_i) & (vmin <= hi_i)
+        cap_hit = rl >= max_run
+        force = t_abs == t_real
+        brk = ((rl >= 2) & ~feas2 | cap_hit | force) & ~is_first
+
+        # Chosen line anchored at the break position (t-1): parameter-space
+        # midpoint of the extreme lines (feasible by convexity).
+        am = 0.5 * (al + ah)
+        vm = 0.5 * (vl + vh) + am * (rel - 1.0)
+        a_out = jnp.where(rl >= 2, am, 0.0)
+        v_out = jnp.where(rl >= 2, vm, py)
+
+        pl.store(brk_ref, (pl.ds(j, 1), slice(None)), brk.astype(jnp.int8))
+        pl.store(a_ref, (pl.ds(j, 1), slice(None)), jnp.where(brk, a_out, 0.0))
+        pl.store(v_ref, (pl.ds(j, 1), slice(None)), jnp.where(brk, v_out, 0.0))
+
+        # --- extreme-line retightening over the run window ----------------
+        tm1 = t - 1.0
+        p_r = tm1 - jnp.mod(tm1 - slot_iota, float(W))       # (W, 1)
+        in_run = (p_r >= rs) & (p_r >= 0.0)                  # (W, BS)
+        dtw = t - p_r
+        dtw_safe = jnp.where(in_run, dtw, 1.0)
+        yw = ring[...]                                       # (W, BS)
+
+        need_hi = vmax > hi_i
+        slopes_hi = (hi_i - (yw - eps)) / dtw_safe
+        slopes_hi = jnp.where(in_run, slopes_hi, _BIG)
+        a_hi_new = jnp.min(slopes_hi, axis=0, keepdims=True)
+        v_hi_new = hi_i - a_hi_new * rel                     # value at rs
+        a_hi_u = jnp.where(need_hi, a_hi_new, ah)
+        v_hi_u = jnp.where(need_hi, v_hi_new, vh)
+
+        need_lo = vmin < lo_i
+        slopes_lo = (lo_i - (yw + eps)) / dtw_safe
+        slopes_lo = jnp.where(in_run, slopes_lo, -_BIG)
+        a_lo_new = jnp.max(slopes_lo, axis=0, keepdims=True)
+        v_lo_new = lo_i - a_lo_new * rel
+        a_lo_u = jnp.where(need_lo, a_lo_new, al)
+        v_lo_u = jnp.where(need_lo, v_lo_new, vl)
+
+        # Second point of a run initializes the extreme lines directly.
+        rel_s = jnp.maximum(rel, 1.0)
+        a_hi_2 = (hi_i - (y0 - eps)) / rel_s
+        a_lo_2 = (lo_i - (y0 + eps)) / rel_s
+
+        second = rl == 1
+        a_hi_n = jnp.where(second, a_hi_2, a_hi_u)
+        v_hi_n = jnp.where(second, y0 - eps, v_hi_u)
+        a_lo_n = jnp.where(second, a_lo_2, a_lo_u)
+        v_lo_n = jnp.where(second, y0 + eps, v_lo_u)
+
+        # --- commit --------------------------------------------------------
+        restart = brk | is_first
+        run_start[...] = jnp.where(restart, t, rs)
+        runl[...] = jnp.where(restart, 1, rl + 1).astype(jnp.int32)
+        y0s[...] = jnp.where(restart, yt, y0)
+        prev_y[...] = yt
+        a_lo[...] = jnp.where(restart, 0.0, a_lo_n)
+        v_lo[...] = jnp.where(restart, 0.0, v_lo_n)
+        a_hi[...] = jnp.where(restart, 0.0, a_hi_n)
+        v_hi[...] = jnp.where(restart, 0.0, v_hi_n)
+        pl.store(ring, (pl.ds(jnp.mod(t_abs, W), 1), slice(None)), yt)
+        return 0
+
+    jax.lax.fori_loop(0, bt, step, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "t_real", "max_run",
+                                             "window", "block_s", "block_t"))
+def disjoint_pallas(y_t: jax.Array, *, eps: float, t_real: int,
+                    max_run: int = 256, window: int | None = None,
+                    block_s: int = BLOCK_S, block_t: int = BLOCK_T):
+    Tp, Sp = y_t.shape
+    W = window or max_run
+    assert W >= max_run and Tp % block_t == 0 and Sp % block_s == 0
+    grid = (Sp // block_s, Tp // block_t)
+    kernel = functools.partial(_disjoint_kernel, eps=eps, bt=block_t,
+                               t_real=t_real, max_run=max_run, window=W)
+    spec = pl.BlockSpec((block_t, block_s), lambda si, ti: (ti, si))
+    f32 = jnp.float32
+    scratch = [pltpu.VMEM((W, block_s), f32),        # ring
+               pltpu.VMEM((1, block_s), f32),        # run_start (as f32 t)
+               pltpu.VMEM((1, block_s), jnp.int32),  # run_len
+               pltpu.VMEM((1, block_s), f32),        # y0 (run start value)
+               pltpu.VMEM((1, block_s), f32),        # prev y
+               pltpu.VMEM((1, block_s), f32),        # a_lo
+               pltpu.VMEM((1, block_s), f32),        # v_lo
+               pltpu.VMEM((1, block_s), f32),        # a_hi
+               pltpu.VMEM((1, block_s), f32)]        # v_hi
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=[pl.BlockSpec((block_t, block_s), lambda si, ti: (ti, si))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((Tp, Sp), jnp.int8),
+                   jax.ShapeDtypeStruct((Tp, Sp), f32),
+                   jax.ShapeDtypeStruct((Tp, Sp), f32)],
+        scratch_shapes=scratch,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret_mode(),
+    )(y_t)

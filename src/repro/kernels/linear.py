@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: batched best-fit (Linear) PLA segmentation (§3.5).
+
+The paper's hull-based validity check of the running least-squares line
+becomes an exact masked max-residual reduction over the run's VMEM ring
+window (runs are capped by the protocols, so the window is exact).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import BLOCK_S, BLOCK_T, interpret_mode
+
+
+def _linear_kernel(y_ref, brk_ref, a_ref, b_ref,
+                   ring, run_start, nn, mt, my, stt, sty, va, vb,
+                   *, eps: float, bt: int, t_real: int, max_run: int,
+                   window: int):
+    ti = pl.program_id(1)
+    W = window
+
+    @pl.when(ti == 0)
+    def _init():
+        ring[...] = jnp.zeros_like(ring)
+        run_start[...] = jnp.zeros_like(run_start)
+        nn[...] = jnp.zeros_like(nn)
+        mt[...] = jnp.zeros_like(mt)
+        my[...] = jnp.zeros_like(my)
+        stt[...] = jnp.zeros_like(stt)
+        sty[...] = jnp.zeros_like(sty)
+        va[...] = jnp.zeros_like(va)
+        vb[...] = jnp.zeros_like(vb)
+
+    slot_iota = jax.lax.broadcasted_iota(jnp.float32, (W, 1), 0)
+
+    def step(j, _):
+        t_abs = ti * bt + j
+        t = t_abs.astype(jnp.float32)
+        yt = pl.load(y_ref, (pl.ds(j, 1), slice(None)))  # (1, BS)
+        is_first = t_abs == 0
+
+        rs, n0 = run_start[...], nn[...]
+        m_t, m_y, s_tt, s_ty = mt[...], my[...], stt[...], sty[...]
+        v_a, v_v = va[...], vb[...]
+        rel = t - rs  # run-relative time; all fits are anchored at rs
+
+        # Tentative Welford update (over run-relative t).
+        n1 = n0 + 1.0
+        d_t = rel - m_t
+        d_y = yt - m_y
+        mt1 = m_t + d_t / n1
+        my1 = m_y + d_y / n1
+        stt1 = s_tt + d_t * (rel - mt1)
+        sty1 = s_ty + d_t * (yt - my1)
+        a_fit = jnp.where(stt1 > 0, sty1 / jnp.where(stt1 > 0, stt1, 1.0), 0.0)
+        b_fit = my1 - a_fit * mt1    # value at rel == 0 (run start)
+
+        # Window revalidation: residuals of all run points + the new point.
+        tm1 = t - 1.0
+        p_r = tm1 - jnp.mod(tm1 - slot_iota, float(W))       # (W, 1)
+        in_run = (p_r >= rs) & (p_r >= 0.0)
+        relw = p_r - rs
+        yw = ring[...]
+        res = jnp.abs(yw - (a_fit * relw + b_fit))
+        res = jnp.where(in_run, res, 0.0)
+        max_res = jnp.maximum(jnp.max(res, axis=0, keepdims=True),
+                              jnp.abs(yt - (a_fit * rel + b_fit)))
+        tol = eps * (1 + 1e-6) + 1e-12
+        valid = max_res <= tol
+        cap_hit = n0 >= max_run
+        force = t_abs == t_real
+        brk = (~valid | cap_hit | force) & ~is_first
+
+        # (v_a, v_v): last valid fit as (slope, value at previous point) —
+        # exactly the anchored output form for a break at t-1.
+        pl.store(brk_ref, (pl.ds(j, 1), slice(None)), brk.astype(jnp.int8))
+        pl.store(a_ref, (pl.ds(j, 1), slice(None)), jnp.where(brk, v_a, 0.0))
+        pl.store(b_ref, (pl.ds(j, 1), slice(None)), jnp.where(brk, v_v, 0.0))
+
+        restart = brk | is_first
+        run_start[...] = jnp.where(restart, t, rs)
+        nn[...] = jnp.where(restart, 1.0, n1)
+        mt[...] = jnp.where(restart, 0.0, mt1)
+        my[...] = jnp.where(restart, yt, my1)
+        stt[...] = jnp.where(restart, 0.0, stt1)
+        sty[...] = jnp.where(restart, 0.0, sty1)
+        va[...] = jnp.where(restart, 0.0, a_fit)
+        # value of the (new) valid fit at the *current* point t.
+        vb[...] = jnp.where(restart, yt, a_fit * rel + b_fit)
+        pl.store(ring, (pl.ds(jnp.mod(t_abs, W), 1), slice(None)), yt)
+        return 0
+
+    jax.lax.fori_loop(0, bt, step, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "t_real", "max_run", "window",
+                                             "block_s", "block_t"))
+def linear_pallas(y_t: jax.Array, *, eps: float, t_real: int,
+                  max_run: int = 256, window: int | None = None,
+                  block_s: int = BLOCK_S, block_t: int = BLOCK_T):
+    Tp, Sp = y_t.shape
+    W = window or max_run
+    assert W >= max_run and Tp % block_t == 0 and Sp % block_s == 0
+    grid = (Sp // block_s, Tp // block_t)
+    kernel = functools.partial(_linear_kernel, eps=eps, bt=block_t,
+                               t_real=t_real, max_run=max_run, window=W)
+    spec = pl.BlockSpec((block_t, block_s), lambda si, ti: (ti, si))
+    f32 = jnp.float32
+    scratch = [pltpu.VMEM((W, block_s), f32)] + \
+              [pltpu.VMEM((1, block_s), f32) for _ in range(8)]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=[pl.BlockSpec((block_t, block_s), lambda si, ti: (ti, si))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((Tp, Sp), jnp.int8),
+                   jax.ShapeDtypeStruct((Tp, Sp), f32),
+                   jax.ShapeDtypeStruct((Tp, Sp), f32)],
+        scratch_shapes=scratch,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret_mode(),
+    )(y_t)

@@ -1,0 +1,110 @@
+"""Public jit'd wrappers around the PLA Pallas kernels.
+
+These accept the framework's natural ``(S, T)`` stream layout (float32),
+handle padding/transposition at the boundary, and return the same
+:class:`repro.core.jax_pla.SegmentOutput` structure as the pure-jnp
+reference implementations in :mod:`repro.kernels.ref` — the kernels are
+drop-in replacements validated by ``tests/test_kernels.py``.
+
+On non-TPU backends the kernels execute in Pallas ``interpret`` mode
+(bit-accurate kernel-body semantics, Python speed) so the whole framework
+remains runnable and testable on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jax_pla import SegmentOutput
+from .angle import angle_pallas
+from .swing import swing_pallas
+from .common import BLOCK_S, BLOCK_T, assemble_segments, pad_streams
+from .disjoint import disjoint_pallas
+from .linear import linear_pallas
+from .reconstruct import reconstruct_pallas
+
+__all__ = ["angle_segment_tpu", "swing_segment_tpu",
+           "disjoint_segment_tpu", "linear_segment_tpu",
+           "reconstruct_tpu", "KERNEL_SEGMENTERS"]
+
+
+def _run(kernel_fn, y, eps, max_run, block_s, block_t, **kw):
+    y = jnp.asarray(y, jnp.float32)
+    yp, S, T = pad_streams(y, block_s, block_t)
+    ev_brk, ev_a, ev_b = kernel_fn(yp.T, eps=float(eps), t_real=T,
+                                   max_run=max_run, block_s=block_s,
+                                   block_t=block_t, **kw)
+    return assemble_segments(ev_brk, ev_a, ev_b, S, T)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "max_run", "block_s",
+                                             "block_t"))
+def swing_segment_tpu(y: jax.Array, eps: float, max_run: int = 256,
+                      block_s: int = BLOCK_S, block_t: int = BLOCK_T
+                      ) -> SegmentOutput:
+    """SwingFilter PLA segmentation of (S, T) streams via the Pallas kernel."""
+    return _run(swing_pallas, y, eps, max_run, block_s, block_t)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "max_run", "block_s",
+                                             "block_t"))
+def angle_segment_tpu(y: jax.Array, eps: float, max_run: int = 256,
+                      block_s: int = BLOCK_S, block_t: int = BLOCK_T
+                      ) -> SegmentOutput:
+    """Angle PLA segmentation of (S, T) streams via the Pallas kernel."""
+    return _run(angle_pallas, y, eps, max_run, block_s, block_t)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "max_run", "window",
+                                             "block_s", "block_t"))
+def disjoint_segment_tpu(y: jax.Array, eps: float, max_run: int = 256,
+                         window: Optional[int] = None,
+                         block_s: int = BLOCK_S, block_t: int = BLOCK_T
+                         ) -> SegmentOutput:
+    """Optimal-disjoint PLA segmentation via the Pallas kernel."""
+    return _run(disjoint_pallas, y, eps, max_run, block_s, block_t,
+                window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "max_run", "window",
+                                             "block_s", "block_t"))
+def linear_segment_tpu(y: jax.Array, eps: float, max_run: int = 256,
+                       window: Optional[int] = None,
+                       block_s: int = BLOCK_S, block_t: int = BLOCK_T
+                       ) -> SegmentOutput:
+    """Best-fit (Linear) PLA segmentation via the Pallas kernel."""
+    return _run(linear_pallas, y, eps, max_run, block_s, block_t,
+                window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_t"))
+def reconstruct_tpu(seg: SegmentOutput, block_s: int = BLOCK_S,
+                    block_t: int = BLOCK_T) -> jax.Array:
+    """Per-point reconstruction of (S, T) streams via the Pallas kernel."""
+    breaks, a, b = seg
+    S, T = a.shape
+    Sp = (S + block_s - 1) // block_s * block_s
+    Tp = (T + block_t - 1) // block_t * block_t
+
+    def pad(x, fill):
+        out = jnp.full((Sp, Tp), fill, x.dtype)
+        return out.at[:S, :T].set(x)
+
+    brk_p = pad(breaks.astype(jnp.int8), 1)  # padded tail: all breaks
+    a_p = pad(a.astype(jnp.float32), 0.0)
+    b_p = pad(b.astype(jnp.float32), 0.0)
+    out = reconstruct_pallas(brk_p.T, a_p.T, b_p.T,
+                             block_s=block_s, block_t=block_t)
+    return out.T[:S, :T]
+
+
+KERNEL_SEGMENTERS = {
+    "swing": swing_segment_tpu,
+    "angle": angle_segment_tpu,
+    "disjoint": disjoint_segment_tpu,
+    "linear": linear_segment_tpu,
+}

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: segment-stream → dense stream reconstruction.
+
+Reverse time walk: each point takes the line of the segment ending at the
+next break at-or-after it.  The grid's sequential dimension maps to time
+blocks in *reverse* order via the BlockSpec index map; the (a, b) carry
+lives in VMEM scratch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import BLOCK_S, BLOCK_T, interpret_mode
+
+
+def _recon_kernel(brk_ref, a_ref, v_ref, out_ref, ca, cv, cd,
+                  *, bt: int, nt: int):
+    ti = pl.program_id(1)  # 0 .. nt-1, mapped to reversed time blocks
+
+    @pl.when(ti == 0)
+    def _init():
+        ca[...] = jnp.zeros_like(ca)
+        cv[...] = jnp.zeros_like(cv)
+        cd[...] = jnp.zeros_like(cd)
+
+    def step(k, _):
+        j = bt - 1 - k  # walk rows backwards
+        brk = pl.load(brk_ref, (pl.ds(j, 1), slice(None))) != 0
+        at = pl.load(a_ref, (pl.ds(j, 1), slice(None)))
+        vt = pl.load(v_ref, (pl.ds(j, 1), slice(None)))
+        # Anchored evaluation: carry (slope, value at anchor, distance to
+        # anchor); y(t) = v - a * d.  No absolute-t products — float32 safe
+        # at any stream length.
+        new_a = jnp.where(brk, at, ca[...])
+        new_v = jnp.where(brk, vt, cv[...])
+        new_d = jnp.where(brk, jnp.zeros_like(cd[...]), cd[...])
+        ca[...] = new_a
+        cv[...] = new_v
+        cd[...] = new_d + 1.0
+        pl.store(out_ref, (pl.ds(j, 1), slice(None)), new_v - new_a * new_d)
+        return 0
+
+    jax.lax.fori_loop(0, bt, step, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_t"))
+def reconstruct_pallas(brk_t: jax.Array, a_t: jax.Array, v_t: jax.Array,
+                       block_s: int = BLOCK_S, block_t: int = BLOCK_T):
+    """Time-major (Tp, Sp) breaks/a/v -> (Tp, Sp) reconstructed values."""
+    Tp, Sp = a_t.shape
+    assert Tp % block_t == 0 and Sp % block_s == 0
+    nt = Tp // block_t
+    grid = (Sp // block_s, nt)
+    kernel = functools.partial(_recon_kernel, bt=block_t, nt=nt)
+    # Sequential dim walks time blocks in reverse.
+    rev = pl.BlockSpec((block_t, block_s), lambda si, ti: (nt - 1 - ti, si))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[rev, rev, rev],
+        out_specs=rev,
+        out_shape=jax.ShapeDtypeStruct((Tp, Sp), a_t.dtype),
+        scratch_shapes=[pltpu.VMEM((1, block_s), jnp.float32),
+                        pltpu.VMEM((1, block_s), jnp.float32),
+                        pltpu.VMEM((1, block_s), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret_mode(),
+    )(brk_t, a_t, v_t)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the PLA Pallas kernels.
+
+The batched ``lax.scan`` implementations in :mod:`repro.core.jax_pla` are
+the reference semantics; they are themselves validated point-for-point
+against the exact sequential algorithms of :mod:`repro.core.methods`
+(tests/test_jax_pla.py).  Kernel tests sweep shapes/dtypes and assert
+allclose between :mod:`repro.kernels.ops` and these oracles.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.jax_pla import (SegmentOutput, angle_segment,
+                                disjoint_segment, linear_segment,
+                                swing_segment, propagate_lines)
+
+__all__ = ["swing_ref", "angle_ref", "disjoint_ref", "linear_ref",
+           "reconstruct_ref",
+           "REF_SEGMENTERS"]
+
+
+def swing_ref(y: jax.Array, eps: float, max_run: int = 256) -> SegmentOutput:
+    return swing_segment(y, eps, max_run=max_run)
+
+
+def angle_ref(y: jax.Array, eps: float, max_run: int = 256) -> SegmentOutput:
+    return angle_segment(y, eps, max_run=max_run)
+
+
+def disjoint_ref(y: jax.Array, eps: float, max_run: int = 256) -> SegmentOutput:
+    return disjoint_segment(y, eps, max_run=max_run)
+
+
+def linear_ref(y: jax.Array, eps: float, max_run: int = 256) -> SegmentOutput:
+    return linear_segment(y, eps, max_run=max_run)
+
+
+def reconstruct_ref(seg: SegmentOutput) -> jax.Array:
+    return propagate_lines(seg)
+
+
+REF_SEGMENTERS = {
+    "swing": swing_ref,
+    "angle": angle_ref,
+    "disjoint": disjoint_ref,
+    "linear": linear_ref,
+}

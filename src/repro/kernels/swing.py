@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: batched SwingFilter PLA segmentation (paper §3.1).
+
+The paper's simplest (and historically first) streaming method: a slope
+wedge through a fixed origin = the previous segment's chosen endpoint
+(joint knots), O(1) state per stream.  Same lane/scratch/event layout as
+the Angle kernel (kernels/angle.py); the origin is carried as a relative
+offset so f32 survives arbitrarily long streams.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import BLOCK_S, BLOCK_T, interpret_mode
+
+_BIG = 3.4e38
+
+
+def _swing_kernel(y_ref, brk_ref, a_ref, v_ref,
+                  od, oy, slo, shi, runl,
+                  *, eps: float, bt: int, t_real: int, max_run: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        od[...] = jnp.zeros_like(od)
+        oy[...] = jnp.zeros_like(oy)
+        slo[...] = jnp.full_like(slo, -_BIG)
+        shi[...] = jnp.full_like(shi, _BIG)
+        runl[...] = jnp.zeros_like(runl)
+
+    def step(j, _):
+        t_abs = ti * bt + j
+        yt = pl.load(y_ref, (pl.ds(j, 1), slice(None)))  # (1, BS)
+        is_first = t_abs == 0
+
+        o_d, o_y = od[...], oy[...]
+        s_lo, s_hi, rl = slo[...], shi[...], runl[...]
+
+        dts = jnp.where(o_d == 0, 1.0, o_d)
+        n1 = (yt - eps - o_y) / dts
+        n2 = (yt + eps - o_y) / dts
+        nlo = jnp.minimum(n1, n2)
+        nhi = jnp.maximum(n1, n2)
+        t_slo = jnp.maximum(s_lo, nlo)
+        t_shi = jnp.minimum(s_hi, nhi)
+        feasible = t_slo <= t_shi
+        cap_hit = rl >= max_run
+        force = t_abs == t_real
+        brk = (~feasible | cap_hit | force) & ~is_first
+
+        a_out = 0.5 * (s_lo + s_hi)
+        v_out = o_y + a_out * (o_d - 1.0)   # knot at t-1 (on the old line)
+
+        pl.store(brk_ref, (pl.ds(j, 1), slice(None)), brk.astype(jnp.int8))
+        pl.store(a_ref, (pl.ds(j, 1), slice(None)), jnp.where(brk, a_out, 0.0))
+        pl.store(v_ref, (pl.ds(j, 1), slice(None)), jnp.where(brk, v_out, 0.0))
+
+        # Restart from the knot (t-1, v_out); re-add this point (dt == 1).
+        b_lo = yt - eps - v_out
+        b_hi = yt + eps - v_out
+        # od: at t=0 the origin IS this point (next step distance 1); on a
+        # break the origin is at t-1 (next step distance 2); else +1.
+        od[...] = jnp.where(is_first, 1.0, jnp.where(brk, 2.0, o_d + 1.0))
+        oy[...] = jnp.where(brk, v_out, jnp.where(is_first, yt, o_y))
+        slo[...] = jnp.where(brk, jnp.minimum(b_lo, b_hi),
+                             jnp.where(is_first, -_BIG, t_slo))
+        shi[...] = jnp.where(brk, jnp.maximum(b_lo, b_hi),
+                             jnp.where(is_first, _BIG, t_shi))
+        runl[...] = jnp.where(brk | is_first, 1, rl + 1).astype(jnp.int32)
+        return 0
+
+    jax.lax.fori_loop(0, bt, step, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eps", "t_real", "max_run",
+                                    "block_s", "block_t"))
+def swing_pallas(y_t: jax.Array, *, eps: float, t_real: int,
+                 max_run: int = 256,
+                 block_s: int = BLOCK_S, block_t: int = BLOCK_T):
+    """Run the Swing kernel on time-major ``y_t: (Tp, Sp)``."""
+    Tp, Sp = y_t.shape
+    assert Tp % block_t == 0 and Sp % block_s == 0
+    grid = (Sp // block_s, Tp // block_t)
+    kernel = functools.partial(_swing_kernel, eps=eps, bt=block_t,
+                               t_real=t_real, max_run=max_run)
+    spec = pl.BlockSpec((block_t, block_s), lambda si, ti: (ti, si))
+    f32 = jnp.float32
+    scratch = [pltpu.VMEM((1, block_s), f32),      # od
+               pltpu.VMEM((1, block_s), f32),      # oy
+               pltpu.VMEM((1, block_s), f32),      # slo
+               pltpu.VMEM((1, block_s), f32),      # shi
+               pltpu.VMEM((1, block_s), jnp.int32)]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=[pl.BlockSpec((block_t, block_s), lambda si, ti: (ti, si))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((Tp, Sp), jnp.int8),
+                   jax.ShapeDtypeStruct((Tp, Sp), f32),
+                   jax.ShapeDtypeStruct((Tp, Sp), f32)],
+        scratch_shapes=scratch,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret_mode(),
+    )(y_t)

@@ -1,0 +1,246 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: parameters
+and inputs are ShapeDtypeStructs, ``jit(...).lower(...).compile()`` must
+succeed on the 256-chip single-pod mesh and the 512-chip two-pod mesh, and
+``memory_analysis`` must fit the 16 GiB/chip HBM of a v5e.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                # everything
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b \
+        --shape train_4k --mesh multi                           # one cell
+Outputs one JSON per cell under experiments/dryrun/.
+"""
+
+# The dry-run needs 512 placeholder devices; jax locks the device count at
+# first init, so this MUST precede every other import (including repro.*).
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp                                     # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, ALIASES, get_config        # noqa: E402
+from repro.configs.shapes import SHAPES, applicable         # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes  # noqa: E402
+from repro.launch.specs import (batch_shard_specs, cache_shard_specs,  # noqa: E402
+                                eval_cache, eval_params, input_specs,
+                                make_prefill_step, make_serve_step, named)
+from repro.models.zoo import build_model                    # noqa: E402
+from repro.optimizer import AdamWConfig, adamw_init         # noqa: E402
+from repro.runtime.train_loop import TrainConfig, make_train_step  # noqa: E402
+from repro.sharding import param_specs                      # noqa: E402
+
+HBM_BYTES = 16 * 1024 ** 3  # v5e
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _param_count(avals) -> int:
+    import math
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(avals))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               grad_mode: str = "baseline", save_text: bool = False,
+               return_compiled: bool = False, step_overrides=None):
+    """Lower+compile one cell; returns the result record.
+
+    ``step_overrides``: optional dict tweaking the step construction
+    (used by the perf hillclimb): {"grad_accum": int, "remat": bool}.
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = mesh_axis_sizes(mesh)
+    if (step_overrides or {}).get("remat") is not None:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, remat=step_overrides["remat"])
+    if shape.kind != "train":
+        # Serving deployments load bf16 weights (halves HBM; the f32
+        # master copies live only in the training job's optimizer).
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, param_dtype="bfloat16")
+    api = build_model(cfg)
+    params_avals = eval_params(api)
+    n_params = _param_count(params_avals)
+    # Very large models: bf16 moments + cross-pod ZeRO (DESIGN.md note).
+    moment_dtype = "bfloat16" if n_params > 100e9 else "float32"
+    if shape.kind == "train":
+        fsdp = ("pod", "data") if (n_params > 100e9 and multi_pod) else True
+    else:
+        # Serving: ZeRO param-sharding would re-all-gather every layer's
+        # weights per token batch over the data axis (§Perf P9); bf16
+        # weights sharded model-only fit every arch except llama4, which
+        # keeps data-sharding out of memory necessity.
+        fsdp = n_params > 100e9
+    fsdp = (step_overrides or {}).get("fsdp", fsdp)
+    strategy = (step_overrides or {}).get("strategy", "tp")
+    if strategy == "fsdp":
+        from repro.models.base import set_batch_axes
+        set_batch_axes(("pod", "data", "model"))
+    pspecs = param_specs(params_avals, cfg, axes, fsdp=fsdp,
+                         strategy=strategy)
+    psh = named(mesh, pspecs)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            # grad_accum=8: microbatching bounds remat-saved activations
+            # (measured: yi-6b@4k 49.5 GiB -> 6.4 GiB/device, §Perf).
+            accum = (step_overrides or {}).get("grad_accum", 8)
+            tcfg = TrainConfig(
+                grad_mode=grad_mode, grad_accum=accum,
+                cast_params_once=(step_overrides or {}).get(
+                    "cast_once", True),
+                adamw=AdamWConfig(moment_dtype=moment_dtype))
+            step = make_train_step(api, tcfg, mesh)
+            batch = input_specs(cfg, shape)
+            opt_avals = jax.eval_shape(
+                lambda p: adamw_init(p, tcfg.adamw), params_avals)
+            if grad_mode == "pla":
+                ef_avals = jax.tree.map(
+                    lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32),
+                    params_avals)
+                ef_sh = psh
+            else:
+                ef_avals = jax.ShapeDtypeStruct((), jnp.float32)
+                ef_sh = NamedSharding(mesh, P())
+            opt_sh = type(opt_avals)(
+                step=NamedSharding(mesh, P()), m=psh, v=psh)
+            bsh = named(mesh, batch_shard_specs(batch, axes, strategy))
+            step_idx = jax.ShapeDtypeStruct((), jnp.int32)
+            jitted = jax.jit(
+                step,
+                in_shardings=(psh, opt_sh, ef_sh, bsh,
+                              NamedSharding(mesh, P())),
+                out_shardings=(psh, opt_sh, ef_sh, None),
+                donate_argnums=(0, 1, 2))
+            lowered = jitted.lower(params_avals, opt_avals, ef_avals,
+                                   batch, step_idx)
+        elif shape.kind == "prefill":
+            fn = make_prefill_step(api)
+            batch = input_specs(cfg, shape)
+            bsh = named(mesh, batch_shard_specs(batch, axes, strategy))
+            jitted = jax.jit(fn, in_shardings=(psh, bsh))
+            lowered = jitted.lower(params_avals, batch)
+        else:  # decode
+            fn = make_serve_step(api)
+            batch = input_specs(cfg, shape)
+            cache_avals = eval_cache(api, batch, shape.seq_len)
+            csh = named(mesh,
+                        cache_shard_specs(cfg, cache_avals, axes))
+            bsh = named(mesh, batch_shard_specs(batch, axes, strategy))
+            jitted = jax.jit(fn, in_shardings=(psh, bsh["tokens"], csh),
+                             out_shardings=(None, csh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(params_avals, batch["tokens"],
+                                   cache_avals)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    mem_rec = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+    }
+    # total resident = args (+aliased outputs counted once) + temps
+    resident = (mem_rec["argument_bytes"] or 0) + (mem_rec["temp_bytes"] or 0)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "grad_mode": grad_mode if shape.kind == "train" else None,
+        "status": "ok",
+        "n_params": n_params,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem_rec,
+        "resident_bytes_per_device": resident,
+        "fits_hbm": bool(resident <= HBM_BYTES),
+        "flops": cost.get("flops") if isinstance(cost, dict) else None,
+        "bytes_accessed": cost.get("bytes accessed")
+        if isinstance(cost, dict) else None,
+    }
+    if strategy == "fsdp":  # restore the default for subsequent cells
+        from repro.models.base import set_batch_axes
+        set_batch_axes(("pod", "data"))
+    if save_text:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{rec['mesh']}"
+        with open(os.path.join(OUT_DIR, tag + ".hlo.txt"), "w") as f:
+            f.write(compiled.as_text())
+    if return_compiled:
+        return rec, compiled
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    choices=["all"] + list(ALIASES) + list(ARCHS))
+    ap.add_argument("--shape", default="all",
+                    choices=["all"] + list(SHAPES))
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--grad-mode", default="baseline",
+                    choices=["baseline", "pla"])
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else \
+        [ALIASES.get(args.arch, args.arch)]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch}_{shape}_{'2x16x16' if multi else '16x16'}"
+                try:
+                    rec = lower_cell(arch, shape, multi, args.grad_mode,
+                                     save_text=args.save_hlo)
+                except Exception as e:  # a failure here is a system bug
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if multi else "16x16",
+                           "status": "FAILED", "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                results.append(rec)
+                with open(os.path.join(OUT_DIR, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=2)
+                status = rec["status"]
+                extra = "" if status != "ok" else (
+                    f" params={rec['n_params']/1e9:.2f}B "
+                    f"resident={rec['resident_bytes_per_device']/2**30:.2f}GiB "
+                    f"fits={rec['fits_hbm']} compile={rec['compile_s']}s")
+                print(f"[{status:7}] {tag}{extra}", flush=True)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_fail = sum(r["status"] == "FAILED" for r in results)
+    print(f"\n{n_ok} ok / {n_skip} skipped / {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,258 @@
+"""Loop-aware FLOP / byte / collective totals from compiled HLO text.
+
+``compiled.cost_analysis()`` on this backend reports while-loop bodies
+*once* (verified: a 32-layer scan x 8-way accumulation shows ~256x fewer
+flops than 6ND).  This module parses the post-optimization HLO instead:
+
+1. split the module into named computations;
+2. build the call multiplier map — while bodies multiply by their
+   ``known_trip_count``, fusions/calls/reductions inherit the caller's
+   multiplier;
+3. total
+   - flops: every ``dot`` op = 2 * prod(output dims) * K (K from the lhs
+     contracting dims), times the multiplier;
+   - hbm bytes: top-level op outputs x2 (read+write proxy; fusion
+     internals excluded — post-fusion HLO keeps one output per fusion,
+     which is exactly the HBM-traffic granularity);
+   - collective operand bytes per op kind/axis, times multiplier.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "s64": 8, "u64": 8, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"([a-z]\d+|pred|bf16)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\s*{\s*"n":\s*"?(\d+)'
+                      r'|known_trip_count[^\d]{0,20}(\d+)')
+_CALL_RE = re.compile(r"(?:calls=|to_apply=|body=|condition=|branch_computations={)"
+                      r"%?([\w.\-]+)")
+_DOT_RE = re.compile(
+    r"=\s*(?:[a-z]\d+|bf16)\[([\d,]*)\][^\s]*\s+dot\(\s*"
+    r"(?:(?:[a-z]\d+|bf16)\[([\d,]*)\][^%]*)?%([\w.\-]+)"
+    r".*?lhs_contracting_dims={([\d,]*)}")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"
+                     r"((?:\([^)]*\))|(?:[a-z]\d+|bf16|pred)\[[\d,]*\]\S*)")
+_COLL_RE = re.compile(
+    r"=\s*(\([^=]*?\)|[a-z]\d+\[[^\]]*\]\S*|bf16\[[^\]]*\]\S*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\]"
+                          r"(?:T\(([\d,]+)\))?")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _dims(s: str) -> List[int]:
+    return [int(x) for x in s.split(",") if x] or [1]
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        for d in _dims(dims):
+            n *= d
+        total += n * b
+    return total
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    """Computation name -> body lines.
+
+    Header lines look like ``[ENTRY] %name (args...) -> type {`` where the
+    arg list may contain nested parens/braces (tuple types, layouts); we
+    identify headers by shape (top level, '->', trailing '{') and take the
+    name as the first %token.
+    """
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{") and "->" in stripped and \
+                    not line.startswith((" ", "\t")):
+                tok = stripped.split()[1] if stripped.startswith("ENTRY") \
+                    else stripped.split()[0]
+                name = tok.lstrip("%").split("(")[0].rstrip(",")
+                if name:
+                    cur = name
+                    comps[cur] = []
+            continue
+        if stripped == "}" or stripped.startswith("} "):
+            cur = None
+            continue
+        comps[cur].append(stripped)
+    return comps
+
+
+def _entry_name(hlo: str, comps: Dict[str, List[str]]) -> str:
+    m = re.search(r"^ENTRY %?([\w.\-]+)", hlo, re.M)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    # fallback: computation not referenced by any other
+    referenced = set()
+    for lines in comps.values():
+        for ln in lines:
+            for r in _CALL_RE.findall(ln):
+                referenced.add(r)
+    for name in comps:
+        if name not in referenced:
+            return name
+    return next(iter(comps))
+
+
+def multipliers(hlo: str, comps: Dict[str, List[str]]) -> Dict[str, float]:
+    """Execution-count multiplier per computation."""
+    entry = _entry_name(hlo, comps)
+    mult: Dict[str, float] = {name: 0.0 for name in comps}
+    mult[entry] = 1.0
+    # iterate to fixpoint (call graph is a DAG; few passes suffice)
+    for _ in range(len(comps)):
+        changed = False
+        for name, lines in comps.items():
+            m = mult.get(name, 0.0)
+            if m == 0.0:
+                continue
+            for ln in lines:
+                trip = None
+                wm = _WHILE_RE.search(ln)
+                if wm:
+                    tm = _TRIP_RE.search(ln)
+                    trip = int(tm.group(1) or tm.group(2)) if tm else 1
+                    body = wm.group(1)
+                    new = m * trip
+                    if new > mult.get(body, 0.0):
+                        mult[body] = new
+                        changed = True
+                    # condition runs trip+1 times; negligible, skip
+                    continue
+                for callee in _CALL_RE.findall(ln):
+                    if callee in mult and m > mult.get(callee, 0.0):
+                        mult[callee] = m
+                        changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _is_fusion_body(name: str) -> bool:
+    return "fused_computation" in name or name.startswith("region_") is False \
+        and "fused" in name
+
+
+def analyze_hlo(hlo: str) -> Dict:
+    comps = split_computations(hlo)
+    mult = multipliers(hlo, comps)
+    fusion_bodies = set()
+    for lines in comps.values():
+        for ln in lines:
+            fm = re.search(r"fusion\(.*?calls=%?([\w.\-]+)", ln)
+            if fm:
+                fusion_bodies.add(fm.group(1))
+
+    flops = 0.0
+    hbm_bytes = 0.0
+    colls: List[Dict] = []
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        top_level = name not in fusion_bodies
+        # local def -> type map (operands are printed without types)
+        defs: Dict[str, str] = {}
+        for ln in lines:
+            dd = _DEF_RE.match(ln)
+            if dd:
+                defs[dd.group(1)] = dd.group(2)
+        for ln in lines:
+            dm = _DOT_RE.search(ln)
+            if dm:
+                out_dims = _dims(dm.group(1))
+                if dm.group(2):  # inline lhs type
+                    lhs_dims = _dims(dm.group(2))
+                else:            # look up the lhs operand's definition
+                    lhs_t = defs.get(dm.group(3), "")
+                    sm = _SHAPE_RE.search(lhs_t)
+                    lhs_dims = _dims(sm.group(2)) if sm else [1]
+                k = 1
+                for ci in _dims(dm.group(4)):
+                    if ci < len(lhs_dims):
+                        k *= lhs_dims[ci]
+                n_out = 1
+                for d in out_dims:
+                    n_out *= d
+                flops += m * 2.0 * n_out * k
+            if top_level and "=" in ln:
+                # output bytes of data-moving top-level ops, x2 r+w proxy.
+                # Skip ops with no data movement: tuple plumbing, casts of
+                # layout metadata, parameters, while/conditional results
+                # (their 'output' is the whole carried state).
+                head = ln.split("=", 1)[1].strip()
+                parts = head.split(" ", 1)
+                opname = parts[1].split("(")[0].strip() if len(parts) > 1 \
+                    else ""
+                if opname not in ("get-tuple-element", "tuple", "parameter",
+                                  "bitcast", "constant", "while",
+                                  "conditional", "after-all",
+                                  "opt-barrier") and opname:
+                    hbm_bytes += m * 2.0 * _shape_bytes(parts[0])
+            cm = _COLL_RE.search(ln)
+            if cm and "-done" not in ln[:ln.find("(")]:
+                out_b = _shape_bytes(cm.group(1))
+                op = cm.group(2)
+                k, stride = _group_info(ln)
+                if op == "all-gather":
+                    operand = out_b // max(k, 1)
+                elif op == "reduce-scatter":
+                    operand = out_b * k
+                else:
+                    operand = out_b
+                if op == "all-reduce":
+                    moved = 2 * operand * (k - 1) / max(k, 1)
+                elif op in ("all-gather", "reduce-scatter"):
+                    moved = operand * (k - 1)
+                elif op == "all-to-all":
+                    moved = operand * (k - 1) / max(k, 1)
+                else:
+                    moved = operand
+                colls.append({"op": op, "operand_bytes": m * operand,
+                              "moved_bytes": m * moved, "group": k,
+                              "axis": _axis_of(stride)})
+    return {"flops": flops, "hbm_bytes": hbm_bytes, "collectives": colls}
+
+
+def _group_info(line: str) -> Tuple[int, int]:
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        group_size = int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        perm = m.group(4)
+        if perm:
+            p = [int(x) for x in perm.split(",")]
+            tail = 1
+            for ax in range(p[-1] + 1, len(dims)):
+                tail *= dims[ax]
+            return group_size, tail
+        return group_size, 1
+    m = _GROUPS_LIST.search(line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",") if x.strip()]
+        if len(ids) >= 2:
+            return len(ids), ids[1] - ids[0]
+        return max(len(ids), 1), 1
+    return 1, 1
+
+
+def _axis_of(stride: int) -> str:
+    return {1: "model", 16: "data", 256: "pod"}.get(stride,
+                                                    f"stride{stride}")

@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+A *function*, not a module-level constant: importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before any jax
+device initialization).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 chips per pod (v5e); two pods when ``multi_pod``."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_axis_sizes(mesh: jax.sharding.Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,291 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+No hardware here (CPU-only container), so instead of wall-clock MFU we
+derive the three roofline *terms* per (arch x shape) on the single-pod
+mesh, from the per-device partitioned HLO:
+
+  compute_s    = device_flops / PEAK_FLOPS
+  memory_s     = device_bytes_accessed / HBM_BW
+  collective_s = device_collective_operand_bytes / LINK_BW
+
+``cost_analysis()`` supplies flops / bytes-accessed of the per-device
+module (loop bodies multiplied by trip counts).  Collective bytes come
+from an HLO-text pass: for every all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute we reconstruct the *operand* bytes from
+the printed output shape and the replica-group size, classify the mesh
+axis by the device-id stride inside the groups, and also report a
+ring-algorithm refinement (2(k-1)/k for all-reduce etc.).
+
+MODEL_FLOPS uses the 6ND (train) / 2ND (inference) convention with
+non-embedding (active, for MoE) parameters, so the ratio
+MODEL_FLOPS / HLO_FLOPS exposes remat/dispatch overheads.
+"""
+
+# Must precede jax device init (see dryrun.py).
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse    # noqa: E402
+import json        # noqa: E402
+import re          # noqa: E402
+from typing import Dict, List   # noqa: E402
+
+import numpy as np              # noqa: E402
+
+from repro.configs import ARCHS, ALIASES, get_config   # noqa: E402
+from repro.configs.shapes import SHAPES, applicable    # noqa: E402
+from repro.launch.dryrun import lower_cell, OUT_DIR    # noqa: E402
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # B/s
+LINK_BW = 50e9             # B/s per ICI link
+
+ROOF_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "experiments", "roofline")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "s64": 8, "u64": 8}
+
+_COLL_RE = re.compile(
+    r"(\w+\[[^\]]*\][^=]*?)?=\s*(?:\([^)]*\)\s*)?"
+    r"(?:(\w[\w.\-]*)\s*=\s*)?", re.X)
+
+_OP_LINE = re.compile(
+    r"=\s*(?P<otype>\([^=]*?\)|[a-z0-9]+\[[^\]]*\]\S*)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+
+_GROUPS = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\]"
+                          r"(?:T\(([\d,]+)\))?")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(type_str):
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def _group_info(line: str):
+    """(group_size, stride) from replica_groups (list or iota form)."""
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        n_groups, group_size = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        perm = m.group(4)
+        if perm:
+            # iota [G,S]<=[dims]T(perm): stride = product of dims after
+            # the permuted leading dims; approximate: stride of the last
+            # permuted axis
+            p = [int(x) for x in perm.split(",")]
+            tail = 1
+            for ax in range(p[-1] + 1, len(dims)):
+                tail *= dims[ax]
+            return group_size, tail
+        return group_size, 1
+    m = _GROUPS.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{}")
+        ids = [int(x) for x in first.split(",") if x.strip()]
+        if len(ids) >= 2:
+            return len(ids), ids[1] - ids[0]
+        return max(len(ids), 1), 1
+    return 1, 1
+
+
+def _axis_of(stride: int, group_size: int, multi_pod: bool) -> str:
+    """Map (stride) to a mesh axis for meshes (pod=2, data=16, model=16)."""
+    if stride == 1:
+        return "model"
+    if stride == 16:
+        return "data"
+    if stride == 256:
+        return "pod"
+    return f"stride{stride}"
+
+
+def parse_collectives(hlo: str, multi_pod: bool) -> List[Dict]:
+    """Per-collective records: op, operand bytes (per device), axis."""
+    out = []
+    for line in hlo.splitlines():
+        m = _OP_LINE.search(line)
+        if m is None:
+            continue
+        if "-done" in line.split("=", 1)[-1][:60]:
+            continue
+        op = m.group("op")
+        out_bytes = _shape_bytes(m.group("otype"))
+        k, stride = _group_info(line)
+        if op == "all-gather":
+            operand = out_bytes // max(k, 1)
+        elif op == "reduce-scatter":
+            operand = out_bytes * k
+        else:
+            operand = out_bytes
+        # ring-algorithm bytes actually moved per device
+        if op == "all-reduce":
+            moved = 2 * operand * (k - 1) / max(k, 1)
+        elif op in ("all-gather", "reduce-scatter"):
+            moved = operand * (k - 1)  # per device receives (k-1) shards
+        elif op == "all-to-all":
+            moved = operand * (k - 1) / max(k, 1)
+        else:  # collective-permute
+            moved = operand
+        out.append({"op": op, "operand_bytes": operand,
+                    "moved_bytes": moved, "group": k,
+                    "axis": _axis_of(stride, k, multi_pod)})
+    return out
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    # non-embedding params; MoE: active experts only
+    D, L = cfg.d_model, cfg.n_layers
+    hd, H, KH = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    if cfg.family == "ssm":
+        d_in = cfg.ssm_expand * D
+        Nl = D * (2 * d_in + 2 * cfg.ssm_state
+                  + d_in // cfg.ssm_head_dim) + d_in * D
+    else:
+        attn = D * hd * (H + 2 * KH) + H * hd * D
+        if cfg.family == "moe":
+            n_moe = L // cfg.moe_interleave
+            n_dense = L - n_moe
+            moe_ff = 3 * D * cfg.ffe * cfg.top_k \
+                + (3 * D * cfg.ffe if cfg.shared_expert else 0)
+            dense_ff = 3 * D * cfg.d_ff
+            Nl = attn + (n_moe * moe_ff + n_dense * dense_ff) / L
+        elif cfg.family == "hybrid":
+            W = cfg.rnn_width or D
+            n_att = L // cfg.hybrid_period
+            rec = 3 * D * W + 2 * W * W
+            Nl = (n_att * attn + (L - n_att) * rec) / L + 3 * D * cfg.d_ff
+        else:
+            Nl = attn + 3 * D * cfg.d_ff
+    N = Nl * L
+    if cfg.family == "encdec":
+        N *= 2  # encoder + decoder stacks (cross-attn approx.)
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * N * tokens
+    if shape.kind == "prefill":
+        return 2.0 * N * tokens
+    return 2.0 * N * shape.global_batch  # decode: one token per request
+
+
+def analyze(arch: str, shape_name: str, multi_pod: bool = False,
+            grad_mode: str = "baseline", step_overrides=None) -> Dict:
+    cfg = get_config(arch)
+    ok, why = applicable(cfg, shape_name)
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                "status": "skipped", "reason": why}
+    rec, compiled = lower_cell(arch, shape_name, multi_pod, grad_mode,
+                               return_compiled=True,
+                               step_overrides=step_overrides)
+    hlo = compiled.as_text()
+    # Loop-aware totals from the HLO itself: cost_analysis() on this
+    # backend does NOT scale while-loop bodies by trip count (verified —
+    # a 32-layer scan x8 accum shows ~256x fewer flops than 6ND), so we
+    # parse known_trip_count and multiply (launch/hlo_stats.py).
+    from repro.launch.hlo_stats import analyze_hlo
+    stats = analyze_hlo(hlo)
+    colls = stats["collectives"]
+    dev_flops = stats["flops"]
+    dev_bytes = stats["hbm_bytes"]
+    coll_operand = sum(c["operand_bytes"] for c in colls)
+    coll_moved = sum(c["moved_bytes"] for c in colls)
+    by_axis: Dict[str, float] = {}
+    for c in colls:
+        by_axis[c["axis"]] = by_axis.get(c["axis"], 0) + c["moved_bytes"]
+    by_op: Dict[str, float] = {}
+    for c in colls:
+        by_op[c["op"]] = by_op.get(c["op"], 0) + c["moved_bytes"]
+
+    compute_s = dev_flops / PEAK_FLOPS
+    memory_s = dev_bytes / HBM_BW
+    coll_s = coll_operand / LINK_BW           # brief's primary formula
+    coll_ring_s = coll_moved / LINK_BW        # ring refinement
+    chips = 512 if multi_pod else 256
+    mf = model_flops(arch, shape_name)
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", coll_ring_s), key=lambda t: t[1])[0]
+    bound = max(compute_s, memory_s, coll_ring_s)
+    out = {
+        **{k: rec[k] for k in ("arch", "shape", "mesh", "kind", "status",
+                               "n_params", "compile_s",
+                               "resident_bytes_per_device", "fits_hbm")},
+        "device_flops": dev_flops,
+        "device_bytes": dev_bytes,
+        "collective_operand_bytes": coll_operand,
+        "collective_moved_bytes": coll_moved,
+        "collective_by_axis": by_axis,
+        "collective_by_op": by_op,
+        "n_collectives": len(colls),
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "collective_ring_s": coll_ring_s,
+        "dominant": dominant,
+        "model_flops_global": mf,
+        "model_flops_per_device": mf / chips,
+        "useful_flop_ratio": (mf / chips) / dev_flops if dev_flops else None,
+        "roofline_fraction": ((mf / chips) / PEAK_FLOPS) / bound
+        if bound > 0 else None,
+    }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--grad-mode", default="baseline")
+    args = ap.parse_args()
+    archs = list(ARCHS) if args.arch == "all" else \
+        [ALIASES.get(args.arch, args.arch)]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    os.makedirs(ROOF_DIR, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            tag = f"{arch}_{shape}_{args.mesh}_{args.grad_mode}"
+            try:
+                rec = analyze(arch, shape, args.mesh == "multi",
+                              args.grad_mode)
+            except Exception as e:
+                import traceback
+                rec = {"arch": arch, "shape": shape, "status": "FAILED",
+                       "error": repr(e),
+                       "trace": traceback.format_exc()[-1500:]}
+            with open(os.path.join(ROOF_DIR, tag + ".json"), "w") as f:
+                json.dump(rec, f, indent=2)
+            if rec["status"] == "ok":
+                print(f"{tag}: compute={rec['compute_s']*1e3:.1f}ms "
+                      f"memory={rec['memory_s']*1e3:.1f}ms "
+                      f"coll(ring)={rec['collective_ring_s']*1e3:.1f}ms "
+                      f"dominant={rec['dominant']} "
+                      f"roofline_frac={rec['roofline_fraction']:.3f}",
+                      flush=True)
+            else:
+                print(f"{tag}: {rec['status']} "
+                      f"{rec.get('reason', rec.get('error', ''))}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,220 @@
+"""ShapeDtypeStruct input stand-ins + sharding specs per (arch x shape).
+
+Everything here is allocation-free: parameters come from
+``jax.eval_shape(api.init, ...)``, inputs are ShapeDtypeStructs, and cache
+structures are ``eval_shape`` of the cache constructors — the dry-run
+lowers and compiles full-size programs without touching device memory.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.base import ModelConfig
+from repro.models.zoo import ModelAPI
+
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Model inputs for one cell, as ShapeDtypeStructs.
+
+    For ``train``/``prefill``: the full token batch (+ modality stubs).
+    For ``decode``: a single-token batch; the KV/state cache is built
+    separately (see :func:`cache_specs`).
+    """
+    B, T = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        toks = _sds((B, 1), I32)
+    else:
+        toks = _sds((B, T), I32)
+    batch: Dict[str, Any] = {"tokens": toks}
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        batch["mrope_positions"] = _sds((B, 3, T), I32)
+        batch["vision_embed"] = _sds((B, T, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def _bd(mesh_axes: Dict[str, int], size: int, strategy: str = "tp"):
+    """Batch sharding, divisibility-aware.  The fsdp strategy also spreads
+    the batch over the model axis (no feature sharding there)."""
+    names = ("pod", "data", "model") if strategy == "fsdp" else \
+        ("pod", "data")
+    axes = []
+    prod = 1
+    for a in names:
+        s = mesh_axes.get(a, 1)
+        if s > 1 and size % (prod * s) == 0:
+            axes.append(a)
+            prod *= s
+    return tuple(axes) if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def _model_dim(dim: int, mesh_axes) -> bool:
+    m = mesh_axes.get("model", 1)
+    return m > 1 and dim % m == 0
+
+
+def batch_shard_specs(batch, mesh_axes, strategy: str = "tp") -> Any:
+    def one(x):
+        return P(_bd(mesh_axes, x.shape[0], strategy),
+                 *([None] * (x.ndim - 1)))
+    return jax.tree.map(one, batch)
+
+
+# ---------------------------------------------------------------------------
+# Cache specs per family
+# ---------------------------------------------------------------------------
+
+def _kv_spec(shape, mesh_axes, batch_axis: int):
+    """(…, B, T, KH, hd): B over (pod,data); the *time* dim over model
+    (flash-decoding style split-KV: scores stay tiny per shard and the
+    softmax reduces with scalar-sized psums).  Falls back to KH, then hd,
+    when T doesn't divide (e.g. whisper's 1500-frame cross KV)."""
+    spec = [None] * len(shape)
+    spec[batch_axis] = _bd(mesh_axes, shape[batch_axis])
+    t_dim, kh, hd = shape[-3], shape[-2], shape[-1]
+    if _model_dim(t_dim, mesh_axes):
+        spec[-3] = "model"
+    elif _model_dim(kh, mesh_axes):
+        spec[-2] = "model"
+    elif _model_dim(hd, mesh_axes):
+        spec[-1] = "model"
+    return P(*spec)
+
+
+def cache_shard_specs(cfg: ModelConfig, cache, mesh_axes) -> Any:
+    fam = cfg.family
+
+    if fam in ("dense", "vlm"):
+        return type(cache)(
+            k=_kv_spec(cache.k.shape, mesh_axes, 1),
+            v=_kv_spec(cache.v.shape, mesh_axes, 1),
+            length=P())
+    if fam == "moe":
+        return type(cache)(
+            k=_kv_spec(cache.k.shape, mesh_axes, 2),
+            v=_kv_spec(cache.v.shape, mesh_axes, 2),
+            length=P())
+    if fam == "encdec":
+        return type(cache)(
+            k=_kv_spec(cache.k.shape, mesh_axes, 1),
+            v=_kv_spec(cache.v.shape, mesh_axes, 1),
+            xk=_kv_spec(cache.xk.shape, mesh_axes, 1),
+            xv=_kv_spec(cache.xv.shape, mesh_axes, 1),
+            length=P())
+    if fam == "hybrid":
+        def wspec(shape, baxis):  # (..., B, ..., W): W over model
+            spec = [None] * len(shape)
+            spec[baxis] = _bd(mesh_axes, shape[baxis])
+            if _model_dim(shape[-1], mesh_axes):
+                spec[-1] = "model"
+            return P(*spec)
+        return type(cache)(
+            rec_h=wspec(cache.rec_h.shape, 2),
+            rec_conv=wspec(cache.rec_conv.shape, 2),
+            ring_k=_kv_spec(cache.ring_k.shape, mesh_axes, 1),
+            ring_v=_kv_spec(cache.ring_v.shape, mesh_axes, 1),
+            tail_h=wspec(cache.tail_h.shape, 1),
+            tail_conv=wspec(cache.tail_conv.shape, 1),
+            pos=P())
+    if fam == "ssm":
+        def sspec(shape, baxis, mdim):
+            spec = [None] * len(shape)
+            spec[baxis] = _bd(mesh_axes, shape[baxis])
+            if _model_dim(shape[mdim], mesh_axes):
+                spec[mdim] = "model"
+            return P(*spec)
+        return type(cache)(
+            state=sspec(cache.state.shape, 1, 2),   # H over model
+            conv=sspec(cache.conv.shape, 1, 3),     # conv channels
+            pos=P())
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# Step builders per shape kind
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(api: ModelAPI):
+    """Forward pass producing last-position logits (serving prefill)."""
+    cfg = api.cfg
+
+    def prefill(params, batch):
+        # last_only: the hidden state is sliced to the final position
+        # *before* the unembedding (computing 32k x vocab logits and
+        # discarding all but one row costs GiBs per device).
+        from repro.models import (mamba2, moe_lm, rglru, transformer,
+                                  whisper)
+        if cfg.family in ("dense",):
+            logits = transformer.forward(params, batch["tokens"], cfg,
+                                         remat=False, last_only=True)
+        elif cfg.family == "vlm":
+            logits = transformer.forward(
+                params, batch["tokens"], cfg, remat=False, last_only=True,
+                mrope_positions=batch["mrope_positions"],
+                extra_embed=batch.get("vision_embed"))
+        elif cfg.family == "moe":
+            logits, _ = moe_lm.forward(params, batch["tokens"], cfg,
+                                       remat=False, last_only=True)
+        elif cfg.family == "hybrid":
+            logits = rglru.forward(params, batch["tokens"], cfg,
+                                   remat=False, last_only=True)
+        elif cfg.family == "ssm":
+            logits = mamba2.forward(params, batch["tokens"], cfg,
+                                    remat=False, last_only=True)
+        elif cfg.family == "encdec":
+            logits = whisper.forward(params, batch, cfg, remat=False,
+                                     last_only=True)
+        return logits
+
+    return prefill
+
+
+def make_serve_step(api: ModelAPI):
+    def serve(params, token, cache):
+        return api.decode(params, token, cache)
+    return serve
+
+
+def eval_params(api: ModelAPI):
+    return jax.eval_shape(api.init, jax.random.PRNGKey(0))
+
+
+def eval_cache(api: ModelAPI, batch_avals, max_len: int):
+    params_avals = eval_params(api)
+    return jax.eval_shape(
+        lambda p, b: api.make_cache(p, b, max_len), params_avals,
+        batch_avals)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def demo_batch(cfg: ModelConfig, B: int, T: int, key) -> Dict[str, Any]:
+    """Concrete random batch matching :func:`input_specs` (tests/examples)."""
+    k1, k2 = jax.random.split(key)
+    batch: Dict[str, Any] = {
+        "tokens": jax.random.randint(k1, (B, T), 1, cfg.vocab)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            k2, (B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        pos = jnp.broadcast_to(jnp.arange(T, dtype=I32), (B, 3, T))
+        batch["mrope_positions"] = pos
+        batch["vision_embed"] = 0.01 * jax.random.normal(
+            k2, (B, T, cfg.d_model), jnp.bfloat16)
+    return batch

@@ -1,0 +1,186 @@
+"""Model configuration and functional-parameter plumbing (no flax).
+
+Params are nested dicts of jnp arrays; per-layer parameters are *stacked*
+along a leading layer axis and the forward pass scans over layers
+(``jax.lax.scan``) — essential for compile time at 48-layer × 40-cell
+dry-runs.  Sharding is expressed two ways:
+
+- activations: ``shard(x, *axes)`` inserts a ``with_sharding_constraint``
+  when a mesh is active (no-op otherwise, so CPU smoke tests just run);
+- parameters: :func:`partition.param_specs` maps parameter paths to
+  PartitionSpecs by rule (sharding/partition.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"      # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: Optional[int] = None     # default d_model // n_heads
+    d_ff: int = 1024
+    vocab: int = 1000
+    act: str = "silu"                  # silu (SwiGLU) | gelu (GeGLU)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    attn_window: Optional[int] = None  # local attention window (None=global)
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 1
+    d_ff_expert: Optional[int] = None  # defaults to d_ff
+    moe_interleave: int = 1            # every k-th layer is MoE
+    shared_expert: bool = False
+    capacity_factor: float = 1.25
+
+    # Hybrid (RG-LRU) — pattern: (period-1) recurrent then 1 attention
+    hybrid_period: int = 3
+    rnn_width: Optional[int] = None
+    conv_width: int = 4
+
+    # SSM (Mamba-2 / SSD)
+    ssm_state: int = 128
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 128
+
+    # Encoder-decoder (whisper)
+    n_enc_layers: int = 0
+    enc_seq: int = 1500                # stub frontend output length
+    max_pos: int = 32768               # learned decoder position table
+
+    # VLM (qwen2-vl)
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+
+    # Numerics / training
+    dtype: str = "bfloat16"            # activation/compute dtype
+    param_dtype: str = "float32"
+    remat: bool = True                 # per-layer rematerialization
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding rows padded to a multiple of 128 so the vocab dim
+        shards evenly on any power-of-two TP axis (granite's 49155 /
+        whisper's 51865 / mamba2's 50280 would otherwise replicate the
+        logits — measured 12.8 GiB/device at 32k, see EXPERIMENTS.md).
+        Padded logit columns are masked to -inf."""
+        return -(-self.vocab // 128) * 128
+
+    @property
+    def ffe(self) -> int:
+        return self.d_ff_expert or self.d_ff
+
+    @property
+    def adtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+
+# Mesh axes carrying the batch dimension.  The TP strategy (default) puts
+# batch on (pod, data) and features on model; the FSDP strategy (§Perf —
+# the right choice for <=10B training on v5e) spreads batch over
+# (pod, data, model) and never shards features.  Models reference the
+# sentinel "batch"; the launcher switches strategies via set_batch_axes.
+_BATCH_AXES = ("pod", "data")
+
+
+def set_batch_axes(axes) -> None:
+    global _BATCH_AXES
+    _BATCH_AXES = tuple(axes)
+
+
+def get_batch_axes():
+    return _BATCH_AXES
+
+
+def shard(x: jax.Array, *axes) -> jax.Array:
+    """Apply a sharding constraint if a mesh is active; else no-op.
+
+    ``axes`` entries are mesh-axis names (or tuples of them), the sentinel
+    ``"batch"`` (resolves via :func:`set_batch_axes`), or None — one per
+    array dim (trailing dims may be omitted).  Axes that are absent from
+    the active mesh, that do not divide the dim evenly (GSPMD would
+    silently pad), or that were already consumed by an earlier dim are
+    dropped.
+    """
+    env_mesh = jax.sharding.get_abstract_mesh()
+    if env_mesh is None or not env_mesh.shape:  # no mesh: CPU smoke path
+        return x
+    # Only Auto axes are constrainable here; Manual axes (e.g. 'pod'
+    # inside the shard_map of the compressed-gradient path) must not
+    # appear in with_sharding_constraint specs.
+    auto = jax.sharding.AxisType.Auto
+    sizes = {n: s for (n, s), t in zip(env_mesh.shape.items(),
+                                       env_mesh.axis_types)
+             if t == auto}
+    spec = []
+    used = set()
+    for dim, ax in zip(x.shape, axes):
+        if ax is None:
+            spec.append(None)
+            continue
+        if ax == "batch":
+            cand = _BATCH_AXES
+        else:
+            cand = ax if isinstance(ax, tuple) else (ax,)
+        keep = []
+        prod = 1
+        for a in cand:
+            s = sizes.get(a, 0)
+            if a not in used and s >= 1 and dim % (prod * s) == 0:
+                keep.append(a)
+                used.add(a)
+                prod *= s
+        spec.append(tuple(keep) if len(keep) > 1
+                    else (keep[0] if keep else None))
+    spec += [None] * (x.ndim - len(spec))
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def trunc_normal(key, shape, scale, dtype):
+    """He/Glorot-style truncated normal init."""
+    std = math.sqrt(scale)
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)
+            ).astype(dtype)
+
+
+def dense_init(key, in_dim, out_shape, dtype):
+    """Fan-in scaled init for a projection in->out (out may be multi-dim)."""
+    if isinstance(out_shape, int):
+        out_shape = (out_shape,)
+    return trunc_normal(key, (in_dim, *out_shape), 1.0 / in_dim, dtype)
+
+
+def stacked(key, n, fn):
+    """Initialize ``n`` stacked layer params with ``fn(key_i)``.
+
+    Returns a pytree whose leaves carry a leading (n, ...) layer axis, for
+    ``lax.scan`` over layers.
+    """
+    keys = jax.random.split(key, n)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *[fn(k) for k in keys])

@@ -1,0 +1,366 @@
+"""Shared pure-JAX neural layers: RMSNorm, RoPE/M-RoPE, gated MLPs, and a
+memory-bounded (flash-style) chunked attention.
+
+All layers are functions ``(params, inputs) -> outputs`` with a matching
+``init_*``; activations carry explicit sharding hints via ``base.shard``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig, dense_init, shard, trunc_normal
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim, dtype):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (+ multimodal M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, T, H, D); positions: (B, T) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)                   # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B, T, D/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: Tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.  positions: (B, 3, T) (t/h/w indices).
+
+    The D/2 frequency slots are split into ``sections`` (t, h, w); each
+    section rotates by its own position channel.
+    """
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                              # (D/2,)
+    ang_all = positions[..., None].astype(jnp.float32) * freqs  # (B,3,T,D/2)
+    # Frequency slot -> section (t/h/w) selector, combined via one-hot.
+    sel = jnp.concatenate([jnp.full((s,), si, jnp.int32)
+                           for si, s in enumerate(sections)])  # (D/2,)
+    ang = jnp.einsum("bstf,sf->btf", ang_all,
+                     jax.nn.one_hot(sel, 3, dtype=jnp.float32).T)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, cfg.d_model, d_ff, cfg.pdtype),
+        "wg": dense_init(k2, cfg.d_model, d_ff, cfg.pdtype),
+        "wo": dense_init(k3, d_ff, cfg.d_model, cfg.pdtype),
+    }
+
+
+def mlp(p, x, act: str):
+    dt = x.dtype
+    h = jnp.einsum("btd,df->btf", x, p["wi"].astype(dt))
+    g = jnp.einsum("btd,df->btf", x, p["wg"].astype(dt))
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    h = shard(h * g, "batch", None, "model")
+    return jnp.einsum("btf,fd->btd", h, p["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA) with chunked online-softmax for long sequences
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    hd = cfg.hd
+    return {
+        "wq": dense_init(kq, cfg.d_model, (cfg.n_heads, hd), cfg.pdtype),
+        "wk": dense_init(kk, cfg.d_model, (cfg.n_kv_heads, hd), cfg.pdtype),
+        "wv": dense_init(kv, cfg.d_model, (cfg.n_kv_heads, hd), cfg.pdtype),
+        "wo": trunc_normal(ko, (cfg.n_heads, hd, cfg.d_model),
+                           1.0 / (cfg.n_heads * hd), cfg.pdtype),
+    }
+
+
+def _chunked_attn(q, k, v, *, causal: bool, window: Optional[int],
+                  q_chunk: int, kv_chunk: int,
+                  q_offset: int = 0) -> jax.Array:
+    """Online-softmax attention: q (B,Tq,H,D), k/v (B,Tk,KH,D) -> (B,Tq,H,D).
+
+    Never materializes the full (Tq, Tk) score matrix: scans KV chunks per
+    query chunk carrying running (max, denom, acc) — the flash-attention
+    recurrence, expressed in pure JAX (XLA fuses it well on TPU; the
+    paper's own kernels are the PLA ones, see DESIGN.md).
+    ``q_offset`` is the absolute position of q[0] (for decode).
+    """
+    B, Tq, H, D = q.shape
+    Tk, KH = k.shape[1], k.shape[2]
+    G = H // KH                        # query groups per kv head
+    scale = 1.0 / math.sqrt(D)
+
+    nq = -(-Tq // q_chunk)
+    nk = -(-Tk // kv_chunk)
+    Tq_p, Tk_p = nq * q_chunk, nk * kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, Tq_p - Tq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Tk_p - Tk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Tk_p - Tk), (0, 0), (0, 0)))
+    # (B, nq, qc, KH, G, D) — group queries by their kv head
+    qg = qp.reshape(B, nq, q_chunk, KH, G, D)
+    kg = kp.reshape(B, nk, kv_chunk, KH, D)
+    vg = vp.reshape(B, nk, kv_chunk, KH, D)
+
+    q_pos_base = jnp.arange(q_chunk, dtype=jnp.int32)
+    k_pos_base = jnp.arange(kv_chunk, dtype=jnp.int32)
+
+    def q_block(qi, qb):
+        # qb: (B, qc, KH, G, D)
+        q_pos = q_offset + qi * q_chunk + q_pos_base
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, kb, vb = inp
+            k_pos = ki * kv_chunk + k_pos_base
+            s = jnp.einsum("bqkgd,bckd->bqgkc", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            # mask: causal + locality + kv padding
+            mask = k_pos[None, :] <= q_pos[:, None] if causal else \
+                jnp.ones((q_chunk, kv_chunk), bool)
+            if window is not None:
+                mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+            mask = mask & (k_pos[None, :] < Tk)
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqgkc,bckd->bqgkd", p, vb.astype(jnp.float32))
+            return (m_new, l_new, acc_new), 0
+
+        m0 = jnp.full((B, q_chunk, G, KH), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, q_chunk, G, KH), jnp.float32)
+        a0 = jnp.zeros((B, q_chunk, G, KH, D), jnp.float32)
+        ks = jnp.arange(nk, dtype=jnp.int32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (ks, jnp.moveaxis(kg, 1, 0), jnp.moveaxis(vg, 1, 0)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # (B, qc, G, KH, D) -> (B, qc, KH, G, D): head h = kh * G + g
+        return jnp.swapaxes(out, 2, 3)
+
+    outs = jax.lax.map(lambda args: q_block(*args),
+                       (jnp.arange(nq, dtype=jnp.int32),
+                        jnp.moveaxis(qg, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1)                 # (B, nq, qc, G, KH, D)
+    out = out.reshape(B, Tq_p, KH, G, D)[:, :Tq]
+    return out.reshape(B, Tq, KH * G, D).astype(q.dtype)
+
+
+def attention(p, x, positions, cfg: ModelConfig, *, causal=True,
+              window=None, mrope_positions=None, kv_override=None,
+              q_chunk=512, kv_chunk=1024):
+    """Full attention layer (projections + RoPE + chunked attention).
+
+    ``kv_override``: (k, v) already-projected tensors for cross-attention.
+    Returns (out, (k, v)) so callers can build KV caches.
+    """
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+    if kv_override is None:
+        k = jnp.einsum("btd,dhk->bthk", x, p["wk"].astype(dt))
+        v = jnp.einsum("btd,dhk->bthk", x, p["wv"].astype(dt))
+        if mrope_positions is not None:
+            q = apply_mrope(q, mrope_positions, cfg.rope_theta,
+                            cfg.mrope_sections)
+            k = apply_mrope(k, mrope_positions, cfg.rope_theta,
+                            cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = kv_override
+    q = shard(q, "batch", None, "model", None)
+    k = shard(k, "batch", None, "model", None)
+    v = shard(v, "batch", None, "model", None)
+    from .flash import flash_attention
+    o = flash_attention(q, k, v, causal, window,
+                        min(q_chunk, q.shape[1]),
+                        min(kv_chunk, k.shape[1]))
+    o = shard(o, "batch", None, "model", None)
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(dt))
+    return out, (k, v)
+
+
+def decode_attention(p, x, cache_k, cache_v, cache_len, cfg: ModelConfig,
+                     window=None, mrope_positions=None):
+    """Single-token decode: x (B, 1, D); cache (B, Tmax, KH, hd).
+
+    Returns (out, new_k_entry, new_v_entry).  The cache update itself is
+    done by the caller (dynamic_update_slice at cache_len).
+    """
+    dt = x.dtype
+    B = x.shape[0]
+    positions = jnp.full((B, 1), cache_len, jnp.int32)
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"].astype(dt))
+    if mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    kc = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                      (0, cache_len, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                      (0, cache_len, 0, 0))
+    Tmax, KH = kc.shape[1], kc.shape[2]
+    H = q.shape[2]
+    G = H // KH
+    qg = q.reshape(B, KH, G, cfg.hd)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, kc.astype(dt),
+                   preferred_element_type=jnp.float32)
+    s = s / math.sqrt(cfg.hd)
+    t_idx = jnp.arange(Tmax)
+    mask = t_idx <= cache_len
+    if window is not None:
+        mask = mask & (t_idx > cache_len - window)
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    # Attention probs cast to the cache dtype: einsum(w_f32, cache_bf16)
+    # would materialize a full f32 copy of the V cache (3 GiB/device on
+    # llama4 decode — measured); bf16 probs with f32 accumulation is the
+    # standard MXU recipe.
+    w = jax.nn.softmax(s, axis=-1).astype(vc.dtype)
+    o = jnp.einsum("bkgt,btkd->bkgd", w, vc,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, H, cfg.hd).astype(dt)
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(dt))
+    return out, kc, vc
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    Vp = cfg.vocab_padded
+    p = {"embed": trunc_normal(k1, (Vp, cfg.d_model), 1.0, cfg.pdtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(k2, cfg.d_model, Vp, cfg.pdtype)
+    return p
+
+
+def embed(p, tokens, cfg: ModelConfig):
+    x = p["embed"].astype(cfg.adtype)[tokens]
+    return shard(x, "batch", None, None)
+
+
+def chunked_softmax_xent(p, x, labels, cfg: ModelConfig,
+                         chunk: int = 32768):
+    """Cross-entropy fused with the unembedding, chunked over vocab.
+
+    Never materializes (B, T, V) logits — at gemma's 256k vocab those are
+    4.2 GiB f32 per device once the FSDP strategy keeps the vocab dim
+    unsharded (§Perf).  Online logsumexp over vocab chunks; the chunk body
+    is rematerialized so scan saves only the (B, T) carries.
+
+    x: (B, T, D) post-norm hiddens; labels: (B, T) int32.
+    Returns the masked mean NLL (labels > 0).
+    """
+    dt = x.dtype
+    # XLA's SPMD partitioner CHECK-fails on this einsum+scan pattern when
+    # the batch rides two mesh axes; re-shard the (small) hidden/labels to
+    # single-axis batch at the CE boundary.
+    x = shard(x, "data", None, None)
+    labels = shard(labels, "data", None)
+    emb = p["embed"]
+    w_un = None if cfg.tie_embeddings else p["unembed"]
+    Vp = cfg.vocab_padded
+    # number of chunks must divide Vp exactly (chunks are scan xs)
+    nb = max(1, -(-Vp // min(chunk, Vp)))
+    while Vp % nb:
+        nb += 1
+    chunk = Vp // nb
+    B, T, D = x.shape
+
+    def body(carry, inp):
+        m, s, gold = carry
+        ci, w_c = inp
+        c0 = ci * chunk
+        if cfg.tie_embeddings:
+            lg = jnp.einsum("btd,vd->btv", x, w_c.astype(dt),
+                            preferred_element_type=jnp.float32)
+        else:
+            lg = jnp.einsum("btd,dv->btv", x, w_c.astype(dt),
+                            preferred_element_type=jnp.float32)
+        col = c0 + jax.lax.broadcasted_iota(jnp.int32, lg.shape, 2)
+        lg = jnp.where(col < cfg.vocab, lg, NEG_INF)
+        m_new = jnp.maximum(m, lg.max(-1))
+        s = s * jnp.exp(m - m_new) + jnp.exp(lg - m_new[..., None]).sum(-1)
+        # Gold logit via masked reduction (a take_along_axis gather here
+        # trips an XLA SPMD partitioner CHECK under batch-over-model
+        # shardings; the where+sum form partitions cleanly).
+        g = jnp.sum(jnp.where(col == labels[..., None], lg, 0.0), axis=-1)
+        gold = gold + g
+        return (m_new, s, gold), None
+
+    # Chunks fed as scan xs (native leading-axis slicing; a dynamic_slice
+    # of the table inside the body trips an XLA SPMD CHECK under
+    # batch-over-model shardings).
+    if cfg.tie_embeddings:
+        w_chunks = emb.reshape(nb, chunk, D)
+    else:
+        w_chunks = jnp.moveaxis(w_un.reshape(D, nb, chunk), 1, 0)
+    init = (jnp.full((B, T), NEG_INF, jnp.float32),
+            jnp.zeros((B, T), jnp.float32),
+            jnp.zeros((B, T), jnp.float32))
+    (m, s, gold), _ = jax.lax.scan(
+        jax.checkpoint(body), init,
+        (jnp.arange(nb, dtype=jnp.int32), w_chunks))
+    lse = m + jnp.log(jnp.maximum(s, 1e-30))
+    mask = (labels > 0).astype(jnp.float32)
+    return ((lse - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def unembed(p, x, cfg: ModelConfig):
+    """Returns (B, T, vocab_padded) logits; padded columns are -inf."""
+    dt = x.dtype
+    w = (p["embed"].T if cfg.tie_embeddings else p["unembed"]).astype(dt)
+    logits = jnp.einsum("btd,dv->btv", x, w)
+    logits = shard(logits, "batch", None, "model")
+    if cfg.vocab_padded != cfg.vocab:
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        logits = jnp.where(col < cfg.vocab, logits,
+                           jnp.asarray(NEG_INF, logits.dtype))
+    return logits

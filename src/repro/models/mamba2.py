@@ -1,0 +1,241 @@
+"""Mamba-2 (SSD — state-space duality) language model.
+
+The SSD layer computes the selective-state-space recurrence in chunked
+form: intra-chunk interactions are dense (MXU-friendly) matmuls through a
+decay-masked attention-like kernel; inter-chunk interactions pass a
+(H, P, N) state through an exclusive scan over chunks — exactly the
+algorithm of Dao & Gu 2024 (arXiv:2405.21060), which is the TPU-friendly
+formulation of the Mamba recurrence.
+
+Decode is the pure recurrence: constant-size state, no KV cache — which is
+why this architecture runs the 500k-token decode shape (DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig, dense_init, shard, stacked, trunc_normal
+from .layers import init_embed, init_rmsnorm, embed, rmsnorm, unembed
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    return d_inner, H, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_ssd_layer(key, cfg: ModelConfig):
+    d_inner, H, P_, N = _dims(cfg)
+    cw = cfg.conv_width
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    conv_dim = d_inner + 2 * N  # conv over x, B, C
+    return {
+        "ln": init_rmsnorm(cfg.d_model, cfg.pdtype),
+        # in_proj -> [z (gate), x, B, C, dt]
+        "w_in": dense_init(k1, cfg.d_model,
+                           2 * d_inner + 2 * N + H, cfg.pdtype),
+        "conv": trunc_normal(k2, (cw, conv_dim), 1.0 / cw, cfg.pdtype),
+        "A_log": jnp.zeros((H,), jnp.float32) + jnp.log(
+            jnp.linspace(1.0, 16.0, H)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": init_rmsnorm(d_inner, cfg.pdtype),
+        "w_out": dense_init(k3, d_inner, cfg.d_model, cfg.pdtype),
+    }
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    ke, kl = jax.random.split(key)
+    return {
+        "tok": init_embed(ke, cfg),
+        "layers": stacked(kl, cfg.n_layers, lambda k: init_ssd_layer(k, cfg)),
+        "ln_f": init_rmsnorm(cfg.d_model, cfg.pdtype),
+    }
+
+
+def _segsum(x):
+    """Stable 'segment sum' producing the lower-triangular decay matrix.
+
+    x: (..., Q) -> (..., Q, Q) with out[i, j] = sum_{j < k <= i} x[k],
+    -inf above the diagonal.
+    """
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD core.  x: (b, T, H, P); dt: (b, T, H); A: (H,) (negative);
+    B, C: (b, T, N) (single group, broadcast over heads).
+
+    Returns y: (b, T, H, P).
+    """
+    b, T, H, P_ = x.shape
+    N = B.shape[-1]
+    Q = chunk
+    Tp = -(-T // Q) * Q
+    if Tp != T:  # pad with dt=0 steps: decay 1, zero contribution
+        pad = ((0, 0), (0, Tp - T)) + ((0, 0),) * (x.ndim - 2)
+        x = jnp.pad(x, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, Tp - T), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, Tp - T), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, Tp - T), (0, 0)))
+    T_out, T = T, Tp
+    nc = T // Q
+
+    dA = dt * A[None, None, :]                        # (b, T, H)
+    xb = (x * dt[..., None]).astype(jnp.float32)      # fold dt into x
+
+    # chunk views
+    xc = xb.reshape(b, nc, Q, H, P_)
+    dAc = dA.reshape(b, nc, Q, H)
+    Bc = B.reshape(b, nc, Q, N).astype(jnp.float32)
+    Cc = C.reshape(b, nc, Q, N).astype(jnp.float32)
+
+    # 1) intra-chunk (diagonal blocks): decay-masked quadratic form
+    L = jnp.exp(_segsum(dAc.transpose(0, 1, 3, 2)))   # (b, nc, H, Q, Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)    # (b, nc, Q, Q)
+    y_diag = jnp.einsum("bchqk,bcqk,bckhp->bcqhp",
+                        L, scores, xc)
+
+    # 2) chunk states: decayed sum of B x^T within each chunk
+    dA_cum = jnp.cumsum(dAc, axis=2)                  # (b, nc, Q, H)
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (b, nc, Q, H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn",
+                        Bc, decay_states, xc)         # (b, nc, H, P, N)
+
+    # 3) inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])        # (b, nc, H)
+
+    def scan_fn(s_prev, inp):
+        st, dec = inp
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, H, P_, N), jnp.float32)
+    _, states_prev = jax.lax.scan(
+        scan_fn, s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    states_prev = jnp.moveaxis(states_prev, 0, 1)     # (b, nc, H, P, N)
+
+    # 4) state -> output contribution with in-chunk decay
+    state_decay = jnp.exp(dA_cum)                     # (b, nc, Q, H)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                       Cc, states_prev, state_decay)
+
+    y = (y_diag + y_off).reshape(b, T, H, P_)
+    return y[:, :T_out]
+
+
+def ssd_layer(p, x, cfg: ModelConfig):
+    """Full SSD mixer layer (train/prefill). x: (B, T, D)."""
+    d_inner, H, P_, N = _dims(cfg)
+    dt_ = x.dtype
+    B_, T, _ = x.shape
+    h = rmsnorm(p["ln"], x, cfg.norm_eps)
+    zxbcdt = jnp.einsum("btd,de->bte", h, p["w_in"].astype(dt_))
+    z, xs, Bv, Cv, dt_raw = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1)
+    # causal depthwise conv over (x, B, C)
+    xbc = jnp.concatenate([xs, Bv, Cv], axis=-1)
+    cw = cfg.conv_width
+    xp = jnp.pad(xbc, ((0, 0), (cw - 1, 0), (0, 0)))
+    xbc = sum(xp[:, k:k + T] * p["conv"][k].astype(dt_) for k in range(cw))
+    xbc = jax.nn.silu(xbc)
+    xs, Bv, Cv = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])        # (B, T, H)
+    A = -jnp.exp(p["A_log"])                                   # (H,)
+    xh = xs.reshape(B_, T, H, P_)
+    y = ssd_chunked(xh, dt, A, Bv, Cv, cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B_, T, d_inner).astype(dt_)
+    y = shard(y, "batch", None, "model")
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return jnp.einsum("bte,ed->btd", y, p["w_out"].astype(dt_))
+
+
+def forward(params, tokens, cfg: ModelConfig, remat: bool = True,
+            last_only: bool = False, return_hidden: bool = False):
+    x = embed(params["tok"], tokens, cfg)
+
+    def body(lp, x):
+        return shard(x + ssd_layer(lp, x, cfg), "batch", None, None)
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(lambda c, lp: (body(lp, c), None), x,
+                        params["layers"])
+    if last_only:
+        x = x[:, -1:]
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if return_hidden:
+        return x
+    return unembed(params["tok"], x, cfg)
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array      # (L, B, H, P, N) f32
+    conv: jax.Array       # (L, B, cw-1, conv_dim)
+    pos: jax.Array
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int) -> SSMCache:
+    d_inner, H, P_, N = _dims(cfg)
+    conv_dim = d_inner + 2 * N
+    return SSMCache(
+        jnp.zeros((cfg.n_layers, batch, H, P_, N), jnp.float32),
+        jnp.zeros((cfg.n_layers, batch, cfg.conv_width - 1, conv_dim),
+                  cfg.adtype),
+        jnp.zeros((), jnp.int32))
+
+
+def decode_step(params, token, cache: SSMCache, cfg: ModelConfig):
+    d_inner, H, P_, N = _dims(cfg)
+    x = embed(params["tok"], token, cfg)
+    dt_ = x.dtype
+
+    def step(carry, inp):
+        x, = carry
+        lp, st, cv = inp
+        h = rmsnorm(lp["ln"], x, cfg.norm_eps)
+        zxbcdt = jnp.einsum("btd,de->bte", h, lp["w_in"].astype(dt_))[:, 0]
+        z, xs, Bv, Cv, dt_raw = jnp.split(
+            zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N,
+                     2 * d_inner + 2 * N], axis=-1)
+        xbc = jnp.concatenate([xs, Bv, Cv], axis=-1)
+        hist = jnp.concatenate([cv, xbc[:, None]], axis=1)
+        xbc = jnp.einsum("bkc,kc->bc", hist, lp["conv"].astype(dt_))
+        xbc = jax.nn.silu(xbc)
+        xs, Bv, Cv = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                             + lp["dt_bias"][None, :])         # (B, H)
+        A = -jnp.exp(lp["A_log"])
+        dA = jnp.exp(dt * A[None, :])                          # (B, H)
+        xh = xs.reshape(-1, H, P_).astype(jnp.float32)
+        Bf = Bv.astype(jnp.float32)
+        new_st = st * dA[..., None, None] + jnp.einsum(
+            "bhp,bn,bh->bhpn", xh, Bf, dt)
+        y = jnp.einsum("bn,bhpn->bhp", Cv.astype(jnp.float32), new_st)
+        y = y + xh * lp["D"][None, :, None]
+        y = y.reshape(-1, d_inner).astype(dt_)
+        y = rmsnorm(lp["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+        out = jnp.einsum("be,ed->bd", y, lp["w_out"].astype(dt_))
+        x = x + out[:, None]
+        return (x,), (new_st, hist[:, 1:])
+
+    (x,), (nst, ncv) = jax.lax.scan(step, (x,),
+                                    (params["layers"], cache.state,
+                                     cache.conv))
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed(params["tok"], x, cfg)
+    return logits, SSMCache(nst, ncv, cache.pos + 1)

@@ -1,0 +1,122 @@
+"""Mixture-of-Experts FFN with capacity-based sort dispatch (EP-shardable).
+
+Token routing uses the standard static-shape recipe: flatten tokens,
+argsort by expert assignment, pack into per-expert capacity buffers
+(dropping overflow), batched per-expert matmuls, then scatter back with
+gates.  Under the production mesh the expert axis is sharded over "model"
+(expert parallelism); XLA inserts the dispatch all-to-alls.
+
+Supports top-k routing (olmoe: 64e top-8) and interleaved MoE layers with
+an optional shared expert (llama4-maverick: 128e top-1, every 2nd layer,
+shared expert).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig, dense_init, shard
+
+
+def init_moe(key, cfg: ModelConfig):
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.ffe
+    return {
+        "router": dense_init(kr, D, E, jnp.float32),  # router kept in f32
+        "wi": dense_init(k1, D, (E, F), cfg.pdtype).transpose(1, 0, 2),
+        "wg": dense_init(k2, D, (E, F), cfg.pdtype).transpose(1, 0, 2),
+        "wo": dense_init(k3, F, (E, D), cfg.pdtype).transpose(1, 0, 2),
+    }
+
+
+def moe_ffn(p, x, cfg: ModelConfig, capacity: Optional[int] = None):
+    """x: (B, T, D) -> (B, T, D), plus aux load-balance loss.
+
+    Returns (out, aux_loss).
+    """
+    B, T, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    G = B * T
+    C = capacity or max(8, int(cfg.capacity_factor * G * K / E))
+    dt = x.dtype
+
+    xf = x.reshape(G, D)
+    logits = jnp.einsum("gd,de->ge", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # (G, E)
+    gate_vals, exp_idx = jax.lax.top_k(probs, K)                # (G, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                 # renorm
+
+    # Load-balance auxiliary loss (Switch-style).
+    me = probs.mean(axis=0)                                     # (E,)
+    ce = jax.nn.one_hot(exp_idx[:, 0], E, dtype=jnp.float32).mean(axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch into (E, C) capacity buffers ---------------
+    flat_exp = exp_idx.reshape(-1)                              # (G*K,)
+    flat_gate = gate_vals.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(G, dtype=jnp.int32), K)
+
+    order = jnp.argsort(flat_exp, stable=True)
+    s_exp = flat_exp[order]
+    s_tok = flat_tok[order]
+    s_gate = flat_gate[order]
+    # position of each routed token within its expert's queue
+    pos_in_exp = jnp.arange(G * K, dtype=jnp.int32) - jnp.searchsorted(
+        s_exp, jnp.arange(E, dtype=jnp.int32), side="left")[s_exp]
+    keep = pos_in_exp < C
+    slot = jnp.where(keep, s_exp * C + pos_in_exp, E * C)       # drop -> pad
+
+    # Gather tokens into buffers (E*C+1 with a trash slot).
+    # Row-indexed gathers from a *row*-sharded table make SPMD replicate
+    # the whole operand (measured ~10.7 GiB/device at 1M tokens); gathers
+    # are index-independent along D, so flip the table to D-sharded for
+    # the gather and re-lay out to the EP layout afterwards.
+    buf_tok = jnp.zeros((E * C + 1,), jnp.int32).at[slot].set(
+        s_tok + 1, mode="drop")                                 # 0 = empty
+    xf_g = shard(xf, None, "model")
+    gathered = xf_g[jnp.maximum(buf_tok[:E * C] - 1, 0)]
+    gathered = shard(gathered, None, "model")
+    buf = jnp.where(buf_tok[:E * C, None] > 0, gathered, 0.0)
+    buf = buf.reshape(E, C, D)
+    buf = shard(buf, "model", None, None)      # a2a into the EP layout
+
+    # ---- per-expert FFN, chunked over capacity ----------------------------
+    # Bounds the (E_local, C, F) hidden workspace: at 1M prefill tokens an
+    # unchunked hidden is ~2.5 GiB/device (measured); scanning capacity
+    # blocks keeps one block live.
+    def expert_ffn(b):  # (E, Cc, D) -> (E, Cc, D)
+        h = jnp.einsum("ecd,edf->ecf", b, p["wi"].astype(dt))
+        g = jnp.einsum("ecd,edf->ecf", b, p["wg"].astype(dt))
+        g = jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g)
+        h = shard(h * g, "model", None, None)
+        return jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dt))
+
+    cc = 2048
+    if C > 2 * cc and C % cc == 0:
+        bufc = jnp.moveaxis(buf.reshape(E, C // cc, cc, D), 1, 0)
+        y = jnp.moveaxis(jax.lax.map(expert_ffn, bufc), 0, 1)
+        y = y.reshape(E, C, D)
+    else:
+        y = expert_ffn(buf)                                     # (E, C, D)
+
+    # ---- combine back (scatter-free) --------------------------------------
+    # Inverse permutation: flat routed index j = g*K + kk -> its sorted
+    # position -> its buffer slot.  Pure gathers (SPMD partitions gathers
+    # far better than data-dependent scatter-add).
+    yf = y.reshape(E * C, D)
+    yf = shard(yf, None, "model")              # D-sharded for the gather
+    inv_order = jnp.argsort(order)                          # (G*K,)
+    slot_of_j = jnp.where(keep, slot, E * C - 1)[inv_order]
+    keep_j = keep[inv_order]
+    vals = jnp.where(keep_j[:, None],
+                     yf[jnp.minimum(slot_of_j, E * C - 1)], 0.0)
+    vals = shard(vals, None, "model")
+    gates_j = flat_gate.astype(dt)
+    contrib = (vals * gates_j[:, None]).reshape(G, K, D).sum(axis=1)
+    out = contrib.reshape(B, T, D)
+    return shard(out, "batch", None, None), aux

@@ -1,0 +1,164 @@
+"""MoE decoder-only LMs (olmoe, llama4-maverick).
+
+Two layouts, both scanned over stacked layer params:
+
+- ``moe_interleave == 1`` (olmoe): every layer's FFN is the MoE.
+- ``moe_interleave == 2`` (llama4): superblocks of (dense-FFN layer,
+  MoE layer [+ shared expert]), matching the interleaved Maverick layout.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig, shard, stacked
+from .layers import (attention, decode_attention, embed, init_attention,
+                     init_embed, init_mlp, init_rmsnorm, mlp, rmsnorm,
+                     unembed)
+from .moe import init_moe, moe_ffn
+
+
+def _init_attn_block(key, cfg):
+    return {"ln1": init_rmsnorm(cfg.d_model, cfg.pdtype),
+            "attn": init_attention(key, cfg),
+            "ln2": init_rmsnorm(cfg.d_model, cfg.pdtype)}
+
+
+def init_moe_layer(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = _init_attn_block(k1, cfg)
+    p["moe"] = init_moe(k2, cfg)
+    if cfg.shared_expert:
+        p["shared"] = init_mlp(k3, cfg, d_ff=cfg.ffe)
+    return p
+
+
+def init_dense_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    p = _init_attn_block(k1, cfg)
+    p["mlp"] = init_mlp(k2, cfg)
+    return p
+
+
+def init_moe_lm(key, cfg: ModelConfig):
+    ke, kl = jax.random.split(key)
+    step = cfg.moe_interleave
+    n_super = cfg.n_layers // step
+
+    def super_block(k):
+        keys = jax.random.split(k, step)
+        blk = {}
+        for j in range(step - 1):
+            blk[f"dense{j}"] = init_dense_layer(keys[j], cfg)
+        blk["moe"] = init_moe_layer(keys[-1], cfg)
+        return blk
+
+    return {
+        "tok": init_embed(ke, cfg),
+        "supers": stacked(kl, n_super, super_block),
+        "ln_f": init_rmsnorm(cfg.d_model, cfg.pdtype),
+    }
+
+
+def _attn_res(bp, x, positions, cfg):
+    h, _ = attention(bp["attn"], rmsnorm(bp["ln1"], x, cfg.norm_eps),
+                     positions, cfg, causal=True, window=cfg.attn_window)
+    return x + h
+
+
+def _moe_res(bp, x, cfg):
+    h = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+    out, aux = moe_ffn(bp["moe"], h, cfg)
+    if cfg.shared_expert:
+        out = out + mlp(bp["shared"], h, cfg.act)
+    return x + out, aux
+
+
+def forward(params, tokens, cfg: ModelConfig, remat: bool = True,
+            last_only: bool = False, return_hidden: bool = False):
+    B, T = tokens.shape
+    x = embed(params["tok"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    step = cfg.moe_interleave
+
+    def super_fwd(bp, x):
+        aux = 0.0
+        for j in range(step - 1):
+            dp = bp[f"dense{j}"]
+            x = _attn_res(dp, x, positions, cfg)
+            x = x + mlp(dp["mlp"], rmsnorm(dp["ln2"], x, cfg.norm_eps),
+                        cfg.act)
+        mp = bp["moe"]
+        x = _attn_res(mp, x, positions, cfg)
+        x, aux2 = _moe_res(mp, x, cfg)
+        return shard(x, "batch", None, None), aux + aux2
+
+    body = jax.checkpoint(super_fwd) if remat else super_fwd
+
+    def scan_fn(carry, bp):
+        x, aux = carry
+        x, aux2 = body(bp, x)
+        return (x, aux + aux2), None
+
+    (x, aux), _ = jax.lax.scan(scan_fn, (x, jnp.zeros((), jnp.float32)),
+                               params["supers"])
+    if last_only:
+        x = x[:, -1:]
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if return_hidden:
+        return x, aux
+    return unembed(params["tok"], x, cfg), aux
+
+
+class MoECache(NamedTuple):
+    k: jax.Array        # (n_super, step, B, Tmax, KH, hd)
+    v: jax.Array
+    length: jax.Array
+
+
+def init_moe_cache(cfg: ModelConfig, batch: int, max_len: int) -> MoECache:
+    step = cfg.moe_interleave
+    n_super = cfg.n_layers // step
+    shape = (n_super, step, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return MoECache(jnp.zeros(shape, cfg.adtype),
+                    jnp.zeros(shape, cfg.adtype), jnp.zeros((), jnp.int32))
+
+
+def decode_step(params, token, cache: MoECache, cfg: ModelConfig):
+    x = embed(params["tok"], token, cfg)
+    step = cfg.moe_interleave
+
+    def super_step(carry, inp):
+        x, = carry
+        bp, cks, cvs = inp
+        nk, nv = [], []
+        for j in range(step - 1):
+            dp = bp[f"dense{j}"]
+            h = rmsnorm(dp["ln1"], x, cfg.norm_eps)
+            h, ck, cv = decode_attention(dp["attn"], h, cks[j], cvs[j],
+                                         cache.length, cfg,
+                                         window=cfg.attn_window)
+            x = x + h
+            x = x + mlp(dp["mlp"], rmsnorm(dp["ln2"], x, cfg.norm_eps),
+                        cfg.act)
+            nk.append(ck)
+            nv.append(cv)
+        mp = bp["moe"]
+        h = rmsnorm(mp["ln1"], x, cfg.norm_eps)
+        h, ck, cv = decode_attention(mp["attn"], h, cks[step - 1],
+                                     cvs[step - 1], cache.length, cfg,
+                                     window=cfg.attn_window)
+        x = x + h
+        x, _ = _moe_res(mp, x, cfg)
+        nk.append(ck)
+        nv.append(cv)
+        return (x,), (jnp.stack(nk), jnp.stack(nv))
+
+    (x,), (nk, nv) = jax.lax.scan(super_step, (x,),
+                                  (params["supers"], cache.k, cache.v))
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed(params["tok"], x, cfg)
+    return logits, MoECache(nk, nv, cache.length + 1)

@@ -1,0 +1,317 @@
+"""RecurrentGemma / Griffin: RG-LRU recurrent blocks + local attention.
+
+Layer pattern (hybrid_period = 3): two recurrent blocks then one
+local-attention block, repeated; the trailing remainder layers are
+recurrent.  The RG-LRU linear recurrence runs as an associative scan over
+time for train/prefill and as a carried state for decode; local attention
+uses a *ring* KV cache bounded by the window (constant memory even at the
+500k-token decode shape — see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig, dense_init, shard, stacked, trunc_normal
+from .layers import (attention, embed, init_attention, init_embed, init_mlp,
+                     init_rmsnorm, mlp, rmsnorm, unembed, apply_rope, NEG_INF)
+
+_C = 8.0  # RG-LRU temperature constant (Griffin)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block
+# ---------------------------------------------------------------------------
+
+def init_rec_block(key, cfg: ModelConfig):
+    W = cfg.rnn_width or cfg.d_model
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {
+        "wx": dense_init(k1, cfg.d_model, W, cfg.pdtype),    # recurrence in
+        "wy": dense_init(k2, cfg.d_model, W, cfg.pdtype),    # gate branch
+        "wo": dense_init(k3, W, cfg.d_model, cfg.pdtype),
+        "conv": trunc_normal(k4, (cfg.conv_width, W), 1.0 / cfg.conv_width,
+                             cfg.pdtype),
+        "wa": dense_init(k5, W, W, cfg.pdtype),              # recurrence gate
+        "wi": dense_init(k6, W, W, cfg.pdtype),              # input gate
+        "lam": jnp.full((W,), 3.0, cfg.pdtype),              # a = sigma(lam)
+    }
+
+
+def _rglru_scan(u, r, i, lam):
+    """Linear recurrence h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * u_t).
+
+    u/r/i: (B, T, W); returns h: (B, T, W).  Associative scan over T.
+    """
+    log_a = _C * r * jax.nn.log_sigmoid(lam.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * (i * u)
+
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rec_block(p, x, cfg: ModelConfig):
+    """Griffin recurrent block (train/prefill)."""
+    dt = x.dtype
+    u = jnp.einsum("btd,dw->btw", x, p["wx"].astype(dt))
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, p["wy"].astype(dt)))
+    # Causal depthwise temporal conv.
+    W = u.shape[-1]
+    cw = cfg.conv_width
+    up = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+    u = sum(up[:, k:k + u.shape[1]] * p["conv"][k].astype(dt)
+            for k in range(cw))
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", uf,
+                                  p["wa"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", uf,
+                                  p["wi"].astype(jnp.float32)))
+    h = _rglru_scan(uf, r, i, p["lam"]).astype(dt)
+    h = shard(h, "batch", None, "model")
+    out = jnp.einsum("btw,wd->btd", h * gate, p["wo"].astype(dt))
+    return out
+
+
+class RecState(NamedTuple):
+    h: jax.Array         # (B, W) recurrence state
+    conv: jax.Array      # (B, conv_width-1, W) conv history
+
+
+def rec_block_step(p, x, state: RecState, cfg: ModelConfig):
+    """Single-token decode step.  x: (B, 1, D)."""
+    dt = x.dtype
+    u = jnp.einsum("btd,dw->btw", x, p["wx"].astype(dt))[:, 0]   # (B, W)
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, p["wy"].astype(dt)))[:, 0]
+    hist = jnp.concatenate([state.conv, u[:, None]], axis=1)     # (B, cw, W)
+    u = jnp.einsum("bkw,kw->bw", hist, p["conv"].astype(dt))
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["wa"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ p["wi"].astype(jnp.float32))
+    log_a = _C * r * jax.nn.log_sigmoid(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    h = a * state.h + mult * (i * uf)
+    out = jnp.einsum("bw,wd->bd", (h.astype(dt) * gate), p["wo"].astype(dt))
+    return out[:, None], RecState(h, hist[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# Ring-buffer local attention decode (bounded memory at any context length)
+# ---------------------------------------------------------------------------
+
+class RingKV(NamedTuple):
+    k: jax.Array   # (B, window, KH, hd) — rope pre-applied
+    v: jax.Array
+
+
+def ring_attention_step(p, x, ring: RingKV, pos, cfg: ModelConfig):
+    """Decode with a ring KV cache of size window.  pos: () int32."""
+    dt = x.dtype
+    B = x.shape[0]
+    W = ring.k.shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"].astype(dt))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    slot = jnp.mod(pos, W)
+    kc = jax.lax.dynamic_update_slice(ring.k, k.astype(ring.k.dtype),
+                                      (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(ring.v, v.astype(ring.v.dtype),
+                                      (0, slot, 0, 0))
+    KH = kc.shape[2]
+    H = q.shape[2]
+    G = H // KH
+    qg = q.reshape(B, KH, G, cfg.hd)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, kc.astype(dt),
+                   preferred_element_type=jnp.float32) / math.sqrt(cfg.hd)
+    valid = jnp.arange(W) <= pos          # ring slots written so far
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(vc.dtype)  # no f32 cache copy
+    o = jnp.einsum("bkgt,btkd->bkgd", w, vc,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, H, cfg.hd).astype(dt)
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(dt))
+    return out, RingKV(kc, vc)
+
+
+# ---------------------------------------------------------------------------
+# Full hybrid model
+# ---------------------------------------------------------------------------
+
+def _n_blocks(cfg):
+    n_super = cfg.n_layers // cfg.hybrid_period
+    n_rem = cfg.n_layers - n_super * cfg.hybrid_period
+    return n_super, n_rem
+
+
+def init_hybrid(key, cfg: ModelConfig):
+    ke, ks, kr = jax.random.split(key, 3)
+    n_super, n_rem = _n_blocks(cfg)
+    P = cfg.hybrid_period
+
+    def super_block(k):
+        keys = jax.random.split(k, P + 2 * P)
+        blk = {}
+        for j in range(P - 1):
+            blk[f"rec{j}"] = {
+                "ln": init_rmsnorm(cfg.d_model, cfg.pdtype),
+                "rec": init_rec_block(keys[2 * j], cfg),
+                "ln2": init_rmsnorm(cfg.d_model, cfg.pdtype),
+                "mlp": init_mlp(keys[2 * j + 1], cfg),
+            }
+        blk["attn"] = {
+            "ln": init_rmsnorm(cfg.d_model, cfg.pdtype),
+            "attn": init_attention(keys[-2], cfg),
+            "ln2": init_rmsnorm(cfg.d_model, cfg.pdtype),
+            "mlp": init_mlp(keys[-1], cfg),
+        }
+        return blk
+
+    p = {
+        "tok": init_embed(ke, cfg),
+        "supers": stacked(ks, n_super, super_block) if n_super else {},
+        "ln_f": init_rmsnorm(cfg.d_model, cfg.pdtype),
+    }
+    if n_rem:
+        krs = jax.random.split(kr, n_rem)
+        p["tail"] = [{
+            "ln": init_rmsnorm(cfg.d_model, cfg.pdtype),
+            "rec": init_rec_block(krs[j], cfg),
+            "ln2": init_rmsnorm(cfg.d_model, cfg.pdtype),
+            "mlp": init_mlp(krs[j], cfg),
+        } for j in range(n_rem)]
+    return p
+
+
+def _rec_residual(bp, x, cfg):
+    x = x + rec_block(bp["rec"], rmsnorm(bp["ln"], x, cfg.norm_eps), cfg)
+    x = x + mlp(bp["mlp"], rmsnorm(bp["ln2"], x, cfg.norm_eps), cfg.act)
+    return x
+
+
+def forward(params, tokens, cfg: ModelConfig, remat: bool = True,
+            last_only: bool = False, return_hidden: bool = False):
+    B, T = tokens.shape
+    x = embed(params["tok"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    P = cfg.hybrid_period
+
+    def super_fwd(bp, x):
+        for j in range(P - 1):
+            x = _rec_residual(bp[f"rec{j}"], x, cfg)
+        ap = bp["attn"]
+        h, _ = attention(ap["attn"], rmsnorm(ap["ln"], x, cfg.norm_eps),
+                         positions, cfg, causal=True, window=cfg.attn_window)
+        x = x + h
+        x = x + mlp(ap["mlp"], rmsnorm(ap["ln2"], x, cfg.norm_eps), cfg.act)
+        return shard(x, "batch", None, None)
+
+    body = jax.checkpoint(super_fwd) if remat else super_fwd
+    n_super, n_rem = _n_blocks(cfg)
+    if n_super:
+        x, _ = jax.lax.scan(lambda c, bp: (body(bp, c), None),
+                            x, params["supers"])
+    for j in range(n_rem):
+        x = _rec_residual(params["tail"][j], x, cfg)
+    if last_only:
+        x = x[:, -1:]
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if return_hidden:
+        return x
+    return unembed(params["tok"], x, cfg)
+
+
+class HybridCache(NamedTuple):
+    rec_h: jax.Array      # (n_super, P-1, B, W) + tail handled separately
+    rec_conv: jax.Array   # (n_super, P-1, B, cw-1, W)
+    ring_k: jax.Array     # (n_super, B, window, KH, hd)
+    ring_v: jax.Array
+    tail_h: jax.Array     # (n_rem, B, W)
+    tail_conv: jax.Array  # (n_rem, B, cw-1, W)
+    pos: jax.Array        # () int32
+
+
+def init_hybrid_cache(cfg: ModelConfig, batch: int) -> HybridCache:
+    n_super, n_rem = _n_blocks(cfg)
+    W = cfg.rnn_width or cfg.d_model
+    win = cfg.attn_window or 2048
+    P = cfg.hybrid_period
+    f32, dt = jnp.float32, cfg.adtype
+    return HybridCache(
+        rec_h=jnp.zeros((n_super, P - 1, batch, W), f32),
+        rec_conv=jnp.zeros((n_super, P - 1, batch, cfg.conv_width - 1, W), dt),
+        ring_k=jnp.zeros((n_super, batch, win, cfg.n_kv_heads, cfg.hd), dt),
+        ring_v=jnp.zeros((n_super, batch, win, cfg.n_kv_heads, cfg.hd), dt),
+        tail_h=jnp.zeros((n_rem, batch, W), f32),
+        tail_conv=jnp.zeros((n_rem, batch, cfg.conv_width - 1, W), dt),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def decode_step(params, token, cache: HybridCache, cfg: ModelConfig):
+    x = embed(params["tok"], token, cfg)
+    P = cfg.hybrid_period
+    n_super, n_rem = _n_blocks(cfg)
+
+    def super_step(carry, inp):
+        x, = carry
+        bp, rh, rc, rk, rv = inp
+        new_rh, new_rc = [], []
+        for j in range(P - 1):
+            blk = bp[f"rec{j}"]
+            h = rmsnorm(blk["ln"], x, cfg.norm_eps)
+            h, st = rec_block_step(blk["rec"], h, RecState(rh[j], rc[j]), cfg)
+            x = x + h
+            x = x + mlp(blk["mlp"], rmsnorm(blk["ln2"], x, cfg.norm_eps),
+                        cfg.act)
+            new_rh.append(st.h)
+            new_rc.append(st.conv)
+        ap = bp["attn"]
+        h = rmsnorm(ap["ln"], x, cfg.norm_eps)
+        h, ring = ring_attention_step(ap["attn"], h, RingKV(rk, rv),
+                                      cache.pos, cfg)
+        x = x + h
+        x = x + mlp(ap["mlp"], rmsnorm(ap["ln2"], x, cfg.norm_eps), cfg.act)
+        return (x,), (jnp.stack(new_rh), jnp.stack(new_rc),
+                      ring.k, ring.v)
+
+    if n_super:
+        (x,), (nrh, nrc, nrk, nrv) = jax.lax.scan(
+            super_step, (x,),
+            (params["supers"], cache.rec_h, cache.rec_conv,
+             cache.ring_k, cache.ring_v))
+    else:
+        nrh, nrc, nrk, nrv = (cache.rec_h, cache.rec_conv,
+                              cache.ring_k, cache.ring_v)
+    tail_h, tail_conv = [], []
+    for j in range(n_rem):
+        blk = params["tail"][j]
+        h = rmsnorm(blk["ln"], x, cfg.norm_eps)
+        h, st = rec_block_step(blk["rec"], h,
+                               RecState(cache.tail_h[j], cache.tail_conv[j]),
+                               cfg)
+        x = x + h
+        x = x + mlp(blk["mlp"], rmsnorm(blk["ln2"], x, cfg.norm_eps), cfg.act)
+        tail_h.append(st.h)
+        tail_conv.append(st.conv)
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed(params["tok"], x, cfg)
+    new_cache = HybridCache(
+        nrh, nrc, nrk, nrv,
+        jnp.stack(tail_h) if tail_h else cache.tail_h,
+        jnp.stack(tail_conv) if tail_conv else cache.tail_conv,
+        cache.pos + 1)
+    return logits, new_cache

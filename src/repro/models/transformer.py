@@ -1,0 +1,123 @@
+"""Dense decoder-only transformer LM (llama/yi/gemma/granite family).
+
+Per-layer params are stacked and the forward pass is a ``lax.scan`` over
+layers with per-layer rematerialization — the standard compile-time and
+activation-memory structure for multi-thousand-chip training.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig, shard, stacked
+from .layers import (attention, decode_attention, embed, init_attention,
+                     init_embed, init_mlp, init_rmsnorm, mlp, rmsnorm,
+                     unembed)
+
+
+def init_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "attn": init_attention(k1, cfg),
+        "ln2": init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "mlp": init_mlp(k2, cfg),
+    }
+
+
+def init_transformer(key, cfg: ModelConfig):
+    ke, kl = jax.random.split(key)
+    return {
+        "tok": init_embed(ke, cfg),
+        "layers": stacked(kl, cfg.n_layers, lambda k: init_layer(k, cfg)),
+        "ln_f": init_rmsnorm(cfg.d_model, cfg.pdtype),
+    }
+
+
+def _layer_fwd(lp, x, positions, cfg: ModelConfig, mrope_positions=None,
+               window=None):
+    h, _ = attention(lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps),
+                     positions, cfg, causal=True, window=window,
+                     mrope_positions=mrope_positions)
+    x = x + h
+    x = x + mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.act)
+    return shard(x, "batch", None, None)
+
+
+def forward(params, tokens, cfg: ModelConfig, *, mrope_positions=None,
+            remat: bool = True, extra_embed: Optional[jax.Array] = None,
+            last_only: bool = False, return_hidden: bool = False):
+    """tokens (B, T) -> logits (B, T, vocab)."""
+    B, T = tokens.shape
+    x = embed(params["tok"], tokens, cfg)
+    if extra_embed is not None:  # modality stubs add precomputed embeddings
+        x = x + extra_embed.astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    body = functools.partial(_layer_fwd, cfg=cfg,
+                             mrope_positions=mrope_positions,
+                             window=cfg.attn_window)
+    if remat:
+        body = jax.checkpoint(body, static_argnums=())
+
+    def scan_fn(x, lp):
+        return body(lp, x, positions), None
+
+    x, _ = jax.lax.scan(scan_fn, x, params["layers"])
+    if last_only:
+        x = x[:, -1:]
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if return_hidden:
+        return x
+    return unembed(params["tok"], x, cfg)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array        # (L, B, Tmax, KH, hd)
+    v: jax.Array        # (L, B, Tmax, KH, hd)
+    length: jax.Array   # () int32 — filled prefix length
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> KVCache:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return KVCache(jnp.zeros(shape, cfg.adtype), jnp.zeros(shape, cfg.adtype),
+                   jnp.zeros((), jnp.int32))
+
+
+def decode_step(params, token, cache: KVCache, cfg: ModelConfig,
+                mrope_positions=None):
+    """One decode step: token (B, 1) -> (logits (B, 1, V), new cache)."""
+    x = embed(params["tok"], token, cfg)
+
+    def scan_fn(carry, inp):
+        x, = carry
+        lp, ck, cv = inp
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        h, ck, cv = decode_attention(lp["attn"], h, ck, cv, cache.length,
+                                     cfg, window=cfg.attn_window,
+                                     mrope_positions=mrope_positions)
+        x = x + h
+        x = x + mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.act)
+        return (x,), (ck, cv)
+
+    (x,), (nk, nv) = jax.lax.scan(scan_fn, (x,),
+                                  (params["layers"], cache.k, cache.v))
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed(params["tok"], x, cfg)
+    return logits, KVCache(nk, nv, cache.length + 1)
+
+
+def lm_loss(params, batch, cfg: ModelConfig, forward_fn=forward, **fw_kw):
+    """Next-token cross-entropy; batch = {tokens, labels(optional)}."""
+    tokens = batch["tokens"]
+    labels = batch.get("labels", jnp.pad(tokens[:, 1:], ((0, 0), (0, 1))))
+    logits = forward_fn(params, tokens, cfg, **fw_kw).astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels > 0).astype(jnp.float32)
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)

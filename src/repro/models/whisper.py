@@ -1,0 +1,191 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+Per the assignment brief, the conv/mel frontend is a STUB: ``input_specs``
+feeds precomputed frame embeddings (B, enc_seq, d_model); everything from
+there — bidirectional encoder, causal decoder with cross-attention, decode
+KV caches — is real.  Positions use sinusoidal (encoder) and learned
+(decoder) embeddings as in Whisper; attention projections/GQA reuse the
+shared layers (RMSNorm/gated-MLP variant of the backbone, noted in
+DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig, shard, stacked, trunc_normal
+from .layers import (attention, decode_attention, init_attention, init_embed,
+                     init_mlp, init_rmsnorm, mlp, rmsnorm, unembed, embed)
+
+
+def _sinusoids(length: int, channels: int) -> jax.Array:
+    """Whisper's sinusoidal position embedding."""
+    log_timescale = jnp.log(10000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2))
+    t = jnp.arange(length)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(t), jnp.cos(t)], axis=1)
+
+
+def init_enc_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "attn": init_attention(k1, cfg),
+        "ln2": init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "mlp": init_mlp(k2, cfg),
+    }
+
+
+def init_dec_layer(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "self": init_attention(k1, cfg),
+        "lnx": init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "cross": init_attention(k2, cfg),
+        "ln2": init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "mlp": init_mlp(k3, cfg),
+    }
+
+
+def init_whisper(key, cfg: ModelConfig):
+    ke, kenc, kdec, kp = jax.random.split(key, 4)
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    return {
+        "tok": init_embed(ke, cfg),
+        "pos_dec": trunc_normal(kp, (cfg.max_pos, cfg.d_model), 0.01,
+                                cfg.pdtype),
+        "enc": stacked(kenc, n_enc, lambda k: init_enc_layer(k, cfg)),
+        "dec": stacked(kdec, cfg.n_layers, lambda k: init_dec_layer(k, cfg)),
+        "ln_enc": init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "ln_f": init_rmsnorm(cfg.d_model, cfg.pdtype),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig, remat: bool = True):
+    """frames: (B, Tenc, D) stub embeddings -> encoder states."""
+    B, T, D = frames.shape
+    x = frames.astype(cfg.adtype) + _sinusoids(T, D).astype(cfg.adtype)
+    x = shard(x, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    def body(lp, x):
+        h, _ = attention(lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps),
+                         positions, cfg, causal=False)
+        x = x + h
+        x = x + mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.act)
+        return shard(x, "batch", None, None)
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(lambda c, lp: (body(lp, c), None), x, params["enc"])
+    return rmsnorm(params["ln_enc"], x, cfg.norm_eps)
+
+
+def _cross_kv(lp, enc, cfg):
+    dt = enc.dtype
+    k = jnp.einsum("btd,dhk->bthk", enc, lp["cross"]["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", enc, lp["cross"]["wv"].astype(dt))
+    return k, v
+
+
+def decode_train(params, tokens, enc, cfg: ModelConfig, remat: bool = True,
+                 last_only: bool = False, return_hidden: bool = False):
+    """Teacher-forced decoder; tokens (B, Tdec), enc (B, Tenc, D)."""
+    B, T = tokens.shape
+    x = embed(params["tok"], tokens, cfg)
+    x = x + params["pos_dec"][:T][None].astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    def body(lp, x):
+        h, _ = attention(lp["self"], rmsnorm(lp["ln1"], x, cfg.norm_eps),
+                         positions, cfg, causal=True)
+        x = x + h
+        kx, vx = _cross_kv(lp, enc, cfg)
+        h, _ = attention(lp["cross"], rmsnorm(lp["lnx"], x, cfg.norm_eps),
+                         positions, cfg, causal=False, kv_override=(kx, vx))
+        x = x + h
+        x = x + mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.act)
+        return shard(x, "batch", None, None)
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(lambda c, lp: (body(lp, c), None), x, params["dec"])
+    if last_only:
+        x = x[:, -1:]
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if return_hidden:
+        return x
+    return unembed(params["tok"], x, cfg)
+
+
+def forward(params, batch, cfg: ModelConfig, remat: bool = True,
+            last_only: bool = False, return_hidden: bool = False):
+    enc = encode(params, batch["frames"], cfg, remat=remat)
+    return decode_train(params, batch["tokens"], enc, cfg, remat=remat,
+                        last_only=last_only, return_hidden=return_hidden)
+
+
+class EncDecCache(NamedTuple):
+    k: jax.Array        # (L, B, Tmax, KH, hd) self-attn cache
+    v: jax.Array
+    xk: jax.Array       # (L, B, Tenc, KH, hd) cross-attn KV (static)
+    xv: jax.Array
+    length: jax.Array
+
+
+def init_encdec_cache(params, frames, cfg: ModelConfig, batch: int,
+                      max_len: int) -> EncDecCache:
+    """Run the encoder once and precompute cross-attention KV."""
+    enc = encode(params, frames, cfg, remat=False)
+
+    def kv(lp):
+        return _cross_kv(lp, enc, cfg)
+
+    xk, xv = jax.lax.map(kv, params["dec"])
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return EncDecCache(jnp.zeros(shape, cfg.adtype),
+                       jnp.zeros(shape, cfg.adtype),
+                       xk.astype(cfg.adtype), xv.astype(cfg.adtype),
+                       jnp.zeros((), jnp.int32))
+
+
+def decode_step(params, token, cache: EncDecCache, cfg: ModelConfig):
+    B = token.shape[0]
+    x = embed(params["tok"], token, cfg)
+    x = x + jax.lax.dynamic_slice_in_dim(
+        params["pos_dec"], cache.length, 1, 0)[None].astype(x.dtype)
+
+    def step(carry, inp):
+        x, = carry
+        lp, ck, cv, xk, xv = inp
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        h, ck, cv = decode_attention(lp["self"], h, ck, cv, cache.length, cfg)
+        x = x + h
+        # cross attention against the static encoder KV
+        hq = rmsnorm(lp["lnx"], x, cfg.norm_eps)
+        dt = x.dtype
+        q = jnp.einsum("btd,dhk->bthk", hq, lp["cross"]["wq"].astype(dt))
+        KH = xk.shape[2]
+        H = q.shape[2]
+        G = H // KH
+        qg = q.reshape(B, KH, G, cfg.hd)
+        s = jnp.einsum("bkgd,btkd->bkgt", qg, xk.astype(dt),
+                       preferred_element_type=jnp.float32)
+        s = s / jnp.sqrt(jnp.float32(cfg.hd))
+        w = jax.nn.softmax(s, axis=-1).astype(xv.dtype)  # no f32 KV copy
+        o = jnp.einsum("bkgt,btkd->bkgd", w, xv,
+                       preferred_element_type=jnp.float32)
+        o = o.reshape(B, 1, H, cfg.hd).astype(dt)
+        x = x + jnp.einsum("bthk,hkd->btd", o, lp["cross"]["wo"].astype(dt))
+        x = x + mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.act)
+        return (x,), (ck, cv)
+
+    (x,), (nk, nv) = jax.lax.scan(
+        step, (x,), (params["dec"], cache.k, cache.v, cache.xk, cache.xv))
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed(params["tok"], x, cfg)
+    return logits, EncDecCache(nk, nv, cache.xk, cache.xv, cache.length + 1)

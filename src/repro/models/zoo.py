@@ -1,0 +1,182 @@
+"""Unified model API over all families — the single entry point used by
+configs, the launcher, the dry-run and the serving loop.
+
+``build_model(cfg)`` returns a :class:`ModelAPI` with:
+
+- ``init(key) -> params``
+- ``loss(params, batch) -> scalar``      (training objective)
+- ``make_cache(params, batch, max_len) -> cache``   (serving)
+- ``decode(params, token, cache, batch) -> (logits, cache)``
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+from .layers import chunked_softmax_xent
+from . import mamba2, moe_lm, rglru, transformer, whisper
+
+
+def _ce(logits, labels):
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels > 0).astype(jnp.float32)
+    return ((logz - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+
+
+# Large-vocab losses can fuse the unembedding into a vocab-chunked
+# cross-entropy (never materializes (B, T, V) logits — §Perf P12).
+# DISABLED by default: XLA 0.8's SPMD partitioner CHECK-fails on the
+# chunk-scan einsum under batch-over-(data, model) shardings (the upstream
+# warning points to the Shardy partitioner as the fix); the implementation
+# + exactness tests stand ready (models/layers.chunked_softmax_xent).
+_CHUNKED_VOCAB = 1 << 60
+
+
+def _use_chunked(cfg):
+    return cfg.vocab_padded > _CHUNKED_VOCAB
+
+def _shift_labels(batch):
+    if "labels" in batch:
+        return batch["labels"]
+    t = batch["tokens"]
+    return jnp.pad(t[:, 1:], ((0, 0), (0, 1)))
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    loss: Callable[[Any, Dict[str, jax.Array]], jax.Array]
+    make_cache: Callable[..., Any]
+    decode: Callable[..., Any]
+
+
+def build_model(cfg: ModelConfig) -> ModelAPI:
+    fam = cfg.family
+
+    if fam in ("dense",):
+        def loss(p, batch):
+            if _use_chunked(cfg):
+                x = transformer.forward(p, batch["tokens"], cfg,
+                                        remat=cfg.remat, return_hidden=True)
+                return chunked_softmax_xent(p["tok"], x,
+                                            _shift_labels(batch), cfg)
+            logits = transformer.forward(p, batch["tokens"], cfg,
+                                         remat=cfg.remat)
+            return _ce(logits, _shift_labels(batch))
+
+        def make_cache(p, batch, max_len):
+            return transformer.init_cache(cfg, batch["tokens"].shape[0],
+                                          max_len)
+
+        def decode(p, token, cache, batch=None):
+            return transformer.decode_step(p, token, cache, cfg)
+
+        return ModelAPI(cfg, lambda k: transformer.init_transformer(k, cfg),
+                        loss, make_cache, decode)
+
+    if fam == "vlm":
+        def loss(p, batch):
+            kw = dict(remat=cfg.remat,
+                      mrope_positions=batch["mrope_positions"],
+                      extra_embed=batch.get("vision_embed"))
+            if _use_chunked(cfg):
+                x = transformer.forward(p, batch["tokens"], cfg,
+                                        return_hidden=True, **kw)
+                return chunked_softmax_xent(p["tok"], x,
+                                            _shift_labels(batch), cfg)
+            logits = transformer.forward(p, batch["tokens"], cfg, **kw)
+            return _ce(logits, _shift_labels(batch))
+
+        def make_cache(p, batch, max_len):
+            return transformer.init_cache(cfg, batch["tokens"].shape[0],
+                                          max_len)
+
+        def decode(p, token, cache, batch=None):
+            B = token.shape[0]
+            pos = jnp.broadcast_to(cache.length, (B, 3, 1)).astype(jnp.int32)
+            return transformer.decode_step(p, token, cache, cfg,
+                                           mrope_positions=pos)
+
+        return ModelAPI(cfg, lambda k: transformer.init_transformer(k, cfg),
+                        loss, make_cache, decode)
+
+    if fam == "moe":
+        def loss(p, batch):
+            if _use_chunked(cfg):
+                x, aux = moe_lm.forward(p, batch["tokens"], cfg,
+                                        remat=cfg.remat, return_hidden=True)
+                return chunked_softmax_xent(
+                    p["tok"], x, _shift_labels(batch), cfg) + 0.01 * aux
+            logits, aux = moe_lm.forward(p, batch["tokens"], cfg,
+                                         remat=cfg.remat)
+            return _ce(logits, _shift_labels(batch)) + 0.01 * aux
+
+        def make_cache(p, batch, max_len):
+            return moe_lm.init_moe_cache(cfg, batch["tokens"].shape[0],
+                                         max_len)
+
+        def decode(p, token, cache, batch=None):
+            return moe_lm.decode_step(p, token, cache, cfg)
+
+        return ModelAPI(cfg, lambda k: moe_lm.init_moe_lm(k, cfg),
+                        loss, make_cache, decode)
+
+    if fam == "hybrid":
+        def loss(p, batch):
+            if _use_chunked(cfg):
+                x = rglru.forward(p, batch["tokens"], cfg, remat=cfg.remat,
+                                  return_hidden=True)
+                return chunked_softmax_xent(p["tok"], x,
+                                            _shift_labels(batch), cfg)
+            logits = rglru.forward(p, batch["tokens"], cfg, remat=cfg.remat)
+            return _ce(logits, _shift_labels(batch))
+
+        def make_cache(p, batch, max_len):
+            return rglru.init_hybrid_cache(cfg, batch["tokens"].shape[0])
+
+        def decode(p, token, cache, batch=None):
+            return rglru.decode_step(p, token, cache, cfg)
+
+        return ModelAPI(cfg, lambda k: rglru.init_hybrid(k, cfg),
+                        loss, make_cache, decode)
+
+    if fam == "ssm":
+        def loss(p, batch):
+            logits = mamba2.forward(p, batch["tokens"], cfg, remat=cfg.remat)
+            return _ce(logits, _shift_labels(batch))
+
+        def make_cache(p, batch, max_len):
+            return mamba2.init_ssm_cache(cfg, batch["tokens"].shape[0])
+
+        def decode(p, token, cache, batch=None):
+            return mamba2.decode_step(p, token, cache, cfg)
+
+        return ModelAPI(cfg, lambda k: mamba2.init_mamba2(k, cfg),
+                        loss, make_cache, decode)
+
+    if fam == "encdec":
+        def loss(p, batch):
+            logits = whisper.forward(p, batch, cfg, remat=cfg.remat)
+            return _ce(logits, _shift_labels(batch))
+
+        def make_cache(p, batch, max_len):
+            return whisper.init_encdec_cache(
+                p, batch["frames"], cfg, batch["frames"].shape[0], max_len)
+
+        def decode(p, token, cache, batch=None):
+            return whisper.decode_step(p, token, cache, cfg)
+
+        return ModelAPI(cfg, lambda k: whisper.init_whisper(k, cfg),
+                        loss, make_cache, decode)
+
+    raise ValueError(f"unknown family: {fam}")

@@ -1,0 +1,7 @@
+from .checkpoint import CheckpointConfig, CheckpointManager
+from .failure import FailureDetector
+from .elastic import plan_mesh, degraded_options
+from .straggler import StragglerMonitor
+
+__all__ = ["CheckpointConfig", "CheckpointManager", "FailureDetector",
+           "plan_mesh", "degraded_options", "StragglerMonitor"]

@@ -1,0 +1,169 @@
+"""Sharded, async, atomic checkpointing with optional PLA compression.
+
+Layout:  <dir>/step_<N>/
+           manifest.json          step, keys, shapes, dtypes, flags
+           shard_<i>.npz          grouped leaves (<= shard_bytes each)
+           <key>.pla              PLA-compressed smooth tensors (opt. v/EMA)
+
+Writes go to ``step_<N>.tmp`` then ``os.replace`` — a crash mid-write never
+corrupts the latest checkpoint.  The writer runs on a background thread
+(device arrays are fetched first, so the training loop only blocks for the
+device->host copy).  ``keep_last`` old checkpoints are retained.
+
+Restore is resharding-agnostic: arrays are stored unsharded and re-placed
+under whatever mesh/sharding the restoring job uses — this is what makes
+elastic restarts (repro.runtime.elastic) trivial.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.compression.ckpt import decode_array, encode_array
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointConfig:
+    directory: str
+    keep_last: int = 3
+    shard_bytes: int = 1 << 29          # 512 MiB per npz shard
+    pla_compress_keys: tuple = ()       # path substrings to PLA-compress
+    pla_eps_rel: float = 1e-3
+    async_write: bool = True
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = jax.tree_util.keystr(path)
+        out[key] = np.asarray(jax.device_get(leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, cfg: CheckpointConfig):
+        self.cfg = cfg
+        os.makedirs(cfg.directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+
+    def save(self, step: int, trees: Dict[str, Any]) -> None:
+        """trees: name -> pytree (e.g. {'params': ..., 'opt': ..., 'ef': ...})."""
+        flat: Dict[str, np.ndarray] = {}
+        for name, tree in trees.items():
+            for k, v in _flatten(tree).items():
+                flat[f"{name}{k}"] = v
+        self.wait()  # one in-flight write at a time
+        if self.cfg.async_write:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, flat), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, flat)
+
+    def _write(self, step: int, flat: Dict[str, np.ndarray]) -> None:
+        final = os.path.join(self.cfg.directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        manifest = {"step": step, "entries": {}, "shards": []}
+        # group into shards
+        shard, shard_bytes, shard_id = {}, 0, 0
+
+        def flush():
+            nonlocal shard, shard_bytes, shard_id
+            if shard:
+                np.savez(os.path.join(tmp, f"shard_{shard_id}.npz"), **shard)
+                manifest["shards"].append(f"shard_{shard_id}.npz")
+                shard, shard_bytes = {}, 0
+                shard_id += 1
+
+        for key, arr in flat.items():
+            safe = re.sub(r"[^\w]", "_", key)
+            pla = any(s in key for s in self.cfg.pla_compress_keys) and \
+                arr.dtype.kind == "f" and arr.size > 4096
+            if pla:
+                blob = encode_array(arr, self.cfg.pla_eps_rel)
+                with open(os.path.join(tmp, safe + ".pla"), "wb") as f:
+                    f.write(blob)
+                manifest["entries"][key] = {"kind": "pla", "file": safe + ".pla"}
+            else:
+                shard[safe] = arr
+                manifest["entries"][key] = {
+                    "kind": "npz", "name": safe, "shard": shard_id}
+                shard_bytes += arr.nbytes
+                if shard_bytes >= self.cfg.shard_bytes:
+                    flush()
+        flush()
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        shutil.rmtree(final, ignore_errors=True)
+        os.replace(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.cfg.keep_last]:
+            shutil.rmtree(os.path.join(self.cfg.directory,
+                                       f"step_{s:08d}"), ignore_errors=True)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # --------------------------------------------------------------- restore
+
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.cfg.directory):
+            m = re.fullmatch(r"step_(\d+)", d)
+            if m and os.path.exists(os.path.join(self.cfg.directory, d,
+                                                 "manifest.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, examples: Dict[str, Any]) -> Dict[str, Any]:
+        """Restore named pytrees; ``examples`` provide structure (and target
+        shardings if leaves are jax Arrays with shardings)."""
+        d = os.path.join(self.cfg.directory, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        shards = {s: np.load(os.path.join(d, s)) for s in manifest["shards"]}
+
+        def fetch(key):
+            e = manifest["entries"][key]
+            if e["kind"] == "pla":
+                with open(os.path.join(d, e["file"]), "rb") as f:
+                    arr, _ = decode_array(f.read())
+                return arr
+            return shards[f"shard_{e['shard']}.npz"][e["name"]]
+
+        out = {}
+        for name, ex in examples.items():
+            flat, treedef = jax.tree_util.tree_flatten_with_path(ex)
+            leaves = []
+            for path, leaf in flat:
+                key = f"{name}{jax.tree_util.keystr(path)}"
+                arr = fetch(key).astype(leaf.dtype).reshape(leaf.shape)
+                if hasattr(leaf, "sharding") and hasattr(leaf.sharding,
+                                                         "mesh"):
+                    arr = jax.device_put(arr, leaf.sharding)
+                leaves.append(arr)
+            out[name] = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(ex), leaves)
+        return out

@@ -1,0 +1,64 @@
+"""Elastic mesh (re)planning after capacity change.
+
+Checkpoints are stored unsharded (runtime/checkpoint.py), so elasticity is
+a pure planning problem: pick the best (pod, data, model) for the surviving
+chip count, keeping the model axis fixed (TP degree is dictated by the
+model's memory/divisibility), shrinking data parallelism, and adjusting
+per-step batch (keep global batch via grad accumulation when possible).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]            # (pod, data, model) or (data, model)
+    axes: Tuple[str, ...]
+    grad_accum: int                   # microbatch multiplier to keep GBS
+    note: str = ""
+
+
+def plan_mesh(chips: int, *, model_axis: int = 16,
+              chips_per_pod: int = 256,
+              target_global_batch: Optional[int] = None,
+              batch_per_replica: int = 1) -> MeshPlan:
+    """Largest power-of-two data axis that fits the surviving chips."""
+    if chips % model_axis != 0:
+        raise ValueError(f"{chips} chips not divisible by TP={model_axis}")
+    replicas = chips // model_axis
+    pods = max(1, chips // chips_per_pod)
+    if pods > 1:
+        data = replicas // pods
+        shape: Tuple[int, ...] = (pods, data, model_axis)
+        axes: Tuple[str, ...] = ("pod", "data", "model")
+    else:
+        shape = (replicas, model_axis)
+        axes = ("data", "model")
+    accum = 1
+    if target_global_batch is not None:
+        per_step = replicas * batch_per_replica
+        accum = max(1, target_global_batch // per_step)
+    return MeshPlan(shape, axes, accum,
+                    note=f"{chips} chips -> {shape} ({axes})")
+
+
+def degraded_options(chips_lost: int, *, total: int = 512,
+                     model_axis: int = 16) -> List[MeshPlan]:
+    """Feasible fallback meshes after losing ``chips_lost`` chips.
+
+    Fleet practice: round the survivor count down to a multiple of the TP
+    degree and, when a whole pod is gone, drop the pod axis.
+    """
+    left = total - chips_lost
+    out = []
+    for chips in range(left - left % model_axis, 0, -model_axis):
+        try:
+            out.append(plan_mesh(chips, model_axis=model_axis))
+        except ValueError:
+            continue
+        if len(out) >= 4:
+            break
+    return out

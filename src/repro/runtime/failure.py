@@ -1,0 +1,61 @@
+"""Coordinator-side failure detection (simulated clock, real state machine).
+
+Hosts send heartbeats; a host missing ``miss_k`` consecutive expected beats
+is declared dead, triggering the registered elastic-replan callback once
+per incident.  The same machine drives preemption notices (SIGTERM ->
+graceful drain) by marking hosts 'draining'.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Set
+
+
+@dataclasses.dataclass
+class HostState:
+    last_beat: float
+    status: str = "alive"      # alive | draining | dead
+
+
+class FailureDetector:
+    def __init__(self, hosts: List[str], interval: float = 10.0,
+                 miss_k: int = 3,
+                 on_failure: Optional[Callable[[Set[str]], None]] = None):
+        self.interval = interval
+        self.miss_k = miss_k
+        self.on_failure = on_failure
+        self.hosts: Dict[str, HostState] = {
+            h: HostState(last_beat=0.0) for h in hosts}
+        self._reported: Set[str] = set()
+
+    def heartbeat(self, host: str, now: float) -> None:
+        st = self.hosts[host]
+        if st.status != "dead":
+            st.last_beat = now
+            st.status = "alive" if st.status == "alive" else st.status
+
+    def drain(self, host: str) -> None:
+        """Preemption notice: host will leave gracefully."""
+        if self.hosts[host].status == "alive":
+            self.hosts[host].status = "draining"
+
+    def tick(self, now: float) -> Set[str]:
+        """Advance the detector; returns newly-dead hosts."""
+        newly_dead: Set[str] = set()
+        for h, st in self.hosts.items():
+            if st.status == "dead":
+                continue
+            if now - st.last_beat > self.miss_k * self.interval:
+                st.status = "dead"
+                newly_dead.add(h)
+        newly_dead -= self._reported
+        if newly_dead:
+            self._reported |= newly_dead
+            if self.on_failure:
+                self.on_failure(newly_dead)
+        return newly_dead
+
+    @property
+    def alive(self) -> List[str]:
+        return [h for h, st in self.hosts.items() if st.status == "alive"]

@@ -1,0 +1,59 @@
+"""Straggler detection + mitigation advice.
+
+Per-step host wall-times feed a rolling median; a host exceeding
+``threshold x median`` for ``patience`` consecutive steps is flagged.
+Mitigations (in escalation order) mirror fleet practice:
+
+1. ``rebalance`` — shrink the flagged host's microbatch share.
+2. ``bounded_staleness`` — for the cross-pod *compressed* gradient
+   exchange (repro.compression.grad), a late pod's records from step N-1
+   are reused at step N (error feedback absorbs the slack) — only
+   meaningful because records are small and deterministic.
+3. ``evict`` — hand the host to the failure detector / elastic replan.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import statistics
+from typing import Deque, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class StragglerFlag:
+    host: str
+    ratio: float
+    action: str
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 2.0, patience: int = 3,
+                 window: int = 32, evict_after: int = 20):
+        self.threshold = threshold
+        self.patience = patience
+        self.evict_after = evict_after
+        self.history: Dict[str, Deque[float]] = {}
+        self.strikes: Dict[str, int] = collections.defaultdict(int)
+        self.window = window
+
+    def record_step(self, durations: Dict[str, float]
+                    ) -> List[StragglerFlag]:
+        med = statistics.median(durations.values())
+        flags: List[StragglerFlag] = []
+        for host, d in durations.items():
+            self.history.setdefault(
+                host, collections.deque(maxlen=self.window)).append(d)
+            if med > 0 and d > self.threshold * med:
+                self.strikes[host] += 1
+            else:
+                self.strikes[host] = 0
+            s = self.strikes[host]
+            if s >= self.evict_after:
+                flags.append(StragglerFlag(host, d / med, "evict"))
+            elif s >= 2 * self.patience:
+                flags.append(StragglerFlag(host, d / med,
+                                           "bounded_staleness"))
+            elif s >= self.patience:
+                flags.append(StragglerFlag(host, d / med, "rebalance"))
+        return flags

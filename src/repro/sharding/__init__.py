@@ -1,0 +1,3 @@
+from .partition import param_specs, batch_specs, spec_for_leaf
+
+__all__ = ["param_specs", "batch_specs", "spec_for_leaf"]

@@ -1,0 +1,179 @@
+"""Parameter / batch partition rules (logical name -> PartitionSpec).
+
+MaxText-style path rules, made divisibility-aware: a dim is sharded over a
+mesh axis only if its size divides evenly (GSPMD would pad otherwise —
+silent memory waste we'd rather surface as a deliberate replication).
+
+Layout summary (single pod: data=16, model=16; multi-pod adds pod=2):
+
+========================= =========================================
+embed (V, D)              ("model", fsdp)    vocab over TP
+unembed (D, V)            (fsdp, "model")
+attn wq (D, H, hd)        (fsdp, "model", None)   heads over TP
+attn wk/wv (D, KH, hd)    (fsdp, "model", None) if KH%TP==0 else
+                          (fsdp, None, "model")   head_dim fallback
+attn wo (H, hd, D)        ("model", None, fsdp)
+mlp wi/wg (D, F)          (fsdp, "model")
+mlp wo (F, D)             ("model", fsdp)
+moe wi/wg (E, D, F)       ("model", fsdp, None)   experts = EP over TP
+moe wo (E, F, D)          ("model", None, fsdp)
+router (D, E)             (None, None)
+rglru wx/wy (D, W)        (fsdp, "model") ; wa/wi (W, W) (None, "model")
+ssd w_in (D, E')          (fsdp, "model") ; w_out (E', D) ("model", fsdp)
+norm scales / biases      replicated
+========================= =========================================
+
+``fsdp`` = "data" when ZeRO-style parameter sharding is on (default for
+>= 1B-param configs), else None.  Stacked layer axes (leading L) are never
+sharded.  The ``pod`` axis never shards parameters (pure DP across pods).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.base import ModelConfig
+
+
+def _div(n: int, axis_size: Optional[int]) -> bool:
+    return axis_size is not None and axis_size > 1 and n % axis_size == 0
+
+
+def spec_for_leaf(path: str, shape, cfg: ModelConfig,
+                  mesh_axes: Dict[str, int], fsdp: bool) -> P:
+    """Rule table; ``path`` is the '/'-joined param path (no layer idx)."""
+    model = mesh_axes.get("model", 1)
+    data = mesh_axes.get("data", 1)
+    nd = len(shape)
+    stacked = path.count("layers") + path.count("supers") > 0
+    off = 1 if stacked else 0          # leading stacked-layer axis
+    dims = shape[off:]
+
+    def build(*spec):
+        spec = spec + (None,) * (len(dims) - len(spec))
+        full = (None,) * off + spec
+        # drop shardings (or tuple members) that don't divide
+        out = []
+        for d, s in zip(shape, full):
+            if s is None:
+                out.append(None)
+            elif isinstance(s, tuple):
+                keep, prod = [], 1
+                for a in s:
+                    sz = mesh_axes.get(a, 1)
+                    if sz > 1 and d % (prod * sz) == 0:
+                        keep.append(a)
+                        prod *= sz
+                out.append(tuple(keep) if len(keep) > 1
+                           else (keep[0] if keep else None))
+            else:
+                size = mesh_axes.get(s, 1)
+                out.append(s if _div(d, size) else None)
+        return P(*out)
+
+    # ZeRO axis/axes: "data" by default; huge models additionally shard
+    # the *expert* parameters/optimizer state across pods (pure-DP pods
+    # would otherwise replicate 3.25 TB of Adam state per pod for llama4).
+    # Non-expert params never take the "pod" axis: cross-pod sharding of
+    # e.g. the embedding table trips SPMD gather repartitioning.
+    fs_full = fsdp if isinstance(fsdp, tuple) else \
+        ("data" if fsdp else None)
+    if isinstance(fs_full, tuple):
+        non_pod = tuple(a for a in fs_full if a != "pod")
+        fs = non_pod if len(non_pod) > 1 else \
+            (non_pod[0] if non_pod else None)
+    else:
+        fs = fs_full
+
+    if path.endswith("embed") and nd - off == 2:   # tok embed / unembed
+        if "unembed" in path:
+            return build(fs, "model")
+        return build("model", fs)
+    if "pos_dec" in path:
+        return build(None, None)
+    if path.endswith(("wq",)):
+        return build(fs, "model", None)
+    if path.endswith(("wk", "wv")):
+        kh = dims[1] if len(dims) >= 2 else 0
+        if _div(kh, model):
+            return build(fs, "model", None)
+        return build(fs, None, "model")
+    if path.endswith("wo") and len(dims) == 3:     # attn out (H, hd, D)
+        return build("model", None, fs)
+    # Expert weights are the memory giants: they take the *full* ZeRO axis
+    # set (incl. "pod" when given) — see fs_full above.
+    if "moe" in path and path.endswith(("wi", "wg")) and len(dims) == 3:
+        return build("model", fs_full, None)
+    if "moe" in path and path.endswith("wo") and len(dims) == 3:
+        return build("model", None, fs_full)
+    if path.endswith("router"):
+        return build(None, None)
+    if path.endswith(("wi", "wg")) and len(dims) == 2:   # dense mlp in
+        return build(fs, "model")
+    if path.endswith("wo") and len(dims) == 2:           # dense mlp out
+        return build("model", fs)
+    if path.endswith(("wx", "wy")) and len(dims) == 2:   # rglru in
+        return build(fs, "model")
+    if path.endswith(("wa",)) and len(dims) == 2:        # rglru gates
+        return build(None, "model")
+    if path.endswith("w_in"):
+        return build(fs, "model")
+    if path.endswith("w_out"):
+        return build("model", fs)
+    if path.endswith("conv") and len(dims) == 2:
+        return build(None, "model")
+    if path.endswith("lam") and len(dims) == 1:
+        return build("model")
+    # norms, biases, scalars, A_log/dt_bias/D
+    return P(*([None] * nd))
+
+
+def param_specs(params: Any, cfg: ModelConfig, mesh_axes: Dict[str, int],
+                fsdp=True, strategy: str = "tp"):
+    """Pytree of PartitionSpecs matching ``params``.
+
+    ``fsdp``: False (no ZeRO), True ("data" axis), or an explicit axis
+    tuple like ("pod", "data") for cross-pod ZeRO on huge models.
+
+    ``strategy``: "tp" (features over the model axis + ZeRO over data) or
+    "fsdp" (no feature sharding; parameters ZeRO-sharded over data+model —
+    the right choice for <=10B training, where TP activation all-reduces
+    scale with tokens but ZeRO gathers scale only with parameters; §Perf).
+    """
+    if strategy == "fsdp":
+        mesh_axes = dict(mesh_axes)
+        fsdp_axes = tuple(a for a in ("data", "model")
+                          if mesh_axes.get(a, 1) > 1)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        specs = []
+        no_model = {**mesh_axes, "model": 1}
+        for path, leaf in flat:
+            pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path)
+            # Embedding tables consumed by BOTH a token gather and (when
+            # tied) the CE unembedding slice crash XLA's SPMD partitioner
+            # when 2D-sharded here — keep them on the data axis only.
+            fa = ("data",) if pstr.endswith("embed") else fsdp_axes
+            specs.append(spec_for_leaf(pstr, leaf.shape, cfg, no_model, fa))
+        return jax.tree_util.tree_unflatten(treedef, specs)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        specs.append(spec_for_leaf(pstr, leaf.shape, cfg, mesh_axes, fsdp))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_specs(batch: Any, mesh_axes: Dict[str, int]):
+    """Batch dims shard over (pod, data); everything else replicated."""
+    axes = tuple(a for a in ("pod", "data") if mesh_axes.get(a, 1) > 1)
+    bspec = axes if len(axes) > 1 else (axes[0] if axes else None)
+
+    def one(x):
+        return P(bspec, *([None] * (x.ndim - 1)))
+
+    return jax.tree.map(one, batch)

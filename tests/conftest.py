@@ -1,0 +1,8 @@
+# NOTE (per the brief): no XLA_FLAGS / device-count overrides here — smoke
+# tests and benches must see the real (1-device) CPU.  Only the dry-run
+# launcher sets xla_force_host_platform_device_count, in its own process.
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: subprocess compile tests (~20s each)")

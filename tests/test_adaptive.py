@@ -1,0 +1,57 @@
+"""Adaptive-ε controller (the paper's §8 extension): holds a target
+compression ratio across regime changes that break any fixed ε."""
+
+import numpy as np
+import pytest
+
+from repro.core.adaptive import AdaptiveEps, compare_fixed_vs_adaptive
+
+
+def _regime_change_stream(n=6000, seed=0):
+    """Smooth regime -> noisy regime -> smooth: no fixed eps suits all."""
+    rng = np.random.default_rng(seed)
+    ts = np.arange(n, dtype=float)
+    y = np.concatenate([
+        np.cumsum(rng.normal(0, 0.02, n // 3)),            # very smooth
+        10 * rng.normal(0, 1.0, n // 3),                   # pure noise
+        5 + np.cumsum(rng.normal(0, 0.02, n - 2 * (n // 3))),
+    ])
+    return ts, y
+
+
+def test_adaptive_holds_target_across_regimes():
+    ts, ys = _regime_change_stream()
+    ctl = AdaptiveEps(target_ratio=0.2, eps0=0.1, window=512)
+    out = ctl.run(ts, ys)
+    # epsilon actually adapted (grew in the noisy regime)
+    eps_vals = [e for _, e in out["eps_trace"]]
+    assert max(eps_vals) / min(eps_vals) > 3
+    # majority of steady-state windows near the target
+    tail = out["window_ratios"][2:]
+    assert np.mean(np.abs(tail - 0.2) <= 0.12) >= 0.5
+    # the per-window eps guarantee held throughout (checked inside run
+    # via point_metrics(eps=...)); errors are finite and recorded
+    assert np.isfinite(out["errors"]).all()
+
+
+def test_adaptive_vs_fixed_on_regime_change():
+    ts, ys = _regime_change_stream(seed=1)
+    rep = compare_fixed_vs_adaptive(ts, ys, fixed_eps=0.05,
+                                    target_ratio=0.15)
+    # fixed eps tuned for the smooth regime blows past the byte budget
+    # on the noisy third; the controller stays near target overall.
+    assert rep["fixed_ratio"] > 0.3
+    assert rep["adaptive_ratio"] < rep["fixed_ratio"] * 0.75
+    lo, hi = rep["adaptive_eps_range"]
+    assert hi > lo  # it moved
+
+
+def test_adaptive_stationary_stream_converges():
+    rng = np.random.default_rng(2)
+    n = 4096
+    ts = np.arange(n, dtype=float)
+    ys = np.cumsum(rng.normal(0, 0.5, n))
+    ctl = AdaptiveEps(target_ratio=0.1, eps0=1e-3, window=256)
+    out = ctl.run(ts, ys)
+    # converges: the last windows sit near the target
+    assert abs(np.median(out["window_ratios"][-4:]) - 0.1) < 0.06

@@ -1,0 +1,90 @@
+"""Per-architecture smoke tests: reduced same-family configs, one
+forward/train step + one decode step on CPU, asserting shapes + no NaNs.
+
+The FULL configs are exercised only by the dry-run (ShapeDtypeStruct)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config, all_configs
+from repro.launch.specs import demo_batch
+from repro.models.zoo import build_model
+from repro.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_brief(arch):
+    """The FULL configs carry the exact published dimensions."""
+    cfg = get_config(arch)
+    expected = {
+        "yi_6b": (32, 4096, 32, 4, 11008, 64000),
+        "gemma_2b": (18, 2048, 8, 1, 16384, 256000),
+        "yi_9b": (48, 4096, 32, 4, 11008, 64000),
+        "granite_3_2b": (40, 2048, 32, 8, 8192, 49155),
+        "recurrentgemma_2b": (26, 2560, 10, 1, 7680, 256000),
+        "mamba2_780m": (48, 1536, None, None, 0, 50280),
+        "llama4_maverick": (48, 5120, 40, 8, 16384, 202048),
+        "olmoe_1b_7b": (16, 2048, 16, 16, 1024, 50304),
+        "whisper_base": (6, 512, 8, 8, 2048, 51865),
+        "qwen2_vl_7b": (28, 3584, 28, 4, 18944, 152064),
+    }[arch]
+    L, D, H, KV, FF, V = expected
+    assert cfg.n_layers == L and cfg.d_model == D and cfg.vocab == V
+    assert cfg.d_ff == FF
+    if H is not None:
+        assert cfg.n_heads == H and cfg.n_kv_heads == KV
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch, key):
+    cfg = get_config(arch, smoke=True)
+    api = build_model(cfg)
+    params = api.init(key)
+    batch = demo_batch(cfg, B=2, T=32, key=key)
+    loss = api.loss(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    # one full train step (grad + AdamW update)
+    acfg = AdamWConfig()
+    opt = adamw_init(params, acfg)
+    grads = jax.grad(api.loss)(params, batch)
+    for g in jax.tree.leaves(grads):
+        assert bool(jnp.isfinite(g).all()), arch
+    new_params, opt, stats = adamw_update(grads, opt, params, 1e-3, acfg)
+    assert bool(jnp.isfinite(stats["grad_norm"]))
+    # params actually changed
+    moved = any(
+        float(jnp.abs(a - b).max()) > 0
+        for a, b in zip(jax.tree.leaves(new_params),
+                        jax.tree.leaves(params)))
+    assert moved, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_steps(arch, key):
+    cfg = get_config(arch, smoke=True)
+    api = build_model(cfg)
+    params = api.init(key)
+    batch = demo_batch(cfg, B=2, T=8, key=key)
+    cache = api.make_cache(params, batch, max_len=16)
+    tok = batch["tokens"][:, :1]
+    for _ in range(3):
+        logits, cache = api.decode(params, tok, cache, batch)
+        assert logits.shape == (2, 1, cfg.vocab_padded)
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), arch
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+
+def test_all_configs_loadable():
+    full = all_configs()
+    smoke = all_configs(smoke=True)
+    assert len(full) == 10 and len(smoke) == 10
+    for name, cfg in full.items():
+        assert cfg.family in ("dense", "moe", "hybrid", "ssm", "encdec",
+                              "vlm"), name

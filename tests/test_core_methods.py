@@ -1,0 +1,209 @@
+"""Unit + property tests for the exact sequential PLA methods."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import METHODS
+from repro.core.methods import (run_angle, run_continuous, run_disjoint,
+                                run_linear, run_mixed, run_swing)
+from repro.core.types import DisjointKnot, JointKnot
+
+
+def _signals():
+    rng = np.random.default_rng(42)
+    n = 600
+    ts = np.arange(n, dtype=float)
+    sigs = {
+        "line": 0.5 * ts + 3.0,
+        "sine": 10 * np.sin(ts / 20.0),
+        "walk": np.cumsum(rng.normal(0, 1, n)),
+        "steps": np.repeat(rng.normal(0, 5, n // 50), 50),
+        "noise": rng.normal(0, 5, n),
+        "spiky": np.where(ts % 37 == 0, 50.0, 0.0) + rng.normal(0, 0.1, n),
+    }
+    return ts, sigs
+
+
+TS, SIGS = _signals()
+ALL_METHODS = list(METHODS)
+
+
+def _max_err(out, ts, ys):
+    errs = []
+    for seg in out.segments:
+        for i in range(seg.i0, seg.i1):
+            errs.append(abs(seg.line(float(ts[i])) - float(ys[i])))
+    return max(errs)
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+@pytest.mark.parametrize("sig", list(SIGS))
+@pytest.mark.parametrize("eps", [0.1, 1.0, 10.0])
+def test_eps_guarantee(method, sig, eps):
+    """Every reconstructed point is within eps of its original (L-inf)."""
+    out = METHODS[method](TS, SIGS[sig], eps)
+    assert _max_err(out, TS, SIGS[sig]) <= eps * (1 + 1e-9) + 1e-12
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_full_coverage_and_order(method):
+    """Segments tile [0, n) exactly, in order; knots = segments + 1."""
+    ys = SIGS["walk"]
+    out = METHODS[method](TS, ys, 1.0)
+    assert out.segments[0].i0 == 0
+    assert out.segments[-1].i1 == len(TS)
+    for a, b in zip(out.segments, out.segments[1:]):
+        assert a.i1 == b.i0
+        assert a.n >= 1
+    assert len(out.knots) == len(out.segments) + 1
+    assert isinstance(out.knots[0], JointKnot)
+    assert isinstance(out.knots[-1], JointKnot)
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_knot_times_strictly_increasing(method):
+    ys = SIGS["sine"]
+    out = METHODS[method](TS, ys, 0.5)
+    tvals = [k.t for k in out.knots]
+    assert all(b > a for a, b in zip(tvals, tvals[1:])), tvals[:10]
+
+
+def test_disjoint_is_optimal_vs_greedy_variants():
+    """Optimal disjoint never uses more segments than Angle (greedy)."""
+    for sig, ys in SIGS.items():
+        for eps in (0.5, 2.0):
+            nd = len(run_disjoint(TS, ys, eps).segments)
+            na = len(run_angle(TS, ys, eps).segments)
+            nl = len(run_linear(TS, ys, eps).segments)
+            assert nd <= na, (sig, eps)
+            assert nd <= nl, (sig, eps)
+
+
+def test_disjoint_maximality():
+    """Each greedy-optimal segment cannot be extended by one more point."""
+    from repro.core.hulls import HullFitter
+    ys = SIGS["walk"]
+    eps = 1.0
+    out = run_disjoint(TS, ys, eps)
+    for seg in out.segments[:-1]:
+        f = HullFitter()
+        ok = True
+        for i in range(seg.i0, seg.i1 + 1):  # try to include one more
+            t, y = float(TS[i]), float(ys[i])
+            if not f.can_add(t, y - eps, y + eps):
+                ok = False
+                break
+            f.add(t, y - eps, y + eps)
+        assert not ok, f"segment [{seg.i0},{seg.i1}) was extendable"
+
+
+def test_continuous_polyline_is_connected():
+    """Consecutive segment lines agree at the shared knots."""
+    ys = SIGS["sine"]
+    out = run_continuous(TS, ys, 0.5)
+    knots = [k for k in out.knots if isinstance(k, JointKnot)]
+    assert len(knots) == len(out.segments) + 1
+    for seg, kl, kr in zip(out.segments, knots, knots[1:]):
+        assert seg.line(kl.t) == pytest.approx(kl.y, abs=1e-8)
+        assert seg.line(kr.t) == pytest.approx(kr.y, abs=1e-8)
+
+
+def test_continuous_not_worse_than_swing():
+    """Deferred-choice continuous should beat fixed-origin swing."""
+    worse = 0
+    for sig, ys in SIGS.items():
+        nc = len(run_continuous(TS, ys, 1.0).segments)
+        nsw = len(run_swing(TS, ys, 1.0).segments)
+        worse += int(nc > nsw)
+    assert worse <= 1  # allow one pathological signal
+
+
+def test_mixed_size_not_worse_than_disjoint():
+    """Mixed total knot fields <= pure-disjoint fields (Luo's criterion)."""
+    for sig, ys in SIGS.items():
+        m = run_mixed(TS, ys, 1.0)
+        d = run_disjoint(TS, ys, 1.0)
+        def size(out):
+            return sum(k.fields for k in out.knots)
+        # Mixed may produce at most as many segments and saves one field
+        # per joint knot.
+        assert size(m) <= size(d) + 2, sig
+
+
+def test_mixed_emits_joint_knots_on_smooth_data():
+    ys = SIGS["sine"]
+    out = run_mixed(TS, ys, 0.2)
+    kinds = {type(k).__name__ for k in out.knots[1:-1]}
+    assert "JointKnot" in kinds
+
+
+def test_linear_lower_mean_error_than_disjoint():
+    """The paper's headline claim for the Linear method (§3.5, Table 3)."""
+    wins = 0
+    cases = 0
+    for sig in ("sine", "walk", "line", "steps"):
+        ys = SIGS[sig]
+        for eps in (0.5, 2.0):
+            lo = run_linear(TS, ys, eps)
+            do = run_disjoint(TS, ys, eps)
+            def mean_err(out):
+                tot = 0.0
+                for seg in out.segments:
+                    for i in range(seg.i0, seg.i1):
+                        tot += abs(seg.line(float(TS[i])) - float(ys[i]))
+                return tot / len(TS)
+            cases += 1
+            wins += int(mean_err(lo) <= mean_err(do))
+    assert wins >= cases * 0.7  # dominant, not universal
+
+
+def test_max_run_cap_is_respected():
+    ys = SIGS["line"]  # infinitely compressible
+    for method in ("angle", "disjoint", "linear"):
+        out = METHODS[method](TS, ys, 1.0, max_run=256)
+        assert all(s.n <= 256 for s in out.segments)
+        out = METHODS[method](TS, ys, 1.0, max_run=127)
+        assert all(s.n <= 127 for s in out.segments)
+
+
+def test_perfect_line_single_segment():
+    ys = 2.0 * TS + 7.0
+    for method in ALL_METHODS:
+        out = METHODS[method](TS, ys, 0.5)
+        assert len(out.segments) == 1, method
+        assert _max_err(out, TS, ys) < 1e-6, method
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    ys=st.lists(st.floats(min_value=-1e4, max_value=1e4,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=120),
+    eps=st.floats(min_value=1e-3, max_value=1e3),
+    method=st.sampled_from(ALL_METHODS),
+)
+def test_property_eps_and_coverage(ys, eps, method):
+    """Property: any stream, any eps -> coverage + eps guarantee hold."""
+    ts = np.arange(len(ys), dtype=float)
+    out = METHODS[method](ts, np.asarray(ys), eps)
+    assert out.segments[0].i0 == 0 and out.segments[-1].i1 == len(ys)
+    for a, b in zip(out.segments, out.segments[1:]):
+        assert a.i1 == b.i0
+    assert _max_err(out, ts, np.asarray(ys)) <= eps * (1 + 1e-6) + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(2, 300),
+    scale=st.floats(min_value=1e-2, max_value=1e2),
+)
+def test_property_irregular_timestamps(seed, n, scale):
+    """Strictly-increasing but irregular timestamps are handled."""
+    rng = np.random.default_rng(seed)
+    ts = np.cumsum(rng.uniform(0.1, 3.0, n))
+    ys = np.cumsum(rng.normal(0, scale, n))
+    for method in ("swing", "angle", "disjoint", "linear"):
+        out = METHODS[method](ts, ys, scale)
+        assert _max_err(out, ts, ys) <= scale * (1 + 1e-6) + 1e-9

@@ -1,0 +1,181 @@
+"""Tests for the streaming protocols, metrics, and byte-level codecs."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (COMBINATIONS, METHODS, PROTOCOL_CAPS, PROTOCOLS,
+                        evaluate, evaluate_all, point_metrics,
+                        overall_compression)
+from repro.core.protocols import (decode_implicit, decode_singlestream,
+                                  decode_singlestreamv, decode_twostreams,
+                                  encode_implicit, encode_singlestream,
+                                  encode_singlestreamv, encode_twostreams)
+
+
+def _stream(seed=7, n=1500, kind="walk"):
+    rng = np.random.default_rng(seed)
+    ts = np.arange(n, dtype=float)
+    if kind == "walk":
+        ys = np.cumsum(rng.normal(0, 0.5, n))
+    elif kind == "noise":
+        ys = rng.normal(0, 10, n)
+    elif kind == "smooth":
+        ys = np.sin(ts / 40) * 20 + 0.01 * ts
+    return ts, ys
+
+
+@pytest.mark.parametrize("key", list(COMBINATIONS))
+@pytest.mark.parametrize("kind", ["walk", "noise", "smooth"])
+def test_all_combinations_cover_and_respect_eps(key, kind):
+    ts, ys = _stream(kind=kind)
+    r = evaluate_all(ts, ys, eps=1.0, keys=[key])[key]
+    # point_metrics already raises on coverage/eps violation.
+    assert np.isfinite(r.metrics.ratio).all()
+    assert (r.metrics.latency >= 0).all()
+
+
+def test_twostreams_never_inflates():
+    """Table 3's headline: TwoStreams output <= input bytes, always."""
+    for kind in ("walk", "noise", "smooth"):
+        for eps in (1e-6, 0.1, 1.0, 10.0):  # incl. hopeless thresholds
+            ts, ys = _stream(kind=kind)
+            for method in ("angle", "disjoint", "linear"):
+                r = evaluate(method, "twostreams", ts, ys, eps)
+                assert r.overall_ratio <= 1.0 + 1e-12, (kind, eps, method)
+
+
+def test_implicit_inflates_on_incompressible_data():
+    """Fig. 8: the implicit protocol *inflates* incompressible streams.
+
+    With eps ~ 0 any two points still fit one line, so the optimal
+    disjoint method floors at 2-point segments: 24 B per 2 points = 1.5x
+    inflation (the 3x of Fig. 8 is the 1-point-per-knot worst bound).
+    Joint-knot methods floor at 16 B per <=2 points (up to 2x).
+    """
+    ts, ys = _stream(kind="noise")
+    r = evaluate("disjoint", "implicit", ts, ys, eps=1e-9)
+    assert r.overall_ratio >= 1.45  # ~1.5x modulo stream-edge records
+    r2 = evaluate("swing", "implicit", ts, ys, eps=1e-9)
+    assert r2.overall_ratio >= 1.9  # 1-point joint-knot segments: ~2x
+
+
+def test_singlestream_worst_case_one_extra_byte():
+    """§5.2.2: worst case wastes exactly 1 byte per input point."""
+    ts, ys = _stream(kind="noise")
+    r = evaluate("disjoint", "singlestream", ts, ys, eps=1e-9)
+    assert r.overall_ratio <= 9.0 / 8.0 + 1e-12
+
+
+def test_singleton_values_are_exact():
+    ts, ys = _stream(kind="noise")
+    for proto in ("twostreams", "singlestream", "singlestreamv"):
+        r = evaluate("disjoint", proto, ts, ys, eps=0.05)
+        # noise at eps=0.05 -> almost everything is singletons, error == 0
+        frac_zero = float((r.metrics.error == 0).mean())
+        assert frac_zero > 0.9, proto
+
+
+def test_latency_bounded_by_cap():
+    ts, ys = _stream(kind="smooth")
+    for proto, cap in (("twostreams", 256), ("singlestream", 256),
+                       ("singlestreamv", 127)):
+        r = evaluate("disjoint", proto, ts, ys, eps=50.0)  # huge eps
+        assert r.metrics.latency.max() <= cap + 1, proto
+
+
+def test_protocol_record_sizes():
+    ts, ys = _stream(kind="smooth", n=400)
+    out = METHODS["disjoint"](ts, ys, 1.0, max_run=256)
+    recs = PROTOCOLS["twostreams"](out, ts, ys)
+    for r in recs:
+        assert r.nbytes == (25 if r.kind == "segment" else 8)
+    recs = PROTOCOLS["singlestream"](out, ts, ys)
+    for r in recs:
+        assert r.nbytes == (17 if r.kind == "segment" else 9)
+    out127 = METHODS["disjoint"](ts, ys, 1.0, max_run=127)
+    recs = PROTOCOLS["singlestreamv"](out127, ts, ys)
+    for r in recs:
+        if r.kind == "segment":
+            assert r.nbytes == 17
+        else:
+            assert r.nbytes == 1 + 8 * len(r.values)
+
+
+# ---------------------------------------------------------------------------
+# Byte-level codec roundtrips: decode(encode(x)) reproduces the protocol's
+# reconstruction exactly, and the encoded size matches the accounting.
+# ---------------------------------------------------------------------------
+
+def _recon_from_records(records, n):
+    vals = np.full(n, np.nan)
+    for r in records:
+        for k, i in enumerate(r.covers):
+            vals[i] = r.values[k]
+    return vals
+
+
+@pytest.mark.parametrize("method", ["angle", "disjoint", "linear"])
+@pytest.mark.parametrize("kind", ["walk", "noise", "smooth"])
+def test_codec_roundtrip_singlestream(method, kind):
+    ts, ys = _stream(kind=kind, n=800)
+    out = METHODS[method](ts, ys, 1.0, max_run=256)
+    recs = PROTOCOLS["singlestream"](out, ts, ys)
+    blob = encode_singlestream(recs)
+    assert len(blob) == sum(r.nbytes for r in recs)
+    dec = decode_singlestream(blob, ts)
+    np.testing.assert_allclose(dec, _recon_from_records(recs, len(ts)),
+                               rtol=0, atol=0)
+    assert np.abs(np.asarray(dec) - ys).max() <= 1.0 * (1 + 1e-9)
+
+
+@pytest.mark.parametrize("kind", ["walk", "noise", "smooth"])
+def test_codec_roundtrip_singlestreamv(kind):
+    ts, ys = _stream(kind=kind, n=800)
+    out = METHODS["disjoint"](ts, ys, 1.0, max_run=127)
+    recs = PROTOCOLS["singlestreamv"](out, ts, ys)
+    blob = encode_singlestreamv(recs)
+    assert len(blob) == sum(r.nbytes for r in recs)
+    dec = decode_singlestreamv(blob, ts)
+    np.testing.assert_allclose(dec, _recon_from_records(recs, len(ts)))
+
+
+@pytest.mark.parametrize("kind", ["walk", "noise", "smooth"])
+def test_codec_roundtrip_twostreams(kind):
+    ts, ys = _stream(kind=kind, n=800)
+    out = METHODS["disjoint"](ts, ys, 1.0, max_run=256)
+    recs = PROTOCOLS["twostreams"](out, ts, ys)
+    seg_blob, single_blob = encode_twostreams(recs)
+    assert len(seg_blob) + len(single_blob) == sum(r.nbytes for r in recs)
+    dec = decode_twostreams(seg_blob, single_blob, ts)
+    np.testing.assert_allclose(dec, _recon_from_records(recs, len(ts)))
+
+
+@pytest.mark.parametrize("method", ["swing", "disjoint", "continuous", "mixed"])
+def test_codec_roundtrip_implicit(method):
+    ts, ys = _stream(kind="walk", n=600)
+    out = METHODS[method](ts, ys, 1.0)
+    recs = PROTOCOLS["implicit"](out, ts, ys)
+    blob = encode_implicit(recs, out)
+    # Per-record accounting assigns each knot to the segment it terminates;
+    # the stream's opening joint knot (16 B, one-off) is the only extra.
+    assert len(blob) == sum(r.nbytes for r in recs) + 16
+    dec = decode_implicit(blob, ts)
+    err = np.abs(np.asarray(dec) - ys).max()
+    assert err <= 1.0 * (1 + 1e-9), f"{method}: {err}"
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       n=st.integers(4, 400),
+       eps=st.floats(min_value=1e-2, max_value=50.0))
+def test_property_protocol_roundtrip(seed, n, eps):
+    """Any stream, any eps: singlestream codec decodes within eps."""
+    rng = np.random.default_rng(seed)
+    ts = np.arange(n, dtype=float)
+    ys = np.cumsum(rng.normal(0, 1.0, n))
+    out = METHODS["disjoint"](ts, ys, eps, max_run=256)
+    recs = PROTOCOLS["singlestream"](out, ts, ys)
+    dec = decode_singlestream(encode_singlestream(recs), ts)
+    assert len(dec) == n
+    assert np.abs(np.asarray(dec) - ys).max() <= eps * (1 + 1e-6) + 1e-9

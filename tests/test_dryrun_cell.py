@@ -1,0 +1,41 @@
+"""End-to-end dry-run smoke: lower+compile one real cell in a subprocess
+(the 512-device XLA flag must be set before jax initializes, so this can't
+run in the main pytest process)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+from repro.launch.dryrun import lower_cell
+rec = lower_cell("{arch}", "{shape}", {multi})
+print("RESULT " + json.dumps({{k: rec.get(k) for k in
+    ("status", "fits_hbm", "n_params")}}))
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape,multi", [
+    ("whisper_base", "decode_32k", False),
+    ("mamba2_780m", "long_500k", True),
+])
+def test_dryrun_cell_subprocess(arch, shape, multi):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-c",
+         _SCRIPT.format(arch=arch, shape=shape, multi=multi)],
+        capture_output=True, text=True, timeout=560, env=env, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")]
+    assert line, out.stdout[-2000:]
+    rec = json.loads(line[0][7:])
+    assert rec["status"] == "ok"
+    assert rec["fits_hbm"] is True

@@ -1,0 +1,98 @@
+"""Batched JAX PLA (core/jax_pla.py) vs. the exact sequential methods."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.jax_pla import (angle_segment, disjoint_segment,
+                                linear_segment, swing_segment,
+                                propagate_lines, to_records,
+                                decode_records, singlestream_nbytes)
+from repro.core.methods import (run_angle, run_disjoint, run_linear,
+                                run_swing)
+
+PAIRS = {
+    "swing": (swing_segment, run_swing),
+    "angle": (angle_segment, run_angle),
+    "disjoint": (disjoint_segment, run_disjoint),
+    "linear": (linear_segment, run_linear),
+}
+
+
+def _streams(seed=0, S=6, T=250):
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.normal(0, 0.5, (S, T)), axis=1)
+
+
+@pytest.mark.parametrize("name", list(PAIRS))
+@pytest.mark.parametrize("eps", [0.3, 1.0, 4.0])
+def test_breaks_match_sequential(name, eps):
+    """Batched scan reproduces the sequential oracle's break decisions.
+
+    Run in float64 to avoid spurious decision flips at fp32 boundaries.
+    """
+    jfn, sfn = PAIRS[name]
+    y = _streams()
+    S, T = y.shape
+    ts = np.arange(T, dtype=float)
+    seg = jfn(jnp.asarray(y, jnp.float64), eps, max_run=128)
+    for s in range(S):
+        out = sfn(ts, y[s], eps, max_run=128)
+        seq = np.zeros(T, bool)
+        for sg in out.segments:
+            seq[sg.i1 - 1] = True
+        np.testing.assert_array_equal(np.asarray(seg.breaks[s]), seq,
+                                      err_msg=f"{name} row {s}")
+
+
+@pytest.mark.parametrize("name", list(PAIRS))
+def test_reconstruction_within_eps(name):
+    jfn, _ = PAIRS[name]
+    y = _streams(seed=1, S=16, T=400)
+    seg = jfn(jnp.asarray(y, jnp.float32), 1.0, max_run=256)
+    recon = propagate_lines(seg)
+    assert float(jnp.abs(recon - jnp.asarray(y, jnp.float32)).max()) \
+        <= 1.0 * (1 + 1e-4) + 1e-5  # f32: eps + O(ulp(|y|))
+
+
+def test_records_roundtrip_and_overflow():
+    y = _streams(seed=2, S=12, T=300)
+    seg = disjoint_segment(jnp.asarray(y, jnp.float32), 1.0, max_run=64)
+    rec = to_records(seg, k_max=8)  # deliberately tight budget
+    dec = decode_records(rec, 300)
+    full = propagate_lines(seg)
+    ok = ~np.asarray(rec.overflow)
+    if ok.any():
+        np.testing.assert_allclose(np.asarray(dec)[ok], np.asarray(full)[ok],
+                                   rtol=1e-5, atol=1e-5)
+    # Overflow rows still produce finite output (tail extension).
+    assert np.isfinite(np.asarray(dec)).all()
+
+
+def test_singlestream_byte_accounting_matches_core():
+    """jax-side SingleStream byte accounting == paper protocol accounting."""
+    from repro.core import METHODS, PROTOCOLS
+    y = _streams(seed=3, S=4, T=200)
+    ts = np.arange(200, dtype=float)
+    seg = disjoint_segment(jnp.asarray(y, jnp.float64), 1.0, max_run=256)
+    rec = to_records(seg, k_max=128)
+    nbytes = singlestream_nbytes(rec, 200, value_bytes=8, counter_bytes=1)
+    for s in range(4):
+        out = METHODS["disjoint"](ts, y[s], 1.0, max_run=256)
+        recs = PROTOCOLS["singlestream"](out, ts, y[s])
+        expect = sum(r.nbytes for r in recs)
+        assert int(nbytes[s]) == int(expect), s
+
+
+def test_per_row_eps():
+    """eps may vary per stream row."""
+    y = _streams(seed=4, S=4, T=200)
+    eps = jnp.asarray([0.1, 0.5, 2.0, 8.0], jnp.float32)
+    seg = angle_segment(jnp.asarray(y, jnp.float32), eps, max_run=256)
+    recon = propagate_lines(seg)
+    err = jnp.abs(recon - jnp.asarray(y, jnp.float32)).max(axis=1)
+    assert bool((err <= eps * (1 + 1e-4) + 1e-5).all())
+    # Larger eps => no more segments than smaller eps.
+    counts = seg.breaks.sum(axis=1)
+    assert int(counts[3]) <= int(counts[0])

@@ -1,0 +1,107 @@
+"""Pallas kernel validation: shape/dtype sweeps vs. the pure-jnp oracles.
+
+Kernels run in interpret mode on CPU (bit-accurate kernel-body semantics).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.jax_pla import SegmentOutput, propagate_lines, to_records, \
+    decode_records
+from repro.kernels.ops import (KERNEL_SEGMENTERS, reconstruct_tpu)
+from repro.kernels.ref import REF_SEGMENTERS, reconstruct_ref
+
+KERNELS = list(KERNEL_SEGMENTERS)
+
+
+def _make(seed, S, T, kind="walk"):
+    rng = np.random.default_rng(seed)
+    if kind == "walk":
+        y = np.cumsum(rng.normal(0, 0.5, (S, T)), axis=1)
+    elif kind == "noise":
+        y = rng.normal(0, 5.0, (S, T))
+    elif kind == "ramp":
+        y = np.linspace(0, 10, T)[None, :] * rng.uniform(0.5, 2, (S, 1))
+    elif kind == "mixed":
+        y = np.cumsum(rng.normal(0, 0.5, (S, T)), axis=1)
+        y[::3] = rng.normal(0, 5.0, (S // 3 + (S % 3 > 0), T))
+    return jnp.asarray(y, jnp.float32)
+
+
+# Shape sweep: multiples and non-multiples of the (128, 128) tiles,
+# tiny and tall-skinny cases.
+SHAPES = [(1, 16), (3, 130), (128, 128), (130, 200), (256, 384), (64, 1024)]
+
+
+@pytest.mark.parametrize("kernel", KERNELS)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_kernel_matches_ref_shapes(kernel, shape):
+    S, T = shape
+    y = _make(0, S, T)
+    k = KERNEL_SEGMENTERS[kernel](y, 1.0, max_run=64)
+    r = REF_SEGMENTERS[kernel](y, 1.0, max_run=64)
+    assert k.breaks.shape == (S, T)
+    np.testing.assert_array_equal(np.asarray(k.breaks), np.asarray(r.breaks))
+    m = np.asarray(r.breaks)
+    np.testing.assert_allclose(np.asarray(k.a)[m], np.asarray(r.a)[m],
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(k.v)[m], np.asarray(r.v)[m],
+                               rtol=1e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize("kernel", KERNELS)
+@pytest.mark.parametrize("kind", ["walk", "noise", "ramp", "mixed"])
+@pytest.mark.parametrize("eps", [0.1, 1.0, 10.0])
+def test_kernel_eps_guarantee(kernel, kind, eps):
+    y = _make(1, 64, 300, kind)
+    seg = KERNEL_SEGMENTERS[kernel](y, eps, max_run=128)
+    recon = reconstruct_tpu(seg)
+    err = float(jnp.abs(recon - y).max())
+    assert err <= eps * (1 + 1e-4) + 1e-5, (kernel, kind, err)  # f32: eps + O(ulp(|y|))
+
+
+@pytest.mark.parametrize("kernel", KERNELS)
+def test_kernel_max_run_cap(kernel):
+    y = _make(2, 32, 400, "ramp")  # highly compressible
+    seg = KERNEL_SEGMENTERS[kernel](y, 5.0, max_run=32)
+    # max gap between consecutive breaks <= 32
+    for row in np.asarray(seg.breaks):
+        idx = np.flatnonzero(row)
+        gaps = np.diff(np.concatenate([[-1], idx]))
+        assert gaps.max() <= 32
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_reconstruct_kernel_matches_ref(shape):
+    S, T = shape
+    y = _make(3, S, T)
+    seg = REF_SEGMENTERS["disjoint"](y, 1.0, max_run=64)
+    rk = reconstruct_tpu(seg)
+    rr = reconstruct_ref(seg)
+    np.testing.assert_allclose(np.asarray(rk), np.asarray(rr),
+                               rtol=1e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize("block_t", [8, 64, 128])
+def test_kernel_block_shape_invariance(block_t):
+    """Results must not depend on the VMEM tile decomposition."""
+    y = _make(4, 40, 260)
+    base = KERNEL_SEGMENTERS["disjoint"](y, 1.0, max_run=64)
+    other = KERNEL_SEGMENTERS["disjoint"](y, 1.0, max_run=64,
+                                          block_s=128, block_t=block_t)
+    np.testing.assert_array_equal(np.asarray(base.breaks),
+                                  np.asarray(other.breaks))
+    m = np.asarray(base.breaks)
+    np.testing.assert_allclose(np.asarray(base.a)[m], np.asarray(other.a)[m])
+
+
+def test_kernel_records_pipeline():
+    """Kernel segmentation -> fixed-slot records -> decode stays within eps."""
+    y = _make(5, 48, 256)
+    seg = KERNEL_SEGMENTERS["angle"](y, 1.0, max_run=64)
+    rec = to_records(seg, k_max=96)
+    dec = decode_records(rec, 256)
+    ok = ~np.asarray(rec.overflow)
+    err = np.abs(np.asarray(dec) - np.asarray(y))[ok].max()
+    assert err <= 1.0 * (1 + 1e-4) + 1e-5
