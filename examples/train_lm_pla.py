@@ -31,6 +31,7 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
+    from repro.compat import sharding as compat_sharding
     from repro.compression.grad import GradCompressionConfig
     from repro.compression.telemetry import TelemetryCompressor
     from repro.data.pipeline import PipelineConfig, TokenPipeline
@@ -53,9 +54,8 @@ def main():
     if args.pods:
         n_dev = len(jax.devices())
         assert n_dev % args.pods == 0, "need devices divisible by pods"
-        mesh = jax.make_mesh(
-            (args.pods, n_dev // args.pods), ("pod", "data"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat_sharding.make_mesh(
+            (args.pods, n_dev // args.pods), ("pod", "data"))
         grad_mode = "pla"
         print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}, "
               f"cross-pod PLA gradient compression ON")
@@ -72,8 +72,7 @@ def main():
                        grad_mode=grad_mode,
                        pla=GradCompressionConfig(k_max=32, eps_rel=0.05))
 
-    ctx = jax.set_mesh(mesh) if mesh is not None else _null()
-    with ctx:
+    with compat_sharding.use_mesh(mesh):
         out = run_train(api, tcfg, pipe, ckpt=ck, telemetry=tel, mesh=mesh)
 
     for h in out["history"]:
@@ -86,14 +85,6 @@ def main():
           f"(max err {tel.max_err_seen:.4f})")
     print(f"checkpoints at {ckpt_dir}: steps {ck.all_steps()}")
     print(f"wall time: {out['seconds']:.1f}s")
-
-
-class _null:
-    def __enter__(self):
-        return None
-
-    def __exit__(self, *a):
-        return False
 
 
 if __name__ == "__main__":

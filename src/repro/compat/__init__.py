@@ -1,0 +1,18 @@
+"""Version-compatibility shims over the JAX API drift this repo spans.
+
+The codebase targets the newest JAX spellings (``pltpu.CompilerParams``,
+``jax.sharding.get_abstract_mesh`` / ``AxisType``, ``jax.set_mesh``,
+``jax.shard_map``); the supported floor is JAX 0.4.37, where those names
+are ``pltpu.TPUCompilerParams``, the thread-local mesh context, the
+``Mesh`` context manager, and ``jax.experimental.shard_map.shard_map``.
+
+Policy: **no module outside this package may reference a
+version-dependent attribute directly** — every call site goes through
+:mod:`repro.compat.pallas` or :mod:`repro.compat.sharding`, so a future
+JAX bump is a compat-only diff.  See ROADMAP.md ("Supported JAX
+versions") for the tested range.
+"""
+
+from . import pallas, sharding  # noqa: F401
+
+__all__ = ["pallas", "sharding"]

@@ -22,9 +22,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from .common import BLOCK_S, BLOCK_T, interpret_mode
+from .common import BLOCK_S, BLOCK_T, launch_segmenter
 
 _BIG = 3.4e38
 
@@ -105,29 +104,14 @@ def angle_pallas(y_t: jax.Array, *, eps: float, t_real: int, max_run: int = 256,
 
     Returns event arrays ``(brk_i8, a, v)`` of shape (Tp, Sp).
     """
-    Tp, Sp = y_t.shape
-    assert Tp % block_t == 0 and Sp % block_s == 0
-    grid = (Sp // block_s, Tp // block_t)
     kernel = functools.partial(_angle_kernel, eps=eps, bt=block_t,
                                t_real=t_real, max_run=max_run)
-    spec = pl.BlockSpec((block_t, block_s), lambda si, ti: (ti, si))
-    scratch = [pltpu.VMEM((1, block_s), jnp.int32),    # phase
-               pltpu.VMEM((1, block_s), jnp.float32),  # p0y
-               pltpu.VMEM((1, block_s), jnp.float32),  # od (origin offset)
-               pltpu.VMEM((1, block_s), jnp.float32),  # oy
-               pltpu.VMEM((1, block_s), jnp.float32),  # slo
-               pltpu.VMEM((1, block_s), jnp.float32),  # shi
-               pltpu.VMEM((1, block_s), jnp.int32)]    # run_len
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[spec],
-        out_specs=[pl.BlockSpec((block_t, block_s), lambda si, ti: (ti, si))] * 3,
-        out_shape=[jax.ShapeDtypeStruct((Tp, Sp), jnp.int8),
-                   jax.ShapeDtypeStruct((Tp, Sp), jnp.float32),
-                   jax.ShapeDtypeStruct((Tp, Sp), jnp.float32)],
-        scratch_shapes=scratch,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
-        interpret=interpret_mode(),
-    )(y_t)
+    scratch = [((1, block_s), jnp.int32),    # phase
+               ((1, block_s), jnp.float32),  # p0y
+               ((1, block_s), jnp.float32),  # od (origin offset)
+               ((1, block_s), jnp.float32),  # oy
+               ((1, block_s), jnp.float32),  # slo
+               ((1, block_s), jnp.float32),  # shi
+               ((1, block_s), jnp.int32)]    # run_len
+    return launch_segmenter(kernel, y_t, block_s=block_s, block_t=block_t,
+                            scratch=scratch)

@@ -17,14 +17,28 @@ of its event outputs (no cross-block writes).  The trailing run is flushed
 into dedicated ``(1, BS)`` outputs by the last time block.
 :func:`assemble_segments` shifts events into the canonical
 :class:`repro.core.jax_pla.SegmentOutput` form.
+
+All segmenter kernels (and the reconstructor) launch through the single
+:func:`launch_segmenter` helper: block-shape wiring, VMEM scratch
+allocation, TPU compiler params, and the CPU interpret-mode fallback live
+here — the per-algorithm modules contribute only the kernel body and its
+scratch layout.  Version-dependent Pallas attributes are resolved by
+:mod:`repro.compat.pallas`; kernels never touch them directly.
 """
 
 from __future__ import annotations
 
+from typing import Sequence, Tuple
+
 import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
 
+from repro.compat.pallas import interpret_mode, tpu_compiler_params, vmem
 from repro.core.jax_pla import SegmentOutput
+
+__all__ = ["BLOCK_S", "BLOCK_T", "interpret_mode", "pad_streams",
+           "assemble_segments", "launch_segmenter"]
 
 # Default tile sizes: 128 streams on lanes; 128 time steps per block keeps
 # (BT, BS) f32 tiles at 64 KiB — far under VMEM even with ring buffers.
@@ -33,10 +47,8 @@ BLOCK_T = 128
 
 _BIG = jnp.float32(3.4e38)
 
-
-def interpret_mode() -> bool:
-    """Pallas interpret=True everywhere except a real TPU backend."""
-    return jax.default_backend() != "tpu"
+# Event outputs of every segmenter: break flag, slope, value-at-break.
+SEGMENT_EVENT_DTYPES = (jnp.int8, jnp.float32, jnp.float32)
 
 
 def pad_streams(y: jax.Array, bs: int, bt: int):
@@ -67,3 +79,50 @@ def assemble_segments(ev_brk, ev_a, ev_b, S: int, T: int) -> SegmentOutput:
     a = ev_a[1:T + 1, :S].T
     b = ev_b[1:T + 1, :S].T
     return SegmentOutput(breaks, a, b)
+
+
+def launch_segmenter(kernel, inputs, *,
+                     block_s: int = BLOCK_S, block_t: int = BLOCK_T,
+                     out_dtypes: Sequence = SEGMENT_EVENT_DTYPES,
+                     scratch: Sequence[Tuple[Tuple[int, ...], object]] = (),
+                     reverse_time: bool = False):
+    """Launch a PLA segmentation/reconstruction kernel on (Tp, Sp) inputs.
+
+    One place for everything the five kernels used to copy: the
+    ``(streams, time)`` grid, the time-major block specs (optionally
+    walking time blocks in reverse for the reconstructor), VMEM scratch
+    allocation from plain ``(shape, dtype)`` pairs, the
+    parallel/arbitrary dimension semantics, and the interpret-mode
+    fallback off-TPU.
+
+    ``kernel`` is a Pallas kernel body taking ``len(inputs)`` input refs,
+    ``len(out_dtypes)`` output refs, then one scratch ref per ``scratch``
+    entry.  Inputs must share one (Tp, Sp) shape, pre-padded to the block
+    grid.  Returns the list of (Tp, Sp) output arrays.
+    """
+    arrs = tuple(inputs) if isinstance(inputs, (tuple, list)) else (inputs,)
+    Tp, Sp = arrs[0].shape
+    for a in arrs[1:]:
+        if a.shape != (Tp, Sp):
+            raise ValueError(f"input shapes differ: {a.shape} vs {(Tp, Sp)}")
+    if Tp % block_t or Sp % block_s:
+        raise ValueError(f"(Tp={Tp}, Sp={Sp}) not padded to "
+                         f"({block_t}, {block_s}) blocks")
+    nt = Tp // block_t
+    grid = (Sp // block_s, nt)
+    if reverse_time:
+        index_map = lambda si, ti: (nt - 1 - ti, si)  # noqa: E731
+    else:
+        index_map = lambda si, ti: (ti, si)           # noqa: E731
+    spec = pl.BlockSpec((block_t, block_s), index_map)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec] * len(arrs),
+        out_specs=[spec] * len(out_dtypes),
+        out_shape=[jax.ShapeDtypeStruct((Tp, Sp), dt) for dt in out_dtypes],
+        scratch_shapes=[vmem(shape, dtype) for shape, dtype in scratch],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret_mode(),
+    )(*arrs)

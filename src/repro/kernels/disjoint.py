@@ -21,9 +21,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from .common import BLOCK_S, BLOCK_T, interpret_mode
+from .common import BLOCK_S, BLOCK_T, launch_segmenter
 
 _BIG = 3.4e38
 
@@ -136,33 +135,19 @@ def _disjoint_kernel(y_ref, brk_ref, a_ref, v_ref,
 def disjoint_pallas(y_t: jax.Array, *, eps: float, t_real: int,
                     max_run: int = 256, window: int | None = None,
                     block_s: int = BLOCK_S, block_t: int = BLOCK_T):
-    Tp, Sp = y_t.shape
     W = window or max_run
-    assert W >= max_run and Tp % block_t == 0 and Sp % block_s == 0
-    grid = (Sp // block_s, Tp // block_t)
+    assert W >= max_run
     kernel = functools.partial(_disjoint_kernel, eps=eps, bt=block_t,
                                t_real=t_real, max_run=max_run, window=W)
-    spec = pl.BlockSpec((block_t, block_s), lambda si, ti: (ti, si))
     f32 = jnp.float32
-    scratch = [pltpu.VMEM((W, block_s), f32),        # ring
-               pltpu.VMEM((1, block_s), f32),        # run_start (as f32 t)
-               pltpu.VMEM((1, block_s), jnp.int32),  # run_len
-               pltpu.VMEM((1, block_s), f32),        # y0 (run start value)
-               pltpu.VMEM((1, block_s), f32),        # prev y
-               pltpu.VMEM((1, block_s), f32),        # a_lo
-               pltpu.VMEM((1, block_s), f32),        # v_lo
-               pltpu.VMEM((1, block_s), f32),        # a_hi
-               pltpu.VMEM((1, block_s), f32)]        # v_hi
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[spec],
-        out_specs=[pl.BlockSpec((block_t, block_s), lambda si, ti: (ti, si))] * 3,
-        out_shape=[jax.ShapeDtypeStruct((Tp, Sp), jnp.int8),
-                   jax.ShapeDtypeStruct((Tp, Sp), f32),
-                   jax.ShapeDtypeStruct((Tp, Sp), f32)],
-        scratch_shapes=scratch,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
-        interpret=interpret_mode(),
-    )(y_t)
+    scratch = [((W, block_s), f32),        # ring
+               ((1, block_s), f32),        # run_start (as f32 t)
+               ((1, block_s), jnp.int32),  # run_len
+               ((1, block_s), f32),        # y0 (run start value)
+               ((1, block_s), f32),        # prev y
+               ((1, block_s), f32),        # a_lo
+               ((1, block_s), f32),        # v_lo
+               ((1, block_s), f32),        # a_hi
+               ((1, block_s), f32)]        # v_hi
+    return launch_segmenter(kernel, y_t, block_s=block_s, block_t=block_t,
+                            scratch=scratch)

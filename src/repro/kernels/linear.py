@@ -12,9 +12,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from .common import BLOCK_S, BLOCK_T, interpret_mode
+from .common import BLOCK_S, BLOCK_T, launch_segmenter
 
 
 def _linear_kernel(y_ref, brk_ref, a_ref, b_ref,
@@ -103,26 +102,12 @@ def _linear_kernel(y_ref, brk_ref, a_ref, b_ref,
 def linear_pallas(y_t: jax.Array, *, eps: float, t_real: int,
                   max_run: int = 256, window: int | None = None,
                   block_s: int = BLOCK_S, block_t: int = BLOCK_T):
-    Tp, Sp = y_t.shape
     W = window or max_run
-    assert W >= max_run and Tp % block_t == 0 and Sp % block_s == 0
-    grid = (Sp // block_s, Tp // block_t)
+    assert W >= max_run
     kernel = functools.partial(_linear_kernel, eps=eps, bt=block_t,
                                t_real=t_real, max_run=max_run, window=W)
-    spec = pl.BlockSpec((block_t, block_s), lambda si, ti: (ti, si))
     f32 = jnp.float32
-    scratch = [pltpu.VMEM((W, block_s), f32)] + \
-              [pltpu.VMEM((1, block_s), f32) for _ in range(8)]
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[spec],
-        out_specs=[pl.BlockSpec((block_t, block_s), lambda si, ti: (ti, si))] * 3,
-        out_shape=[jax.ShapeDtypeStruct((Tp, Sp), jnp.int8),
-                   jax.ShapeDtypeStruct((Tp, Sp), f32),
-                   jax.ShapeDtypeStruct((Tp, Sp), f32)],
-        scratch_shapes=scratch,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
-        interpret=interpret_mode(),
-    )(y_t)
+    scratch = [((W, block_s), f32)] + \
+              [((1, block_s), f32) for _ in range(8)]
+    return launch_segmenter(kernel, y_t, block_s=block_s, block_t=block_t,
+                            scratch=scratch)

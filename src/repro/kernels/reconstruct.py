@@ -13,9 +13,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from .common import BLOCK_S, BLOCK_T, interpret_mode
+from .common import BLOCK_S, BLOCK_T, launch_segmenter
 
 
 def _recon_kernel(brk_ref, a_ref, v_ref, out_ref, ca, cv, cd,
@@ -53,22 +52,12 @@ def reconstruct_pallas(brk_t: jax.Array, a_t: jax.Array, v_t: jax.Array,
                        block_s: int = BLOCK_S, block_t: int = BLOCK_T):
     """Time-major (Tp, Sp) breaks/a/v -> (Tp, Sp) reconstructed values."""
     Tp, Sp = a_t.shape
-    assert Tp % block_t == 0 and Sp % block_s == 0
     nt = Tp // block_t
-    grid = (Sp // block_s, nt)
     kernel = functools.partial(_recon_kernel, bt=block_t, nt=nt)
-    # Sequential dim walks time blocks in reverse.
-    rev = pl.BlockSpec((block_t, block_s), lambda si, ti: (nt - 1 - ti, si))
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[rev, rev, rev],
-        out_specs=rev,
-        out_shape=jax.ShapeDtypeStruct((Tp, Sp), a_t.dtype),
-        scratch_shapes=[pltpu.VMEM((1, block_s), jnp.float32),
-                        pltpu.VMEM((1, block_s), jnp.float32),
-                        pltpu.VMEM((1, block_s), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
-        interpret=interpret_mode(),
-    )(brk_t, a_t, v_t)
+    scratch = [((1, block_s), jnp.float32)] * 3
+    # Sequential dim walks time blocks in reverse (reverse_time index map).
+    out, = launch_segmenter(kernel, (brk_t, a_t, v_t),
+                            block_s=block_s, block_t=block_t,
+                            out_dtypes=(a_t.dtype,), scratch=scratch,
+                            reverse_time=True)
+    return out

@@ -14,9 +14,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from .common import BLOCK_S, BLOCK_T, interpret_mode
+from .common import BLOCK_S, BLOCK_T, launch_segmenter
 
 _BIG = 3.4e38
 
@@ -85,28 +84,13 @@ def swing_pallas(y_t: jax.Array, *, eps: float, t_real: int,
                  max_run: int = 256,
                  block_s: int = BLOCK_S, block_t: int = BLOCK_T):
     """Run the Swing kernel on time-major ``y_t: (Tp, Sp)``."""
-    Tp, Sp = y_t.shape
-    assert Tp % block_t == 0 and Sp % block_s == 0
-    grid = (Sp // block_s, Tp // block_t)
     kernel = functools.partial(_swing_kernel, eps=eps, bt=block_t,
                                t_real=t_real, max_run=max_run)
-    spec = pl.BlockSpec((block_t, block_s), lambda si, ti: (ti, si))
     f32 = jnp.float32
-    scratch = [pltpu.VMEM((1, block_s), f32),      # od
-               pltpu.VMEM((1, block_s), f32),      # oy
-               pltpu.VMEM((1, block_s), f32),      # slo
-               pltpu.VMEM((1, block_s), f32),      # shi
-               pltpu.VMEM((1, block_s), jnp.int32)]
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[spec],
-        out_specs=[pl.BlockSpec((block_t, block_s), lambda si, ti: (ti, si))] * 3,
-        out_shape=[jax.ShapeDtypeStruct((Tp, Sp), jnp.int8),
-                   jax.ShapeDtypeStruct((Tp, Sp), f32),
-                   jax.ShapeDtypeStruct((Tp, Sp), f32)],
-        scratch_shapes=scratch,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
-        interpret=interpret_mode(),
-    )(y_t)
+    scratch = [((1, block_s), f32),      # od
+               ((1, block_s), f32),      # oy
+               ((1, block_s), f32),      # slo
+               ((1, block_s), f32),      # shi
+               ((1, block_s), jnp.int32)]
+    return launch_segmenter(kernel, y_t, block_s=block_s, block_t=block_t,
+                            scratch=scratch)

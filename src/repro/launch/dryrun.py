@@ -27,6 +27,7 @@ import jax           # noqa: E402
 import jax.numpy as jnp                                     # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro.compat import sharding as compat_sharding        # noqa: E402
 from repro.configs import ARCHS, ALIASES, get_config        # noqa: E402
 from repro.configs.shapes import SHAPES, applicable         # noqa: E402
 from repro.launch.mesh import make_production_mesh, mesh_axis_sizes  # noqa: E402
@@ -98,7 +99,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     psh = named(mesh, pspecs)
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat_sharding.use_mesh(mesh):
         if shape.kind == "train":
             # grad_accum=8: microbatching bounds remat-saved activations
             # (measured: yi-6b@4k 49.5 GiB -> 6.4 GiB/device, §Perf).

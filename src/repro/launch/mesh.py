@@ -9,13 +9,14 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import sharding as compat_sharding
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16x16 chips per pod (v5e); two pods when ``multi_pod``."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_sharding.make_mesh(shape, axes)
 
 
 def mesh_axis_sizes(mesh: jax.sharding.Mesh) -> dict:

@@ -18,10 +18,10 @@ if os.environ.get("REPRO_FAKE_DEVICES"):  # optional topology emulation
                                + os.environ.get("XLA_FLAGS", ""))
 
 import argparse          # noqa: E402
-import contextlib        # noqa: E402
 
 import jax               # noqa: E402
 
+from repro.compat import sharding as compat_sharding           # noqa: E402
 from repro.compression.grad import GradCompressionConfig       # noqa: E402
 from repro.compression.telemetry import TelemetryCompressor    # noqa: E402
 from repro.configs import ALIASES, get_config                  # noqa: E402
@@ -59,11 +59,9 @@ def main():
     if args.mesh == "host":
         n = len(jax.devices())
         if args.grad_mode == "pla" and n >= 2:
-            mesh = jax.make_mesh((2, n // 2), ("pod", "data"),
-                                 axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            mesh = compat_sharding.make_mesh((2, n // 2), ("pod", "data"))
         elif n > 1:
-            mesh = jax.make_mesh((n,), ("data",),
-                                 axis_types=(jax.sharding.AxisType.Auto,))
+            mesh = compat_sharding.make_mesh((n,), ("data",))
         else:
             mesh = None
     else:
@@ -78,9 +76,7 @@ def main():
                        grad_accum=args.grad_accum,
                        ckpt_every=args.ckpt_every,
                        pla=GradCompressionConfig())
-    ctx = jax.set_mesh(mesh) if mesh is not None else \
-        contextlib.nullcontext()
-    with ctx:
+    with compat_sharding.use_mesh(mesh):
         out = run_train(api, tcfg, pipe, ckpt=ck, telemetry=tel, mesh=mesh)
     for h in out["history"]:
         print(f"step {h['step']:5d}  loss {h['loss']:.4f}  "

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import sharding as compat_sharding
+
 
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
@@ -124,13 +126,13 @@ def shard(x: jax.Array, *axes) -> jax.Array:
     silently pad), or that were already consumed by an earlier dim are
     dropped.
     """
-    env_mesh = jax.sharding.get_abstract_mesh()
+    env_mesh = compat_sharding.get_abstract_mesh()
     if env_mesh is None or not env_mesh.shape:  # no mesh: CPU smoke path
         return x
     # Only Auto axes are constrainable here; Manual axes (e.g. 'pod'
     # inside the shard_map of the compressed-gradient path) must not
     # appear in with_sharding_constraint specs.
-    auto = jax.sharding.AxisType.Auto
+    auto = compat_sharding.AxisType.Auto
     sizes = {n: s for (n, s), t in zip(env_mesh.shape.items(),
                                        env_mesh.axis_types)
              if t == auto}

@@ -4,7 +4,7 @@ Two cross-pod gradient-exchange modes:
 
 - ``baseline``: one jit'd SPMD program; the data-parallel gradient
   reduction (including cross-pod) is the all-reduce XLA inserts.
-- ``pla`` (paper scenario 1): ``jax.shard_map`` manual over the ``pod``
+- ``pla`` (paper scenario 1): ``shard_map`` manual over the ``pod``
   axis ("data"/"model" stay auto): each pod computes its local gradient,
   PLA-compresses it with error feedback, and only the fixed-budget records
   cross the pod boundary (repro.compression.grad).
@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import sharding as compat_sharding
 from repro.compression.grad import (GradCompressionConfig,
                                     init_error_feedback, pod_compressed_mean)
 from repro.compression.telemetry import TelemetryCompressor
@@ -110,8 +111,21 @@ def make_train_step(api: ModelAPI, tcfg: TrainConfig,
     assert mesh is not None and "pod" in mesh.axis_names, \
         "pla grad mode needs a mesh with a 'pod' axis"
 
+    # New JAX: manual over 'pod' only, the other axes stay automatically
+    # sharded.  JAX 0.4.x cannot mix manual and auto axes once the body
+    # scans (XLA partitioner CHECK — see compat.sharding), so there we go
+    # manual over the *whole* mesh and take the exact data-parallel mean
+    # over the non-pod axes ourselves before the compressed pod exchange.
+    partial_auto = compat_sharding.partial_auto_shard_map_supported()
+    manual_axes = {"pod"} if partial_auto else set(mesh.axis_names)
+    dp_axes = () if partial_auto else \
+        tuple(a for a in mesh.axis_names if a != "pod")
+
     def pod_local(params, opt, ef, batch, step_idx):
         loss, grads = _accum_grads(loss_fn, params, batch, tcfg.grad_accum)
+        if dp_axes:
+            loss = jax.lax.pmean(loss, dp_axes)
+            grads = jax.tree.map(lambda g: jax.lax.pmean(g, dp_axes), grads)
         mean_g, new_ef, stats = pod_compressed_mean(grads, ef, tcfg.pla,
                                                     axis_name="pod")
         params, opt, st = adamw_update(mean_g, opt, params,
@@ -126,16 +140,21 @@ def make_train_step(api: ModelAPI, tcfg: TrainConfig,
 
     replicated = lambda tree: jax.tree.map(lambda _: P(), tree)
 
+    # Batch dim shards over 'pod' (partial-auto leaves the rest to XLA)
+    # or over every manual axis (full-manual fallback).
+    batch_axes = ("pod",) if partial_auto else \
+        ("pod",) + dp_axes
+
     def step(params, opt, ef, batch, step_idx):
         batch_specs = jax.tree.map(
-            lambda x: P(*(("pod",) + (None,) * (x.ndim - 1))), batch)
-        fn = jax.shard_map(
+            lambda x: P(*((batch_axes,) + (None,) * (x.ndim - 1))), batch)
+        fn = compat_sharding.shard_map(
             pod_local, mesh=mesh,
             in_specs=(replicated(params), replicated(opt), replicated(ef),
                       batch_specs, P()),
             out_specs=(replicated(params), replicated(opt), replicated(ef),
                        {"loss": P(), "grad_norm": P(), "wire_bytes": P()}),
-            axis_names={"pod"}, check_vma=False)
+            axis_names=manual_axes, check=False)
         return fn(params, opt, ef, batch, step_idx)
 
     return step

@@ -79,9 +79,9 @@ def test_pod_compressed_mean_under_shard_map():
         pytest.skip("needs >= 2 devices (set "
                     "XLA_FLAGS=--xla_force_host_platform_device_count=2)")
     from jax.sharding import PartitionSpec as P
+    from repro.compat import sharding as compat_sharding
     from repro.compression.grad import pod_compressed_mean
-    mesh = jax.make_mesh((2,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat_sharding.make_mesh((2,), ("pod",))
     cfg = GradCompressionConfig(k_max=64, eps_rel=0.05, min_leaf_size=128)
     rng = np.random.default_rng(3)
     g_all = jnp.asarray(np.cumsum(rng.normal(0, 0.01, (2, 16, 256)), 2),
@@ -93,10 +93,11 @@ def test_pod_compressed_mean_under_shard_map():
             {"w": g[0]}, {"w": e[0]}, cfg)
         return mean["w"], new_ef["w"], stats["wire_bytes"].reshape(1)
 
-    fn = jax.shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
-                       out_specs=(P("pod"), P("pod"), P("pod")),
-                       axis_names={"pod"}, check_vma=False)
-    with jax.set_mesh(mesh):
+    fn = compat_sharding.shard_map(
+        f, mesh=mesh, in_specs=(P("pod"), P("pod")),
+        out_specs=(P("pod"), P("pod"), P("pod")),
+        axis_names={"pod"}, check=False)
+    with compat_sharding.use_mesh(mesh):
         mean, new_ef, wire = jax.jit(fn)(g_all, ef)
     mean = np.asarray(mean).reshape(2, 16, 256)
     # both pods computed the same mean

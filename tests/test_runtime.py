@@ -163,3 +163,61 @@ def test_pipeline_host_slicing_partitions_batch():
     parts = [np.asarray(p.host_batch_at(5, h, 4)["tokens"])
              for h in range(4)]
     np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+# ---------------------------------------------------------------------------
+# PLA gradient mode on a multi-device (pod, data) mesh
+# ---------------------------------------------------------------------------
+
+def test_pla_grad_mode_multipod_subprocess():
+    """One pla train step on a 2x2 (pod, data) mesh of fake CPU devices.
+
+    Exercises the compat shard_map path end-to-end (partial-auto on new
+    JAX; the full-manual fallback with an explicit data-axis mean on
+    0.4.x).  Needs XLA_FLAGS before jax init, hence the subprocess.
+    """
+    import json
+    import subprocess
+    import sys
+
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import jax, jax.numpy as jnp
+from repro.compat import sharding as cs
+from repro.compression.grad import GradCompressionConfig, init_error_feedback
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.models.base import ModelConfig
+from repro.models.zoo import build_model
+from repro.optimizer import adamw_init
+from repro.runtime.train_loop import TrainConfig, make_train_step
+
+mesh = cs.make_mesh((2, 2), ("pod", "data"))
+cfg = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                  d_ff=128, vocab=257)
+api = build_model(cfg)
+tcfg = TrainConfig(steps=2, grad_mode="pla",
+                   pla=GradCompressionConfig(k_max=32, eps_rel=0.05))
+pipe = TokenPipeline(PipelineConfig(vocab=257, global_batch=4, seq_len=32))
+with cs.use_mesh(mesh):
+    params = api.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params, tcfg.adamw)
+    ef = init_error_feedback(params)
+    step = jax.jit(make_train_step(api, tcfg, mesh))
+    _, _, _, m = step(params, opt, ef, pipe.batch_at(0), jnp.asarray(0))
+print("RESULT " + json.dumps({
+    "loss": float(m["loss"]), "wire_bytes": float(m["wire_bytes"])}))
+"""
+    repo = os.path.join(os.path.dirname(__file__), "..")
+    env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"),
+               JAX_PLATFORMS="cpu")
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=560,
+                         env=env, cwd=repo)
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")]
+    assert line, out.stdout[-2000:]
+    rec = json.loads(line[0][7:])
+    assert np.isfinite(rec["loss"])
+    assert rec["wire_bytes"] > 0
