@@ -16,8 +16,13 @@ from .paper_eval import OUT_DIR
 
 
 def _time(fn, *args, iters=3) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    # One warmup call (compile + first run); branch on the held result
+    # instead of invoking fn twice.
+    res = fn(*args)
+    if isinstance(res, tuple):
+        res[0].block_until_ready()
+    else:
+        jax.block_until_ready(res)
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))

@@ -1,0 +1,128 @@
+"""Streaming-engine benchmarks: per-chunk step latency vs. offline.
+
+Measures the carry-state chunked API of :mod:`repro.core.jax_pla` against
+the one-shot offline segmenters on the same stream batch: per-chunk step
+latency, sustained points/s, and the chunked-vs-offline overhead factor
+(chunked total wall time / offline wall time — the price of bounded
+latency).  Results land in the top-level ``BENCH_streaming.json`` so the
+perf trajectory is tracked across PRs; the acceptance bar is chunked step
+cost within 2x of the amortized offline per-point cost at chunk >= 128.
+
+The jnp reference engine is what gets timed (the Pallas kernels run in
+interpret mode off-TPU — bit-accurate but Python-speed, so their numbers
+would measure the interpreter, not the engine).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import jax_pla
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_streaming.json")
+
+S, T = 256, 8192
+CHUNKS = (32, 128, 512)
+METHODS = ("angle", "swing", "disjoint", "linear")
+MAX_RUN = 256
+EPS = 1.0
+ITERS = 3
+
+
+def _stream_batch(seed=0):
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.normal(0, 0.5, (S, T)), axis=1).astype(np.float32)
+
+
+def _time_offline(fn, y) -> float:
+    jax.block_until_ready(fn(y, EPS, max_run=MAX_RUN))
+    t0 = time.perf_counter()
+    for _ in range(ITERS):
+        jax.block_until_ready(fn(y, EPS, max_run=MAX_RUN))
+    return (time.perf_counter() - t0) / ITERS
+
+
+def _run_chunked(method, y, chunk) -> Tuple[float, float]:
+    """Returns (total seconds, mean per-chunk step seconds), post-warmup."""
+    def sweep():
+        st = jax_pla.init_state(method, S, EPS, max_run=MAX_RUN)
+        n_steps = 0
+        t0 = time.perf_counter()
+        for lo in range(0, T, chunk):
+            st, out = jax_pla.step_chunk(st, y[:, lo:lo + chunk])
+            jax.block_until_ready(out)
+            n_steps += 1
+        st, out = jax_pla.flush(st)
+        jax.block_until_ready(out)
+        return time.perf_counter() - t0, n_steps
+
+    sweep()  # warmup: traces the start/cont/flush variants for this width
+    totals = []
+    for _ in range(ITERS):
+        total, n_steps = sweep()
+        totals.append(total)
+    best = min(totals)
+    return best, best / n_steps
+
+
+def streaming_bench() -> List[Tuple[str, float, str]]:
+    """CSV rows for benchmarks.run + the BENCH_streaming.json artifact."""
+    y = jax.numpy.asarray(_stream_batch())
+    offline_fns = {"angle": jax_pla.angle_segment,
+                   "swing": jax_pla.swing_segment,
+                   "disjoint": jax_pla.disjoint_segment,
+                   "linear": jax_pla.linear_segment}
+    rows: List[Tuple[str, float, str]] = []
+    report = {
+        "config": {"streams": S, "t_len": T, "eps": EPS, "max_run": MAX_RUN,
+                   "chunks": list(CHUNKS), "iters": ITERS,
+                   "backend": jax.default_backend(),
+                   "engine": "core.jax_pla (jnp reference; Pallas kernels "
+                             "are interpret-mode off-TPU)"},
+        "offline": {}, "chunked": {},
+    }
+    points = S * T
+    for method in METHODS:
+        off_s = _time_offline(offline_fns[method], y)
+        report["offline"][method] = {
+            "seconds": off_s,
+            "points_per_s": points / off_s,
+            "us_per_point": off_s / points * 1e6,
+        }
+        rows.append((f"streaming/{method}/offline", off_s * 1e6,
+                     f"{points / off_s / 1e6:.1f}Mpts/s"))
+        report["chunked"][method] = {}
+        for chunk in CHUNKS:
+            total, per_step = _run_chunked(method, y, chunk)
+            overhead = total / off_s
+            report["chunked"][method][str(chunk)] = {
+                "seconds": total,
+                "step_latency_us": per_step * 1e6,
+                "points_per_s": points / total,
+                "overhead_vs_offline": overhead,
+            }
+            rows.append((f"streaming/{method}/chunk={chunk}",
+                         per_step * 1e6,
+                         f"{points / total / 1e6:.1f}Mpts/s "
+                         f"{overhead:.2f}x-of-offline"))
+    # Acceptance tracker: chunked step cost within 2x of the amortized
+    # offline per-point cost at chunk >= 128.
+    ok = {m: all(report["chunked"][m][str(c)]["overhead_vs_offline"] <= 2.0
+                 for c in CHUNKS if c >= 128) for m in METHODS}
+    report["within_2x_at_chunk_ge_128"] = ok
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in streaming_bench():
+        print(f"{name},{us:.1f},{derived}")
+    print(f"[wrote {os.path.abspath(OUT_PATH)}]")

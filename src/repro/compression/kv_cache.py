@@ -7,17 +7,32 @@ Decode-time attention against cold history reconstructs blocks on the fly
 (or in batched prefetch); the eps guarantee bounds the L-inf perturbation
 of every K/V value, which in turn bounds the attention-score perturbation
 by ``|q|_1 * eps / sqrt(hd)``.
+
+Two entry points:
+
+- :func:`compress_kv_block` — one-shot compression of a complete block.
+- :class:`StreamingKVCompressor` — serving path: tokens are pushed in
+  chunks of any size *as they cross the hot window* and segmented
+  incrementally through the carry-state API of
+  :mod:`repro.core.jax_pla`; a finished :class:`CompressedKVBlock` pops
+  out every ``cfg.block`` tokens.  No 256-token raw f32 window is
+  re-buffered for compression — the only per-block storage is the
+  segmenter carry, the partially-filled record buffer, and the coef-dtype
+  raw copy that the overflow escape ships anyway.  Emitted blocks are
+  bit-identical to :func:`compress_kv_block` on the same tokens.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Tuple
+from typing import List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.jax_pla import (PLARecords, angle_segment, decode_records,
+                                flush, init_state, records_append,
+                                records_finalize, records_init, step_chunk,
                                 to_records)
 
 
@@ -43,6 +58,23 @@ class CompressedKVBlock(NamedTuple):
     shape: Tuple[int, ...]  # (B, block, KH, hd)
 
 
+def _widen_records(rec: PLARecords) -> PLARecords:
+    """Widen a wire-packed record set back to compute dtypes
+    (seg_end/count -> int32, a/v -> float32)."""
+    return PLARecords(rec.seg_end.astype(jnp.int32),
+                      rec.a.astype(jnp.float32),
+                      rec.v.astype(jnp.float32),
+                      rec.count.astype(jnp.int32), rec.overflow)
+
+
+def _pack_records(rec: PLARecords, coef_dtype) -> PLARecords:
+    """Narrow finalized records to the wire layout (inverse of
+    :func:`_widen_records`; block <= 256, so seg_end fits uint8)."""
+    return PLARecords(rec.seg_end.astype(jnp.uint8),
+                      rec.a.astype(coef_dtype), rec.v.astype(coef_dtype),
+                      rec.count.astype(jnp.uint8), rec.overflow)
+
+
 def _to_streams(x: jax.Array) -> jax.Array:
     """(B, T, KH, hd) -> (B*KH*hd, T) time-major streams."""
     B, T, KH, D = x.shape
@@ -63,24 +95,107 @@ def compress_kv_block(k: jax.Array, v: jax.Array, cfg: PLAKVConfig
         y = _to_streams(x.astype(jnp.float32))
         seg = angle_segment(y, cfg.eps, max_run=cfg.block)
         rec = to_records(seg, cfg.k_max)
-        packed = PLARecords(rec.seg_end.astype(jnp.uint8),
-                            rec.a.astype(cd), rec.v.astype(cd),
-                            rec.count.astype(jnp.uint8), rec.overflow)
-        return packed, y.astype(cd)
+        return _pack_records(rec, cd), y.astype(cd)
 
     k_rec, k_raw = comp(k)
     v_rec, v_raw = comp(v)
     return CompressedKVBlock(k_rec, v_rec, k_raw, v_raw, tuple(k.shape))
 
 
+class StreamingKVCompressor:
+    """Incremental block compressor for tokens leaving the hot window.
+
+    ``push(k_chunk, v_chunk)`` accepts ``(B, n, KH, hd)`` chunks (any
+    ``n >= 1``) and returns the list of :class:`CompressedKVBlock` completed
+    by this chunk (usually empty or one).  Each block's streams are
+    segmented chunk-by-chunk via ``step_chunk``/``flush`` and its record
+    buffer is filled via ``records_append`` — per-push work is O(chunk),
+    not O(block).
+    """
+
+    def __init__(self, cfg: PLAKVConfig):
+        self.cfg = cfg
+        self._cd = jnp.dtype(cfg.coef_dtype)
+        self._shape: Optional[Tuple[int, ...]] = None
+        self._n_streams = 0
+        self._filled = 0
+        self._k = self._v = None           # (SegmenterState, PLARecords)
+        self._k_raw: List[jax.Array] = []  # coef-dtype stream chunks
+        self._v_raw: List[jax.Array] = []
+
+    def _fresh(self):
+        st = init_state("angle", self._n_streams, self.cfg.eps,
+                        max_run=self.cfg.block)
+        return st, records_init(self._n_streams, self.cfg.k_max)
+
+    def _start_block(self):
+        self._k = self._fresh()
+        self._v = self._fresh()
+        self._k_raw, self._v_raw = [], []
+        self._filled = 0
+
+    def _step(self, pair, y):
+        st, rec = pair
+        pos0 = st.emitted
+        st, out = step_chunk(st, y)
+        return (st, records_append(rec, out, pos0))
+
+    def _finish_block(self) -> CompressedKVBlock:
+        def close(pair, raws):
+            st, rec = pair
+            pos0 = st.emitted
+            st, out = flush(st)
+            rec = records_finalize(records_append(rec, out, pos0),
+                                   self.cfg.block)
+            return _pack_records(rec, self._cd), jnp.concatenate(raws, axis=1)
+
+        k_rec, k_raw = close(self._k, self._k_raw)
+        v_rec, v_raw = close(self._v, self._v_raw)
+        B, KH, D = self._shape
+        blk = CompressedKVBlock(k_rec, v_rec, k_raw, v_raw,
+                                (B, self.cfg.block, KH, D))
+        self._start_block()
+        return blk
+
+    def push(self, k_chunk: jax.Array, v_chunk: jax.Array
+             ) -> List[CompressedKVBlock]:
+        B, n, KH, D = k_chunk.shape
+        if v_chunk.shape != k_chunk.shape:
+            raise ValueError(f"K/V chunk shapes differ: "
+                             f"{k_chunk.shape} vs {v_chunk.shape}")
+        if self._shape is None:
+            self._shape = (B, KH, D)
+            self._n_streams = B * KH * D
+            self._start_block()
+        elif self._shape != (B, KH, D):
+            raise ValueError(f"chunk stream shape changed: {self._shape} "
+                             f"vs {(B, KH, D)}")
+        done: List[CompressedKVBlock] = []
+        off = 0
+        while off < n:
+            take = min(n - off, self.cfg.block - self._filled)
+            ks = _to_streams(k_chunk[:, off:off + take].astype(jnp.float32))
+            vs = _to_streams(v_chunk[:, off:off + take].astype(jnp.float32))
+            self._k = self._step(self._k, ks)
+            self._v = self._step(self._v, vs)
+            self._k_raw.append(ks.astype(self._cd))
+            self._v_raw.append(vs.astype(self._cd))
+            self._filled += take
+            off += take
+            if self._filled == self.cfg.block:
+                done.append(self._finish_block())
+        return done
+
+    @property
+    def pending_tokens(self) -> int:
+        """Tokens pushed into the current (incomplete) block."""
+        return self._filled
+
+
 def decompress_kv_block(blk: CompressedKVBlock, cfg: PLAKVConfig
                         ) -> Tuple[jax.Array, jax.Array]:
     def dec(rec, raw):
-        rec32 = PLARecords(rec.seg_end.astype(jnp.int32),
-                           rec.a.astype(jnp.float32),
-                           rec.v.astype(jnp.float32),
-                           rec.count.astype(jnp.int32), rec.overflow)
-        y = decode_records(rec32, blk.shape[1])
+        y = decode_records(_widen_records(rec), blk.shape[1])
         # Overflow rows fall back to their raw copy (eps holds everywhere).
         y = jnp.where(rec.overflow[:, None], raw.astype(jnp.float32), y)
         return _from_streams(y, blk.shape)
@@ -94,11 +209,7 @@ def block_nbytes(rec: PLARecords, block: int, cfg: PLAKVConfig) -> int:
     bytes (1 counter + block values) for overflow rows."""
     from repro.core.jax_pla import singlestream_nbytes
     vb = jnp.dtype(cfg.coef_dtype).itemsize
-    rec32 = PLARecords(rec.seg_end.astype(jnp.int32),
-                       rec.a.astype(jnp.float32),
-                       rec.v.astype(jnp.float32),
-                       rec.count.astype(jnp.int32), rec.overflow)
-    per_row = singlestream_nbytes(rec32, block, value_bytes=vb)
+    per_row = singlestream_nbytes(_widen_records(rec), block, value_bytes=vb)
     raw_row = 1 + block * vb
     return int(jnp.where(rec.overflow, raw_row, per_row).sum())
 

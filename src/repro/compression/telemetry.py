@@ -6,18 +6,49 @@ exactly the paper's setting — compressed with the *Linear* method (lowest
 average error) under the *SingleStreamV* protocol (lowest latency, the
 paper's Table 3 recommendation for scenario (1)).
 
-Pure-Python sequential implementation (host side, tiny rates), using the
-exact reference methods from :mod:`repro.core`.
+By default the segmentation is driven off the carry-state streaming engine
+(:mod:`repro.core.jax_pla`): appended values are pushed through
+``step_chunk`` in small batches, so the per-flush work is O(new points)
+with bounded latency instead of re-running the whole window's method at
+send time.  The window's fitted segments are translated to the paper's
+protocol records at flush (steps must be uniformly spaced for the
+index-grid translation; irregular channels transparently fall back to the
+exact sequential methods, as does ``streaming=False``).
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import METHODS, PROTOCOLS, PROTOCOL_CAPS
 from repro.core.protocols import encode_singlestreamv
+from repro.core.types import Line, MethodOutput, Segment
+
+
+def _segments_from_events(brk: np.ndarray, a: np.ndarray, v: np.ndarray,
+                          ts: np.ndarray) -> MethodOutput:
+    """Translate anchored index-grid events to t-space MethodOutput.
+
+    Event k ends a segment at index ``e`` with the anchored line
+    ``y(i) = v + a * (i - e)``; on a uniform grid ``t = t0 + d*i`` that is
+    the line ``A*t + B`` with ``A = a/d``, ``B = v - a*e - A*t0``.
+    """
+    n = len(ts)
+    d = float(ts[1] - ts[0]) if n > 1 else 1.0
+    t0 = float(ts[0])
+    ends = np.flatnonzero(brk)
+    segments: List[Segment] = []
+    i0 = 0
+    for e in ends:
+        e = int(e)
+        A = float(a[e]) / d
+        B = float(v[e]) - float(a[e]) * e - A * t0
+        segments.append(Segment(i0=i0, i1=e + 1, line=Line(A, B),
+                                finalized_at=min(e + 1, n - 1)))
+        i0 = e + 1
+    return MethodOutput(segments=segments, knots=[])
 
 
 class TelemetryCompressor:
@@ -25,15 +56,31 @@ class TelemetryCompressor:
 
     Flush semantics mirror a periodic sender: every ``flush_every`` appended
     steps the buffered window is compressed and (simulated) transmitted.
+    With ``streaming=True`` (default) each channel owns a
+    :class:`repro.core.jax_pla.SegmenterState` that is advanced every
+    ``step_every`` appends, so the flush only closes the trailing run.
     """
 
     def __init__(self, eps: float = 1e-3, method: str = "linear",
-                 flush_every: int = 256):
+                 flush_every: int = 256, streaming: bool = True,
+                 step_every: int = 32):
+        if method not in METHODS:
+            raise ValueError(f"unknown method {method!r}; "
+                             f"have {sorted(METHODS)}")
         self.eps = eps
         self.method = method
         self.flush_every = flush_every
+        # Only the jnp carry-state engine's methods stream; the remaining
+        # sequential methods (continuous/mixed) keep the batch flush path.
+        from repro.core.jax_pla import STREAMING_METHODS
+        self.streaming = streaming and method in STREAMING_METHODS
+        self.step_every = max(1, step_every)
         self.buffers: Dict[str, List[float]] = {}
         self.steps: Dict[str, List[int]] = {}
+        self._states: Dict[str, object] = {}
+        self._stepped: Dict[str, int] = {}
+        self._events: Dict[str, List[Tuple[np.ndarray, np.ndarray,
+                                           np.ndarray]]] = {}
         self.sent_bytes = 0
         self.raw_bytes = 0
         self.max_err_seen = 0.0
@@ -43,18 +90,73 @@ class TelemetryCompressor:
         for name, val in metrics.items():
             self.buffers.setdefault(name, []).append(float(val))
             self.steps.setdefault(name, []).append(step)
+            if self.streaming:
+                pend = len(self.buffers[name]) - self._stepped.get(name, 0)
+                if pend >= self.step_every:
+                    self._advance(name)
             if len(self.buffers[name]) >= self.flush_every:
                 out.append(self._flush_channel(name))
         return b"".join(out) if out else None
 
+    # ---- streaming engine plumbing ---------------------------------------
+
+    def _advance(self, name: str) -> None:
+        """Push not-yet-segmented values through the channel's carry state."""
+        from repro.core import jax_pla
+        done = self._stepped.get(name, 0)
+        vals = self.buffers[name][done:]
+        if not vals:
+            return
+        st = self._states.get(name)
+        if st is None:
+            st = jax_pla.init_state(
+                self.method, 1, self.eps,
+                max_run=PROTOCOL_CAPS["singlestreamv"])
+        st, out = jax_pla.step_chunk(st, np.asarray(vals, np.float32)[None])
+        self._states[name] = st
+        self._stepped[name] = len(self.buffers[name])
+        if out.breaks.shape[1]:
+            self._events.setdefault(name, []).append(
+                (np.asarray(out.breaks[0]), np.asarray(out.a[0]),
+                 np.asarray(out.v[0])))
+
+    def _streaming_records(self, name: str, ts: np.ndarray, ys: np.ndarray):
+        """Close the channel's run and emit protocol records, or None when
+        the channel needs the irregular-timestamps fallback."""
+        from repro.core import jax_pla
+        if len(ts) > 1:
+            dt = np.diff(ts)
+            if not np.allclose(dt, dt[0], rtol=1e-9, atol=0.0) or dt[0] <= 0:
+                # Index-grid translation needs a uniform grid; drop the
+                # carry (the window restarts either way) and fall back.
+                self._states.pop(name, None)
+                self._events.pop(name, None)
+                return None
+        self._advance(name)
+        st, out_f = jax_pla.flush(self._states.pop(name))
+        ev = self._events.pop(name, [])
+        ev.append((np.asarray(out_f.breaks[0]), np.asarray(out_f.a[0]),
+                   np.asarray(out_f.v[0])))
+        brk = np.concatenate([e[0] for e in ev])
+        a = np.concatenate([e[1] for e in ev])
+        v = np.concatenate([e[2] for e in ev])
+        mo = _segments_from_events(brk, a, v, ts)
+        return PROTOCOLS["singlestreamv"](mo, ts, ys)
+
+    # ---- flush -----------------------------------------------------------
+
     def _flush_channel(self, name: str) -> bytes:
         ys = np.asarray(self.buffers[name])
         ts = np.asarray(self.steps[name], dtype=float)
+        recs = self._streaming_records(name, ts, ys) if self.streaming \
+            else None
         self.buffers[name] = []
         self.steps[name] = []
-        cap = PROTOCOL_CAPS["singlestreamv"]
-        out = METHODS[self.method](ts, ys, self.eps, max_run=cap)
-        recs = PROTOCOLS["singlestreamv"](out, ts, ys)
+        self._stepped[name] = 0
+        if recs is None:
+            cap = PROTOCOL_CAPS["singlestreamv"]
+            out = METHODS[self.method](ts, ys, self.eps, max_run=cap)
+            recs = PROTOCOLS["singlestreamv"](out, ts, ys)
         blob = encode_singlestreamv(recs)
         self.sent_bytes += len(blob)
         self.raw_bytes += 8 * len(ys)

@@ -14,7 +14,8 @@ from .protocols import (PROTOCOL_CAPS, PROTOCOLS, protocol_implicit,
                         protocol_twostreams)
 from .metrics import PointMetrics, overall_compression, point_metrics
 from .evaluate import COMBINATIONS, EvalResult, evaluate, evaluate_all
-from .adaptive import AdaptiveEps, compare_fixed_vs_adaptive
+from .adaptive import (AdaptiveEps, StreamingAdaptiveEps,
+                       compare_fixed_vs_adaptive)
 
 __all__ = [
     "CompressionRecord", "DisjointKnot", "JointKnot", "Line", "MethodOutput",
@@ -23,5 +24,5 @@ __all__ = [
     "protocol_implicit", "protocol_singlestream", "protocol_singlestreamv",
     "protocol_twostreams", "PointMetrics", "overall_compression",
     "point_metrics", "COMBINATIONS", "EvalResult", "evaluate", "evaluate_all",
-    "AdaptiveEps", "compare_fixed_vs_adaptive",
+    "AdaptiveEps", "StreamingAdaptiveEps", "compare_fixed_vs_adaptive",
 ]

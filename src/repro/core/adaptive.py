@@ -29,7 +29,7 @@ from .evaluate import COMBINATIONS
 from .methods import METHODS
 from .metrics import point_metrics
 from .protocols import PROTOCOL_CAPS, PROTOCOLS
-from .types import VALUE_BYTES
+from .types import COUNTER_BYTES, VALUE_BYTES
 
 
 @dataclasses.dataclass
@@ -92,6 +92,141 @@ class AdaptiveEps:
             "window_ratios": np.asarray(ratios),
             "eps_trace": eps_trace,
             "errors": errors,
+        }
+
+
+@dataclasses.dataclass
+class StreamingAdaptiveEps:
+    """Chunked adaptive-ε controller on the carry-state streaming engine.
+
+    Unlike :class:`AdaptiveEps`, which re-buffers and re-segments whole
+    windows (forcing a segment break at every window boundary), this
+    controller pushes ``(S, n)`` chunks through
+    :func:`repro.core.jax_pla.step_chunk` and retunes ε *between chunks*
+    from the bytes of the segments actually finalized — the segmenter
+    carry persists, so runs span chunk boundaries and the retune is
+    recompile-free (ε is a traced per-row vector).
+
+    Error contract: a point's reconstruction error is bounded by the
+    largest ε active during its segment's run (ε only changes at chunk
+    boundaries, so that is the max over the <= 2 chunks the run spans at
+    the default ``max_run <= chunk``).
+
+    Byte accounting matches the SingleStream protocol used by
+    :class:`AdaptiveEps`: segments of >= 3 points cost
+    ``COUNTER + 2 * VALUE``, shorter runs flush per-point at
+    ``COUNTER + VALUE`` each.
+    """
+
+    target_ratio: float = 0.1
+    eps0: float = 1.0
+    eps_min: float = 1e-6
+    eps_max: float = 1e6
+    alpha: float = 1.0
+    max_step: float = 8.0
+    deadband: float = 0.1
+    method: str = "linear"
+    max_run: int = 256
+
+    def __post_init__(self):
+        self._state = None
+        self._prev_end = None          # (S,) last finalized position
+        self._eps = None               # (S,) current ε
+        self.eps_trace: List[Tuple[int, float]] = []
+
+    @staticmethod
+    def _segment_bytes(brk_rows: np.ndarray, prev: int,
+                       offset: int = 0) -> Tuple[float, int, int]:
+        """SingleStream bytes + covered points of newly finalized segments.
+
+        ``brk_rows`` break flags whose index 0 sits at absolute position
+        ``offset``; ``prev`` is the last previously finalized absolute
+        position (-1 initially)."""
+        total = 0.0
+        covered = 0
+        ends = np.flatnonzero(brk_rows) + offset
+        for e in ends:
+            length = int(e - prev)
+            total += (COUNTER_BYTES + 2 * VALUE_BYTES if length >= 3
+                      else length * (COUNTER_BYTES + VALUE_BYTES))
+            covered += length
+            prev = e
+        return total, covered, int(prev)
+
+    def push(self, y_chunk) -> "jax_pla.SegmentOutput":
+        """Consume an (S, n) chunk; returns its finalized events and
+        retunes ε for the next chunk."""
+        from . import jax_pla
+        y = np.atleast_2d(np.asarray(y_chunk, np.float32))
+        S, n = y.shape
+        if self._state is None:
+            self._eps = np.full((S,), self.eps0)
+            self._state = jax_pla.init_state(
+                self.method, S, self._eps, max_run=self.max_run)
+            self._prev_end = np.full((S,), -1, np.int64)
+        self._state = dataclasses.replace(
+            self._state, eps=np.asarray(self._eps, np.float32))
+        self.eps_trace.append((self._state.t, float(self._eps.max())))
+        pos0 = self._state.emitted
+        self._state, out = jax_pla.step_chunk(self._state, y)
+        self._retune(np.asarray(out.breaks), y, pos0)
+        return out
+
+    def finish(self) -> "jax_pla.SegmentOutput":
+        """Close the trailing runs (one forced break per row)."""
+        from . import jax_pla
+        if self._state is None:
+            raise ValueError("finish with no data pushed")
+        self._state, out = jax_pla.flush(self._state)
+        return out
+
+    def _retune(self, brk: np.ndarray, y: np.ndarray, pos0: int) -> None:
+        new_eps = self._eps.copy()
+        for s in range(brk.shape[0]):
+            nbytes, covered, prev = self._segment_bytes(
+                brk[s], int(self._prev_end[s]), pos0)
+            self._prev_end[s] = prev
+            if covered == 0:
+                continue
+            ratio = nbytes / (VALUE_BYTES * covered)
+            eps = self._eps[s]
+            if ratio >= 1.0:
+                # Saturated at the singleton ceiling: no gradient in the
+                # ratio — jump ε to the chunk's own scale.
+                eps = float(np.clip(max(eps * self.max_step,
+                                        0.5 * np.std(y[s]) + 1e-12),
+                                    self.eps_min, self.eps_max))
+            else:
+                err = ratio / self.target_ratio
+                if abs(err - 1.0) > self.deadband:
+                    step = float(np.clip(err ** self.alpha,
+                                         1.0 / self.max_step, self.max_step))
+                    eps = float(np.clip(eps * step, self.eps_min,
+                                        self.eps_max))
+            new_eps[s] = eps
+        self._eps = new_eps
+
+    def run(self, ys, chunk: int = 512) -> Dict:
+        """Single-stream driver mirroring :meth:`AdaptiveEps.run`."""
+        from . import jax_pla
+        ys = np.asarray(ys, np.float32)
+        n = len(ys)
+        outs = []
+        for w0 in range(0, n, chunk):
+            outs.append(self.push(ys[None, w0:min(w0 + chunk, n)]))
+        outs.append(self.finish())
+        breaks = np.concatenate([np.asarray(o.breaks) for o in outs], axis=1)
+        a = np.concatenate([np.asarray(o.a) for o in outs], axis=1)
+        v = np.concatenate([np.asarray(o.v) for o in outs], axis=1)
+        seg = jax_pla.SegmentOutput(breaks, a, v)
+        recon = np.asarray(jax_pla.propagate_lines(seg))[0]
+        # Whole-stream byte accounting (includes the trailing flush).
+        total, _, _ = self._segment_bytes(breaks[0], -1)
+        return {
+            "overall_ratio": total / (VALUE_BYTES * n),
+            "eps_trace": list(self.eps_trace),
+            "errors": np.abs(recon - ys),
+            "segments": int(breaks.sum()),
         }
 
 

@@ -25,17 +25,58 @@ and return dense, shape-static output:
   keeps float32 exact for streams as long as 2^24 (global-intercept form
   ``a*t + b`` loses ~|a|*t*2^-24 to cancellation — fatal at T=500k).
 
-:func:`propagate_lines` turns that into per-point reconstruction;
+Streaming (chunked) API
+-----------------------
+
+Every segmenter is built from an explicit ``(init, step, flush)`` carry
+triple, and that carry is public: a stream may be pushed in chunks of any
+size with output **bit-identical** to the one-shot offline call.
+
+- :func:`init_state` — make a fresh :class:`SegmenterState` for ``S``
+  streams (no data consumed yet; the carry materializes on the first chunk).
+- :func:`step_chunk` — consume ``y_chunk: (S, n)`` (any ``n >= 1``,
+  including 1) and return the *newly finalized* event columns: processing
+  absolute time ``t`` can only decide that a segment ended at ``t - 1``, so
+  a chunk covering positions ``[t0, t0+n)`` finalizes positions
+  ``[t0-1, t0+n-1)`` (the very first chunk of a stream finalizes one column
+  fewer — position ``-1`` does not exist).
+- :func:`flush` — close the trailing run: emits the single final event
+  column (a forced break at the last consumed position) and resets the
+  carry, so the next :func:`step_chunk` starts a fresh stream at the next
+  absolute position (used by the adaptive-ε controller's retune boundaries
+  and the KV block boundaries).
+
+Concatenating all :func:`step_chunk` outputs plus the :func:`flush` column
+reproduces the offline ``(S, T)`` :class:`SegmentOutput` exactly.  Offline
+functions are thin wrappers over one full-length chunk of the same
+building blocks, so the equality is structural, not coincidental.
+Chunk boundaries are host-side (Python) decisions; the per-chunk work is a
+single jitted ``lax.scan`` whose absolute-time offset is a traced scalar —
+pushing many chunks does not retrace (one trace per distinct chunk width).
+``eps`` is traced as well, so per-chunk ε retuning is recompile-free.
+Caveat: the reference segmenters walk *absolute* time (positions enter
+float32 through bounded differences only, but ``disjoint``/``linear`` keep
+the run window in an absolute ring), so a single :class:`SegmenterState`
+supports streams up to 2^24 points between flushes; the Pallas kernels
+(:mod:`repro.kernels`) renumber time per launch and have no such limit.
+
+:func:`propagate_lines` turns segments into per-point reconstruction;
 :func:`to_records` / :func:`decode_records` give the fixed-slot record form
 used by the compressed collectives, with SingleStream byte accounting.
+Records can also be built *incrementally*: :func:`records_init` allocates
+an empty fixed-slot buffer, :func:`records_append` scatters a chunk's
+events into the next free slots, and :func:`records_finalize` applies the
+same forward-fill padding / overflow marking as :func:`to_records` — the
+incremental path is bit-identical to the batch one.
 All internal line state is likewise anchored at the current run's start, so
 t enters only through differences bounded by the run cap.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +84,10 @@ import jax.numpy as jnp
 __all__ = [
     "SegmentOutput", "angle_segment", "disjoint_segment", "linear_segment",
     "swing_segment",
+    "SegmenterState", "init_state", "step_chunk", "flush",
+    "STREAMING_METHODS", "check_window",
     "propagate_lines", "to_records", "decode_records",
+    "records_init", "records_append", "records_finalize",
     "singlestream_nbytes", "PLARecords",
 ]
 
@@ -57,8 +101,368 @@ class SegmentOutput(NamedTuple):
 
 
 # ---------------------------------------------------------------------------
-# Angle: O(1) state per stream
+# Algorithm building blocks
+#
+# Each method is an (init, step, flush) triple over a per-stream carry
+# pytree.  The offline segmenters below and the chunked streaming API share
+# these functions verbatim, which is what makes chunked == offline bitwise.
+#
+#   init(y0, eps, max_run, window, t0) -> carry     (consumes the 1st point)
+#   step(eps, max_run, window, carry, (t, y_t))
+#       -> (carry, (brk, a, v))                     (event for position t-1)
+#   flush(carry, t_last) -> (a_f, v_f)              (trailing-run line)
 # ---------------------------------------------------------------------------
+
+
+class _MethodImpl(NamedTuple):
+    init: Callable
+    step: Callable
+    flush: Callable
+    int_ts: bool      # scan times as int32 (ring methods) vs value dtype
+    windowed: bool    # takes a window parameter
+
+
+# ---- Angle: O(1) state per stream -----------------------------------------
+
+def _angle_init(y0, eps, max_run, window, t0):
+    S = y0.shape[0]
+    dtype = y0.dtype
+    return (
+        jnp.zeros((S,), jnp.int32),          # phase
+        y0,                                  # p0y
+        jnp.zeros((S,), dtype),              # od (origin offset)
+        jnp.zeros((S,), dtype),              # oy
+        jnp.full((S,), -_BIG, dtype), jnp.full((S,), _BIG, dtype),
+        jnp.ones((S,), jnp.int32),           # run_len
+    )
+
+
+def _angle_step(eps, max_run, window, state, inp):
+    (phase, p0y, od, oy, slo, shi, run_len) = state
+    # ``od`` = origin position relative to the *current* step t:
+    # origin_t = t - od (od grows by 1 each step).
+    t, yt = inp
+    S = yt.shape[0]
+    dtype = yt.dtype
+    t = jnp.broadcast_to(t, (S,)).astype(dtype)
+
+    # Phase 0 -> 1: origin from p0 = (t-1, p0y) and this error segment,
+    # all in origin-relative coordinates (p0 at offset 0, t at +1).
+    amax = (yt + eps) - (p0y - eps)
+    amin = (yt - eps) - (p0y + eps)
+    # Extreme lines in the relative frame: max-slope through (0, p0y-e)
+    # and (1, y+e); min-slope through (0, p0y+e) and (1, y-e).  Their
+    # crossing: x = 2*eps / (amax - amin) with value amax*x + p0y - eps.
+    da = amax - amin
+    das = jnp.where(jnp.abs(da) < 1e-30, 1.0, da)
+    ox_rel = jnp.where(jnp.abs(da) < 1e-30, 0.5, 2.0 * eps / das)
+    oy_new = amax * ox_rel + (p0y - eps)
+    od_new0 = 1.0 - ox_rel   # distance from origin to current t
+
+    # Phase 1: wedge update (origin at t - od).
+    dt = od
+    dts = jnp.where(dt == 0, 1.0, dt)
+    n1 = (yt - eps - oy) / dts
+    n2 = (yt + eps - oy) / dts
+    nlo = jnp.minimum(n1, n2)
+    nhi = jnp.maximum(n1, n2)
+    t_slo = jnp.maximum(slo, nlo)
+    t_shi = jnp.minimum(shi, nhi)
+    feasible = t_slo <= t_shi
+    cap_hit = run_len >= max_run
+    brk = (phase == 1) & (~feasible | cap_hit)
+
+    # Finalized segment line, anchored at the break position (t-1).
+    a_out = jnp.where(phase == 1, 0.5 * (slo + shi), 0.0)
+    v_out = jnp.where(phase == 1, oy + a_out * (od - 1.0), p0y)
+
+    new_phase = jnp.where(brk, 0, 1).astype(jnp.int32)
+    new_p0y = jnp.where(brk, yt, p0y)
+    go0 = (phase == 0) & ~brk
+    new_od = jnp.where(go0, od_new0 + 1.0, jnp.where(brk, 0.0, od + 1.0))
+    new_oy = jnp.where(go0, oy_new, oy)
+    new_slo = jnp.where(go0, amin, jnp.where(brk, -_BIG, t_slo))
+    new_shi = jnp.where(go0, amax, jnp.where(brk, _BIG, t_shi))
+    new_run_len = jnp.where(brk, 1, run_len + 1)
+    new_state = (new_phase, new_p0y, new_od, new_oy,
+                 new_slo, new_shi, new_run_len)
+    return new_state, (brk, a_out, v_out)
+
+
+def _angle_flush(carry, t_last):
+    # ``od`` is pre-incremented at commit time (it holds the origin distance
+    # for the *next* step), so the distance from the origin to the last
+    # consumed position is od - 1.
+    (phase, p0y, od, oy, slo, shi, _) = carry
+    a_f = jnp.where(phase == 0, 0.0, 0.5 * (slo + shi))
+    v_f = jnp.where(phase == 0, p0y, oy + a_f * (od - 1.0))
+    return a_f, v_f
+
+
+# ---- SwingFilter: O(1) state, joint knots ---------------------------------
+
+def _swing_init(y0, eps, max_run, window, t0):
+    S = y0.shape[0]
+    dtype = y0.dtype
+    return (jnp.ones((S,), dtype),            # od: origin at t0, next t=1
+            y0,                               # oy = y0 (exact first origin)
+            jnp.full((S,), -_BIG, dtype), jnp.full((S,), _BIG, dtype),
+            jnp.ones((S,), jnp.int32))
+
+
+def _swing_step(eps, max_run, window, state, inp):
+    (od, oy, slo, shi, run_len) = state
+    # origin sits od steps behind the current t
+    t, yt = inp
+    dts = jnp.where(od == 0, 1.0, od)
+    n1 = (yt - eps - oy) / dts
+    n2 = (yt + eps - oy) / dts
+    nlo = jnp.minimum(n1, n2)
+    nhi = jnp.maximum(n1, n2)
+    t_slo = jnp.maximum(slo, nlo)
+    t_shi = jnp.minimum(shi, nhi)
+    feasible = t_slo <= t_shi
+    cap_hit = run_len >= max_run
+    brk = ~feasible | cap_hit
+
+    a_out = 0.5 * (slo + shi)
+    v_out = oy + a_out * (od - 1.0)   # knot at t-1 (on the old line)
+
+    # on break: new origin = the knot (t-1, v_out); re-add this point.
+    b_lo = (yt - eps - v_out)          # dt == 1 from the new origin
+    b_hi = (yt + eps - v_out)
+    new_od = jnp.where(brk, 1.0, od) + 1.0
+    new_oy = jnp.where(brk, v_out, oy)
+    new_slo = jnp.where(brk, jnp.minimum(b_lo, b_hi), t_slo)
+    new_shi = jnp.where(brk, jnp.maximum(b_lo, b_hi), t_shi)
+    new_run_len = jnp.where(brk, 1, run_len + 1)
+    return (new_od, new_oy, new_slo, new_shi, new_run_len), \
+        (brk, a_out, v_out)
+
+
+def _swing_flush(carry, t_last):
+    (od, oy, slo, shi, run_len) = carry
+    a_f = jnp.where(jnp.isfinite(slo) & jnp.isfinite(shi) & (run_len > 0),
+                    0.5 * (slo + shi), 0.0)
+    a_f = jnp.where(run_len >= 1, a_f, 0.0)
+    v_f = oy + a_f * (od - 1.0)
+    return a_f, v_f
+
+
+# ---- Disjoint (optimal greedy) with exact bounded-window pivot search -----
+
+def _disjoint_init(y0, eps, max_run, window, t0):
+    S = y0.shape[0]
+    dtype = y0.dtype
+    W = window
+    t0 = jnp.asarray(t0, jnp.int32)
+    ybuf0 = jnp.zeros((S, W), dtype).at[:, t0 % W].set(y0)
+    z = jnp.zeros((S,), dtype)
+    return (ybuf0,
+            jnp.full((S,), t0, jnp.int32),    # run_start (absolute pos)
+            jnp.ones((S,), jnp.int32),        # run_len
+            z, z, z, z,                       # extreme lines (a, v@rs)
+            y0, y0)                           # prev_y, y0
+
+
+def _disjoint_step(eps, max_run, window, state, inp):
+    (ybuf, run_start, run_len, a_lo, v_lo, a_hi, v_hi, prev_y, y0) = state
+    # lines anchored at run_start: line(t) = v + a * (t - run_start)
+    W = window
+    t_i, yt = inp
+    S = yt.shape[0]
+    dtype = yt.dtype
+    t = jnp.broadcast_to(t_i, (S,)).astype(dtype)
+    rs = run_start.astype(dtype)
+    rel = t - rs
+
+    lo_i, hi_i = yt - eps, yt + eps
+    vmax = a_hi * rel + v_hi
+    vmin = a_lo * rel + v_lo
+    feas2 = (vmax >= lo_i) & (vmin <= hi_i)
+    feasible = jnp.where(run_len >= 2, feas2, True)
+    cap_hit = run_len >= max_run
+    brk = ~feasible | cap_hit
+
+    # Chosen line anchored at the break position (t-1): parameter-space
+    # midpoint of the extreme lines (feasible by convexity).
+    am = 0.5 * (a_lo + a_hi)
+    vm = 0.5 * (v_lo + v_hi) + am * (rel - 1.0)
+    a_out = jnp.where(run_len >= 2, am, 0.0)
+    v_out = jnp.where(run_len >= 2, vm, prev_y)
+
+    # ---- retightening over the run window -----------------------------
+    abs_pos = t_i - 1 - jnp.arange(W)            # absolute positions
+    pos = (abs_pos % W).astype(jnp.int32)
+    in_run = (abs_pos >= run_start[:, None]) & (abs_pos >= 0)
+    yw = jnp.take_along_axis(ybuf, jnp.broadcast_to(pos, (S, W)), axis=1)
+    dtw = t[:, None] - abs_pos.astype(dtype)[None, :]
+    dtw_safe = jnp.where(in_run, dtw, 1.0)
+
+    need_hi = vmax > hi_i
+    slopes_hi = (hi_i[:, None] - (yw - eps[:, None])) / dtw_safe
+    slopes_hi = jnp.where(in_run, slopes_hi, _BIG)
+    a_hi_new = jnp.min(slopes_hi, axis=1)
+    v_hi_new = hi_i - a_hi_new * rel             # value at run_start
+    a_hi_u = jnp.where(need_hi, a_hi_new, a_hi)
+    v_hi_u = jnp.where(need_hi, v_hi_new, v_hi)
+
+    need_lo = vmin < lo_i
+    slopes_lo = (lo_i[:, None] - (yw + eps[:, None])) / dtw_safe
+    slopes_lo = jnp.where(in_run, slopes_lo, -_BIG)
+    a_lo_new = jnp.max(slopes_lo, axis=1)
+    v_lo_new = lo_i - a_lo_new * rel
+    a_lo_u = jnp.where(need_lo, a_lo_new, a_lo)
+    v_lo_u = jnp.where(need_lo, v_lo_new, v_lo)
+
+    # Second point of a run initializes the extreme lines.
+    rel_s = jnp.maximum(rel, 1.0)
+    a_hi_2 = (hi_i - (y0 - eps)) / rel_s
+    v_hi_2 = y0 - eps
+    a_lo_2 = (lo_i - (y0 + eps)) / rel_s
+    v_lo_2 = y0 + eps
+
+    second = run_len == 1
+    a_hi_n = jnp.where(second, a_hi_2, a_hi_u)
+    v_hi_n = jnp.where(second, v_hi_2, v_hi_u)
+    a_lo_n = jnp.where(second, a_lo_2, a_lo_u)
+    v_lo_n = jnp.where(second, v_lo_2, v_lo_u)
+
+    # ---- commit --------------------------------------------------------
+    new_run_start = jnp.where(brk, t_i, run_start)
+    new_run_len = jnp.where(brk, 1, run_len + 1)
+    ybuf_n = ybuf.at[:, (t_i % W).astype(jnp.int32)].set(yt)
+    z = jnp.zeros_like(a_lo_n)
+    new_state = (ybuf_n, new_run_start, new_run_len,
+                 jnp.where(brk, z, a_lo_n), jnp.where(brk, z, v_lo_n),
+                 jnp.where(brk, z, a_hi_n), jnp.where(brk, z, v_hi_n),
+                 yt, jnp.where(brk, yt, y0))
+    return new_state, (brk, a_out, v_out)
+
+
+def _disjoint_flush(carry, t_last):
+    (ybuf, run_start, run_len, a_lo, v_lo, a_hi, v_hi, prev_y, y0) = carry
+    dtype = prev_y.dtype
+    rel = jnp.asarray(t_last).astype(dtype) - run_start.astype(dtype)
+    am = 0.5 * (a_lo + a_hi)
+    a_f = jnp.where(run_len >= 2, am, 0.0)
+    v_f = jnp.where(run_len >= 2, 0.5 * (v_lo + v_hi) + am * rel, prev_y)
+    return a_f, v_f
+
+
+# ---- Linear (best-fit) with window revalidation ---------------------------
+
+def _linear_init(y0, eps, max_run, window, t0):
+    S = y0.shape[0]
+    dtype = y0.dtype
+    W = window
+    t0 = jnp.asarray(t0, jnp.int32)
+    ybuf0 = jnp.zeros((S, W), dtype).at[:, t0 % W].set(y0)
+    return (ybuf0,
+            jnp.full((S,), t0, jnp.int32),
+            jnp.ones((S,), dtype),                      # n
+            jnp.zeros((S,), dtype), y0,                 # means (rel t, y)
+            jnp.zeros((S,), dtype), jnp.zeros((S,), dtype),  # stt, sty
+            jnp.zeros((S,), dtype), y0)                 # valid fit (0, y0)
+
+
+def _linear_step(eps, max_run, window, state, inp):
+    (ybuf, run_start, nn, mt, my, stt, sty, va, vv) = state
+    # mt = mean of run-relative t; (va, vv) = last valid fit as
+    # (slope, value at the previous point) — the break anchor.
+    W = window
+    t_i, yt = inp
+    S = yt.shape[0]
+    dtype = yt.dtype
+    t = jnp.broadcast_to(t_i, (S,)).astype(dtype)
+    rs = run_start.astype(dtype)
+    rel = t - rs
+
+    n1 = nn + 1.0
+    d_t = rel - mt
+    d_y = yt - my
+    mt1 = mt + d_t / n1
+    my1 = my + d_y / n1
+    stt1 = stt + d_t * (rel - mt1)
+    sty1 = sty + d_t * (yt - my1)
+    a_fit = jnp.where(stt1 > 0, sty1 / jnp.where(stt1 > 0, stt1, 1.0), 0.0)
+    b_fit = my1 - a_fit * mt1    # value at rel == 0 (run start)
+
+    # Window revalidation.
+    abs_pos = t_i - 1 - jnp.arange(W)
+    pos = (abs_pos % W).astype(jnp.int32)
+    in_run = (abs_pos >= run_start[:, None]) & (abs_pos >= 0)
+    yw = jnp.take_along_axis(ybuf, jnp.broadcast_to(pos, (S, W)), axis=1)
+    relw = abs_pos.astype(dtype)[None, :] - rs[:, None]
+    res = jnp.abs(yw - (a_fit[:, None] * relw + b_fit[:, None]))
+    res = jnp.where(in_run, res, 0.0)
+    max_res = jnp.maximum(jnp.max(res, axis=1),
+                          jnp.abs(yt - (a_fit * rel + b_fit)))
+    tol = eps * (1 + 1e-6) + 1e-12
+    valid = max_res <= tol
+    cap_hit = nn >= max_run
+    brk = ~valid | cap_hit
+
+    a_out, v_out = va, vv  # last valid fit, anchored at t-1
+
+    new_run_start = jnp.where(brk, t_i, run_start)
+    new_nn = jnp.where(brk, 1.0, n1)
+    new_mt = jnp.where(brk, 0.0, mt1)
+    new_my = jnp.where(brk, yt, my1)
+    new_stt = jnp.where(brk, 0.0, stt1)
+    new_sty = jnp.where(brk, 0.0, sty1)
+    new_va = jnp.where(brk, 0.0, a_fit)
+    # value of the (new) valid fit at the *current* point t.
+    new_vv = jnp.where(brk, yt, a_fit * rel + b_fit)
+    ybuf_n = ybuf.at[:, (t_i % W).astype(jnp.int32)].set(yt)
+    new_state = (ybuf_n, new_run_start, new_nn, new_mt, new_my,
+                 new_stt, new_sty, new_va, new_vv)
+    return new_state, (brk, a_out, v_out)
+
+
+def _linear_flush(carry, t_last):
+    (_, _, _, _, _, _, _, va, vv) = carry
+    return va, vv
+
+
+_METHOD_IMPLS = {
+    "angle": _MethodImpl(_angle_init, _angle_step, _angle_flush,
+                         int_ts=False, windowed=False),
+    "swing": _MethodImpl(_swing_init, _swing_step, _swing_flush,
+                         int_ts=False, windowed=False),
+    "disjoint": _MethodImpl(_disjoint_init, _disjoint_step, _disjoint_flush,
+                            int_ts=True, windowed=True),
+    "linear": _MethodImpl(_linear_init, _linear_step, _linear_flush,
+                          int_ts=True, windowed=True),
+}
+
+STREAMING_METHODS = tuple(_METHOD_IMPLS)
+
+
+# ---------------------------------------------------------------------------
+# Offline segmenters: one full-length chunk through the shared triple
+# ---------------------------------------------------------------------------
+
+def _segment_offline(method, y, eps, max_run, window):
+    impl = _METHOD_IMPLS[method]
+    S, T = y.shape
+    dtype = y.dtype
+    eps = jnp.broadcast_to(jnp.asarray(eps, dtype), (S,))
+    carry = impl.init(y[:, 0], eps, max_run, window, 0)
+    ts = jnp.arange(1, T, dtype=jnp.int32 if impl.int_ts else dtype)
+    step = functools.partial(impl.step, eps, max_run, window)
+    carry, (brk_seq, a_seq, v_seq) = jax.lax.scan(step, carry,
+                                                  (ts, y[:, 1:].T))
+    breaks = jnp.zeros((S, T), bool).at[:, :-1].set(brk_seq.T)
+    a = jnp.zeros((S, T), dtype).at[:, :-1].set(a_seq.T)
+    v = jnp.zeros((S, T), dtype).at[:, :-1].set(v_seq.T)
+    # Flush trailing run at T-1 through the shared flush.
+    a_f, v_f = impl.flush(carry, T - 1)
+    breaks = breaks.at[:, T - 1].set(True)
+    a = a.at[:, T - 1].set(a_f)
+    v = v.at[:, T - 1].set(v_f)
+    return SegmentOutput(breaks, a, v)
+
 
 @functools.partial(jax.jit, static_argnames=("max_run",))
 def angle_segment(y: jax.Array, eps: jax.Array, max_run: int = 256
@@ -67,87 +471,8 @@ def angle_segment(y: jax.Array, eps: jax.Array, max_run: int = 256
 
     ``eps`` may be scalar or per-row ``(S,)``.
     """
-    S, T = y.shape
-    dtype = y.dtype
-    eps = jnp.broadcast_to(jnp.asarray(eps, dtype), (S,))
+    return _segment_offline("angle", y, eps, max_run, None)
 
-    def step(state, inp):
-        (phase, p0y, od, oy, slo, shi, run_len) = state
-        # ``od`` = origin position relative to the *current* step t:
-        # origin_t = t - od (od grows by 1 each step).
-        t, yt = inp
-        t = jnp.broadcast_to(t, (S,)).astype(dtype)
-
-        # Phase 0 -> 1: origin from p0 = (t-1, p0y) and this error segment,
-        # all in origin-relative coordinates (p0 at offset 0, t at +1).
-        amax = (yt + eps) - (p0y - eps)
-        amin = (yt - eps) - (p0y + eps)
-        # Extreme lines in the relative frame: max-slope through (0, p0y-e)
-        # and (1, y+e); min-slope through (0, p0y+e) and (1, y-e).  Their
-        # crossing: x = 2*eps / (amax - amin) with value amax*x + p0y - eps.
-        da = amax - amin
-        das = jnp.where(jnp.abs(da) < 1e-30, 1.0, da)
-        ox_rel = jnp.where(jnp.abs(da) < 1e-30, 0.5, 2.0 * eps / das)
-        oy_new = amax * ox_rel + (p0y - eps)
-        od_new0 = 1.0 - ox_rel   # distance from origin to current t
-
-        # Phase 1: wedge update (origin at t - od).
-        dt = od
-        dts = jnp.where(dt == 0, 1.0, dt)
-        n1 = (yt - eps - oy) / dts
-        n2 = (yt + eps - oy) / dts
-        nlo = jnp.minimum(n1, n2)
-        nhi = jnp.maximum(n1, n2)
-        t_slo = jnp.maximum(slo, nlo)
-        t_shi = jnp.minimum(shi, nhi)
-        feasible = t_slo <= t_shi
-        cap_hit = run_len >= max_run
-        brk = (phase == 1) & (~feasible | cap_hit)
-
-        # Finalized segment line, anchored at the break position (t-1).
-        a_out = jnp.where(phase == 1, 0.5 * (slo + shi), 0.0)
-        v_out = jnp.where(phase == 1, oy + a_out * (od - 1.0), p0y)
-
-        new_phase = jnp.where(brk, 0, 1).astype(jnp.int32)
-        new_p0y = jnp.where(brk, yt, p0y)
-        go0 = (phase == 0) & ~brk
-        new_od = jnp.where(go0, od_new0 + 1.0, jnp.where(brk, 0.0, od + 1.0))
-        new_oy = jnp.where(go0, oy_new, oy)
-        new_slo = jnp.where(go0, amin, jnp.where(brk, -_BIG, t_slo))
-        new_shi = jnp.where(go0, amax, jnp.where(brk, _BIG, t_shi))
-        new_run_len = jnp.where(brk, 1, run_len + 1)
-        new_state = (new_phase, new_p0y, new_od, new_oy,
-                     new_slo, new_shi, new_run_len)
-        return new_state, (brk, a_out, v_out)
-
-    init = (
-        jnp.zeros((S,), jnp.int32),          # phase
-        y[:, 0],                             # p0y
-        jnp.zeros((S,), dtype),              # od (origin offset)
-        jnp.zeros((S,), dtype),              # oy
-        jnp.full((S,), -_BIG, dtype), jnp.full((S,), _BIG, dtype),
-        jnp.ones((S,), jnp.int32),           # run_len
-    )
-    ts = jnp.arange(1, T, dtype=dtype)
-    state, (brk_seq, a_seq, v_seq) = jax.lax.scan(step, init, (ts, y[:, 1:].T))
-    breaks = jnp.zeros((S, T), bool).at[:, :-1].set(brk_seq.T)
-    a = jnp.zeros((S, T), dtype).at[:, :-1].set(a_seq.T)
-    v = jnp.zeros((S, T), dtype).at[:, :-1].set(v_seq.T)
-    # Flush trailing run at T-1.  ``od`` is pre-incremented at commit time
-    # (it holds the origin distance for the *next* step), so the distance
-    # from the origin to T-1 is od - 1.
-    (phase, p0y, od, oy, slo, shi, _) = state
-    a_f = jnp.where(phase == 0, 0.0, 0.5 * (slo + shi))
-    v_f = jnp.where(phase == 0, p0y, oy + a_f * (od - 1.0))
-    breaks = breaks.at[:, T - 1].set(True)
-    a = a.at[:, T - 1].set(a_f)
-    v = v.at[:, T - 1].set(v_f)
-    return SegmentOutput(breaks, a, v)
-
-
-# ---------------------------------------------------------------------------
-# SwingFilter: O(1) state, joint knots (origin = previous segment's end)
-# ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("max_run",))
 def swing_segment(y: jax.Array, eps: jax.Array, max_run: int = 256
@@ -159,63 +484,16 @@ def swing_segment(y: jax.Array, eps: jax.Array, max_run: int = 256
     the same (breaks, a, v) form — reconstruction is identical; the joint
     property shows as v[k] continuity across breaks.
     """
-    S, T = y.shape
-    dtype = y.dtype
-    eps = jnp.broadcast_to(jnp.asarray(eps, dtype), (S,))
-
-    def step(state, inp):
-        (od, oy, slo, shi, run_len) = state
-        # origin sits od steps behind the current t
-        t, yt = inp
-        dts = jnp.where(od == 0, 1.0, od)
-        n1 = (yt - eps - oy) / dts
-        n2 = (yt + eps - oy) / dts
-        nlo = jnp.minimum(n1, n2)
-        nhi = jnp.maximum(n1, n2)
-        t_slo = jnp.maximum(slo, nlo)
-        t_shi = jnp.minimum(shi, nhi)
-        feasible = t_slo <= t_shi
-        cap_hit = run_len >= max_run
-        brk = ~feasible | cap_hit
-
-        a_out = 0.5 * (slo + shi)
-        v_out = oy + a_out * (od - 1.0)   # knot at t-1 (on the old line)
-
-        # on break: new origin = the knot (t-1, v_out); re-add this point.
-        b_lo = (yt - eps - v_out)          # dt == 1 from the new origin
-        b_hi = (yt + eps - v_out)
-        new_od = jnp.where(brk, 1.0, od) + 1.0
-        new_oy = jnp.where(brk, v_out, oy)
-        new_slo = jnp.where(brk, jnp.minimum(b_lo, b_hi), t_slo)
-        new_shi = jnp.where(brk, jnp.maximum(b_lo, b_hi), t_shi)
-        new_run_len = jnp.where(brk, 1, run_len + 1)
-        return (new_od, new_oy, new_slo, new_shi, new_run_len), \
-            (brk, a_out, v_out)
-
-    init = (jnp.ones((S,), dtype),            # od: origin at t0, next t=1
-            y[:, 0],                          # oy = y0 (exact first origin)
-            jnp.full((S,), -_BIG, dtype), jnp.full((S,), _BIG, dtype),
-            jnp.ones((S,), jnp.int32))
-    ts = jnp.arange(1, T, dtype=dtype)
-    state, (brk_seq, a_seq, v_seq) = jax.lax.scan(step, init,
-                                                  (ts, y[:, 1:].T))
-    breaks = jnp.zeros((S, T), bool).at[:, :-1].set(brk_seq.T)
-    a = jnp.zeros((S, T), dtype).at[:, :-1].set(a_seq.T)
-    v = jnp.zeros((S, T), dtype).at[:, :-1].set(v_seq.T)
-    (od, oy, slo, shi, run_len) = state
-    a_f = jnp.where(jnp.isfinite(slo) & jnp.isfinite(shi) & (run_len > 0),
-                    0.5 * (slo + shi), 0.0)
-    a_f = jnp.where(run_len >= 1, a_f, 0.0)
-    v_f = oy + a_f * (od - 1.0)
-    breaks = breaks.at[:, T - 1].set(True)
-    a = a.at[:, T - 1].set(a_f)
-    v = v.at[:, T - 1].set(v_f)
-    return SegmentOutput(breaks, a, v)
+    return _segment_offline("swing", y, eps, max_run, None)
 
 
-# ---------------------------------------------------------------------------
-# Disjoint (optimal greedy) with exact bounded-window pivot search
-# ---------------------------------------------------------------------------
+def check_window(max_run: int, window: Optional[int]) -> int:
+    """Resolve/validate a run-window size (defaults to ``max_run``)."""
+    W = window or max_run
+    if W < max_run:
+        raise ValueError("window must be >= max_run")
+    return W
+
 
 @functools.partial(jax.jit, static_argnames=("max_run", "window"))
 def disjoint_segment(y: jax.Array, eps: jax.Array, max_run: int = 256,
@@ -228,111 +506,9 @@ def disjoint_segment(y: jax.Array, eps: jax.Array, max_run: int = 256,
     extremum over all points (DESIGN.md §3).  Lines are anchored at the
     run start.  ``window`` defaults to ``max_run``.
     """
-    S, T = y.shape
-    dtype = y.dtype
-    W = window or max_run
-    if W < max_run:
-        raise ValueError("window must be >= max_run")
-    eps = jnp.broadcast_to(jnp.asarray(eps, dtype), (S,))
+    return _segment_offline("disjoint", y, eps, max_run,
+                            check_window(max_run, window))
 
-    def step(state, inp):
-        (ybuf, run_start, run_len, a_lo, v_lo, a_hi, v_hi, prev_y, y0) = state
-        # lines anchored at run_start: line(t) = v + a * (t - run_start)
-        t_i, yt = inp
-        t = jnp.broadcast_to(t_i, (S,)).astype(dtype)
-        rs = run_start.astype(dtype)
-        rel = t - rs
-
-        lo_i, hi_i = yt - eps, yt + eps
-        vmax = a_hi * rel + v_hi
-        vmin = a_lo * rel + v_lo
-        feas2 = (vmax >= lo_i) & (vmin <= hi_i)
-        feasible = jnp.where(run_len >= 2, feas2, True)
-        cap_hit = run_len >= max_run
-        brk = ~feasible | cap_hit
-
-        # Chosen line anchored at the break position (t-1): parameter-space
-        # midpoint of the extreme lines (feasible by convexity).
-        am = 0.5 * (a_lo + a_hi)
-        vm = 0.5 * (v_lo + v_hi) + am * (rel - 1.0)
-        a_out = jnp.where(run_len >= 2, am, 0.0)
-        v_out = jnp.where(run_len >= 2, vm, prev_y)
-
-        # ---- retightening over the run window -----------------------------
-        abs_pos = t_i - 1 - jnp.arange(W)            # absolute positions
-        pos = (abs_pos % W).astype(jnp.int32)
-        in_run = (abs_pos >= run_start[:, None]) & (abs_pos >= 0)
-        yw = jnp.take_along_axis(ybuf, jnp.broadcast_to(pos, (S, W)), axis=1)
-        dtw = t[:, None] - abs_pos.astype(dtype)[None, :]
-        dtw_safe = jnp.where(in_run, dtw, 1.0)
-
-        need_hi = vmax > hi_i
-        slopes_hi = (hi_i[:, None] - (yw - eps[:, None])) / dtw_safe
-        slopes_hi = jnp.where(in_run, slopes_hi, _BIG)
-        a_hi_new = jnp.min(slopes_hi, axis=1)
-        v_hi_new = hi_i - a_hi_new * rel             # value at run_start
-        a_hi_u = jnp.where(need_hi, a_hi_new, a_hi)
-        v_hi_u = jnp.where(need_hi, v_hi_new, v_hi)
-
-        need_lo = vmin < lo_i
-        slopes_lo = (lo_i[:, None] - (yw + eps[:, None])) / dtw_safe
-        slopes_lo = jnp.where(in_run, slopes_lo, -_BIG)
-        a_lo_new = jnp.max(slopes_lo, axis=1)
-        v_lo_new = lo_i - a_lo_new * rel
-        a_lo_u = jnp.where(need_lo, a_lo_new, a_lo)
-        v_lo_u = jnp.where(need_lo, v_lo_new, v_lo)
-
-        # Second point of a run initializes the extreme lines.
-        rel_s = jnp.maximum(rel, 1.0)
-        a_hi_2 = (hi_i - (y0 - eps)) / rel_s
-        v_hi_2 = y0 - eps
-        a_lo_2 = (lo_i - (y0 + eps)) / rel_s
-        v_lo_2 = y0 + eps
-
-        second = run_len == 1
-        a_hi_n = jnp.where(second, a_hi_2, a_hi_u)
-        v_hi_n = jnp.where(second, v_hi_2, v_hi_u)
-        a_lo_n = jnp.where(second, a_lo_2, a_lo_u)
-        v_lo_n = jnp.where(second, v_lo_2, v_lo_u)
-
-        # ---- commit --------------------------------------------------------
-        new_run_start = jnp.where(brk, t_i, run_start)
-        new_run_len = jnp.where(brk, 1, run_len + 1)
-        ybuf_n = ybuf.at[:, (t_i % W).astype(jnp.int32)].set(yt)
-        z = jnp.zeros_like(a_lo_n)
-        new_state = (ybuf_n, new_run_start, new_run_len,
-                     jnp.where(brk, z, a_lo_n), jnp.where(brk, z, v_lo_n),
-                     jnp.where(brk, z, a_hi_n), jnp.where(brk, z, v_hi_n),
-                     yt, jnp.where(brk, yt, y0))
-        return new_state, (brk, a_out, v_out)
-
-    ybuf0 = jnp.zeros((S, W), dtype).at[:, 0].set(y[:, 0])
-    z = jnp.zeros((S,), dtype)
-    init = (ybuf0,
-            jnp.zeros((S,), jnp.int32),       # run_start (absolute pos)
-            jnp.ones((S,), jnp.int32),        # run_len
-            z, z, z, z,                       # extreme lines (a, v@rs)
-            y[:, 0], y[:, 0])                 # prev_y, y0
-    ts = jnp.arange(1, T, dtype=jnp.int32)
-    state, (brk_seq, a_seq, v_seq) = jax.lax.scan(step, init, (ts, y[:, 1:].T))
-    breaks = jnp.zeros((S, T), bool).at[:, :-1].set(brk_seq.T)
-    a = jnp.zeros((S, T), dtype).at[:, :-1].set(a_seq.T)
-    v = jnp.zeros((S, T), dtype).at[:, :-1].set(v_seq.T)
-    # Flush trailing run.
-    (ybuf, run_start, run_len, a_lo, v_lo, a_hi, v_hi, prev_y, y0) = state
-    rel = (T - 1) - run_start.astype(dtype)
-    am = 0.5 * (a_lo + a_hi)
-    a_f = jnp.where(run_len >= 2, am, 0.0)
-    v_f = jnp.where(run_len >= 2, 0.5 * (v_lo + v_hi) + am * rel, y[:, T - 1])
-    breaks = breaks.at[:, T - 1].set(True)
-    a = a.at[:, T - 1].set(a_f)
-    v = v.at[:, T - 1].set(v_f)
-    return SegmentOutput(breaks, a, v)
-
-
-# ---------------------------------------------------------------------------
-# Linear (best-fit) with window revalidation
-# ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("max_run", "window"))
 def linear_segment(y: jax.Array, eps: jax.Array, max_run: int = 256,
@@ -343,80 +519,123 @@ def linear_segment(y: jax.Array, eps: jax.Array, max_run: int = 256,
     *run-relative* time; the hull-based validity check of the paper becomes
     a masked max-residual reduction over the run window.
     """
-    S, T = y.shape
-    dtype = y.dtype
-    W = window or max_run
-    if W < max_run:
-        raise ValueError("window must be >= max_run")
-    eps = jnp.broadcast_to(jnp.asarray(eps, dtype), (S,))
+    return _segment_offline("linear", y, eps, max_run,
+                            check_window(max_run, window))
 
-    def step(state, inp):
-        (ybuf, run_start, nn, mt, my, stt, sty, va, vv) = state
-        # mt = mean of run-relative t; (va, vv) = last valid fit as
-        # (slope, value at the previous point) — the break anchor.
-        t_i, yt = inp
-        t = jnp.broadcast_to(t_i, (S,)).astype(dtype)
-        rs = run_start.astype(dtype)
-        rel = t - rs
 
-        n1 = nn + 1.0
-        d_t = rel - mt
-        d_y = yt - my
-        mt1 = mt + d_t / n1
-        my1 = my + d_y / n1
-        stt1 = stt + d_t * (rel - mt1)
-        sty1 = sty + d_t * (yt - my1)
-        a_fit = jnp.where(stt1 > 0, sty1 / jnp.where(stt1 > 0, stt1, 1.0), 0.0)
-        b_fit = my1 - a_fit * mt1    # value at rel == 0 (run start)
+# ---------------------------------------------------------------------------
+# Streaming (chunked) API
+# ---------------------------------------------------------------------------
 
-        # Window revalidation.
-        abs_pos = t_i - 1 - jnp.arange(W)
-        pos = (abs_pos % W).astype(jnp.int32)
-        in_run = (abs_pos >= run_start[:, None]) & (abs_pos >= 0)
-        yw = jnp.take_along_axis(ybuf, jnp.broadcast_to(pos, (S, W)), axis=1)
-        relw = abs_pos.astype(dtype)[None, :] - rs[:, None]
-        res = jnp.abs(yw - (a_fit[:, None] * relw + b_fit[:, None]))
-        res = jnp.where(in_run, res, 0.0)
-        max_res = jnp.maximum(jnp.max(res, axis=1),
-                              jnp.abs(yt - (a_fit * rel + b_fit)))
-        tol = eps * (1 + 1e-6) + 1e-12
-        valid = max_res <= tol
-        cap_hit = nn >= max_run
-        brk = ~valid | cap_hit
+@dataclasses.dataclass
+class SegmenterState:
+    """Host-side handle for a chunked segmentation in progress.
 
-        a_out, v_out = va, vv  # last valid fit, anchored at t-1
+    Not a pytree: chunk boundaries are host decisions.  ``carry`` is the
+    jitted scan's pytree state (None before the first point / after a
+    flush); ``t`` counts consumed points, ``emitted`` counts finalized
+    event columns (``emitted == t`` exactly after a flush).
+    """
 
-        new_run_start = jnp.where(brk, t_i, run_start)
-        new_nn = jnp.where(brk, 1.0, n1)
-        new_mt = jnp.where(brk, 0.0, mt1)
-        new_my = jnp.where(brk, yt, my1)
-        new_stt = jnp.where(brk, 0.0, stt1)
-        new_sty = jnp.where(brk, 0.0, sty1)
-        new_va = jnp.where(brk, 0.0, a_fit)
-        # value of the (new) valid fit at the *current* point t.
-        new_vv = jnp.where(brk, yt, a_fit * rel + b_fit)
-        ybuf_n = ybuf.at[:, (t_i % W).astype(jnp.int32)].set(yt)
-        new_state = (ybuf_n, new_run_start, new_nn, new_mt, new_my,
-                     new_stt, new_sty, new_va, new_vv)
-        return new_state, (brk, a_out, v_out)
+    method: str
+    n_streams: int
+    max_run: int
+    window: Optional[int]
+    dtype: Any
+    eps: jax.Array            # (S,) in ``dtype``
+    t: int = 0
+    emitted: int = 0
+    carry: Any = None
 
-    ybuf0 = jnp.zeros((S, W), dtype).at[:, 0].set(y[:, 0])
-    init = (ybuf0,
-            jnp.zeros((S,), jnp.int32),
-            jnp.ones((S,), dtype),                      # n
-            jnp.zeros((S,), dtype), y[:, 0],            # means (rel t, y)
-            jnp.zeros((S,), dtype), jnp.zeros((S,), dtype),  # stt, sty
-            jnp.zeros((S,), dtype), y[:, 0])            # valid fit (0, y0)
-    ts = jnp.arange(1, T, dtype=jnp.int32)
-    state, (brk_seq, a_seq, v_seq) = jax.lax.scan(step, init, (ts, y[:, 1:].T))
-    breaks = jnp.zeros((S, T), bool).at[:, :-1].set(brk_seq.T)
-    a = jnp.zeros((S, T), dtype).at[:, :-1].set(a_seq.T)
-    v = jnp.zeros((S, T), dtype).at[:, :-1].set(v_seq.T)
-    (_, _, _, _, _, _, _, va, vv) = state
-    breaks = breaks.at[:, T - 1].set(True)
-    a = a.at[:, T - 1].set(va)
-    v = v.at[:, T - 1].set(vv)
-    return SegmentOutput(breaks, a, v)
+
+def init_state(method: str, n_streams: int, eps, *, max_run: int = 256,
+               window: Optional[int] = None,
+               dtype=jnp.float32) -> SegmenterState:
+    """Fresh streaming state for ``n_streams`` rows (no data consumed)."""
+    if method not in _METHOD_IMPLS:
+        raise ValueError(f"unknown method {method!r}; "
+                         f"have {sorted(_METHOD_IMPLS)}")
+    if _METHOD_IMPLS[method].windowed:
+        W = check_window(max_run, window)
+    elif window is not None:
+        raise ValueError(f"method {method!r} takes no window")
+    else:
+        W = None
+    eps = jnp.broadcast_to(jnp.asarray(eps, dtype), (n_streams,))
+    return SegmenterState(method=method, n_streams=n_streams,
+                          max_run=max_run, window=W, dtype=dtype, eps=eps)
+
+
+def _chunk_ts(impl, t0, first: int, n: int, dtype):
+    ts = t0 + jnp.arange(first, n, dtype=jnp.int32)
+    return ts if impl.int_ts else ts.astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("method", "max_run", "window"))
+def _stream_start(method, max_run, window, y_chunk, eps, t0):
+    impl = _METHOD_IMPLS[method]
+    carry = impl.init(y_chunk[:, 0], eps, max_run, window, t0)
+    ts = _chunk_ts(impl, t0, 1, y_chunk.shape[1], y_chunk.dtype)
+    step = functools.partial(impl.step, eps, max_run, window)
+    carry, (brk, a, v) = jax.lax.scan(step, carry, (ts, y_chunk[:, 1:].T))
+    return carry, SegmentOutput(brk.T, a.T, v.T)
+
+
+@functools.partial(jax.jit, static_argnames=("method", "max_run", "window"))
+def _stream_cont(method, max_run, window, carry, y_chunk, eps, t0):
+    impl = _METHOD_IMPLS[method]
+    ts = _chunk_ts(impl, t0, 0, y_chunk.shape[1], y_chunk.dtype)
+    step = functools.partial(impl.step, eps, max_run, window)
+    carry, (brk, a, v) = jax.lax.scan(step, carry, (ts, y_chunk.T))
+    return carry, SegmentOutput(brk.T, a.T, v.T)
+
+
+@functools.partial(jax.jit, static_argnames=("method", "max_run", "window"))
+def _stream_flush(method, max_run, window, carry, t_last):
+    a_f, v_f = _METHOD_IMPLS[method].flush(carry, t_last)
+    S = a_f.shape[0]
+    return SegmentOutput(jnp.ones((S, 1), bool), a_f[:, None], v_f[:, None])
+
+
+def step_chunk(state: SegmenterState, y_chunk: jax.Array
+               ) -> tuple[SegmenterState, SegmentOutput]:
+    """Consume ``y_chunk: (S, n)``; return the newly finalized events.
+
+    The returned :class:`SegmentOutput` has width ``n`` (``n - 1`` for the
+    first chunk of a stream) and covers the absolute positions
+    ``[state.emitted, state.emitted + width)``.
+    """
+    y = jnp.asarray(y_chunk, state.dtype)
+    if y.ndim != 2 or y.shape[0] != state.n_streams:
+        raise ValueError(f"chunk must be ({state.n_streams}, n); "
+                         f"got {y.shape}")
+    if y.shape[1] == 0:
+        raise ValueError("chunk must contain at least one point")
+    t0 = jnp.asarray(state.t, jnp.int32)
+    if state.carry is None:
+        carry, out = _stream_start(state.method, state.max_run, state.window,
+                                   y, state.eps, t0)
+    else:
+        carry, out = _stream_cont(state.method, state.max_run, state.window,
+                                  state.carry, y, state.eps, t0)
+    new = dataclasses.replace(state, t=state.t + y.shape[1],
+                              emitted=state.emitted + out.breaks.shape[1],
+                              carry=carry)
+    return new, out
+
+
+def flush(state: SegmenterState) -> tuple[SegmenterState, SegmentOutput]:
+    """Close the trailing run: one forced-break event at position t-1.
+
+    The returned state has no carry — the next :func:`step_chunk` starts a
+    fresh stream at absolute position ``state.t``.
+    """
+    if state.carry is None:
+        raise ValueError("flush with no open run (no data since last flush)")
+    out = _stream_flush(state.method, state.max_run, state.window,
+                        state.carry, jnp.asarray(state.t - 1, jnp.int32))
+    new = dataclasses.replace(state, carry=None, emitted=state.emitted + 1)
+    return new, out
 
 
 # ---------------------------------------------------------------------------
@@ -456,6 +675,11 @@ class PLARecords(NamedTuple):
     segments; ``overflow`` = row had more than K segments (its tail is
     covered by extending slot K-1's line — callers relying on the eps
     guarantee must check/react, e.g. error feedback or eps escalation).
+
+    During *incremental* building (:func:`records_init` /
+    :func:`records_append`) ``count`` holds the uncapped running total and
+    ``overflow`` stays False; :func:`records_finalize` converts to the
+    canonical (capped, padded, overflow-marked) form above.
     """
 
     seg_end: jax.Array  # (S, K) int32
@@ -463,6 +687,21 @@ class PLARecords(NamedTuple):
     v: jax.Array        # (S, K)
     count: jax.Array    # (S,) int32
     overflow: jax.Array  # (S,) bool
+
+
+def _records_pad(idx, ak, vk, count, k_max, t_len):
+    """Canonical padding shared by to_records / records_finalize: slots past
+    the last real segment repeat it; overflow rows pin slot K-1 to t-1."""
+    kk = jnp.arange(k_max)[None, :]
+    last = jnp.clip(count - 1, 0, k_max - 1)[:, None]
+    src = jnp.minimum(kk, last).astype(jnp.int32)
+    idx = jnp.take_along_axis(idx, src, axis=1)
+    ak = jnp.take_along_axis(ak, src, axis=1)
+    vk = jnp.take_along_axis(vk, src, axis=1)
+    overflow = count > k_max
+    idx = idx.at[:, k_max - 1].set(
+        jnp.where(overflow, t_len - 1, idx[:, k_max - 1]))
+    return PLARecords(idx, ak, vk, jnp.minimum(count, k_max), overflow)
 
 
 @functools.partial(jax.jit, static_argnames=("k_max",))
@@ -476,16 +715,62 @@ def to_records(seg: SegmentOutput, k_max: int) -> PLARecords:
         return idx, ar[idx], vr[idx]
 
     idx, ak, vk = jax.vmap(row)(breaks, a, v)
-    # Forward-fill padding slots with the last real segment.
-    kk = jnp.arange(k_max)[None, :]
-    last = jnp.clip(count - 1, 0, k_max - 1)[:, None]
-    src = jnp.minimum(kk, last).astype(jnp.int32)
-    idx = jnp.take_along_axis(idx, src, axis=1)
-    ak = jnp.take_along_axis(ak, src, axis=1)
-    vk = jnp.take_along_axis(vk, src, axis=1)
-    overflow = count > k_max
-    idx = idx.at[:, k_max - 1].set(jnp.where(overflow, T - 1, idx[:, k_max - 1]))
-    return PLARecords(idx, ak, vk, jnp.minimum(count, k_max), overflow)
+    return _records_pad(idx, ak, vk, count, k_max, T)
+
+
+def records_init(n_streams: int, k_max: int, dtype=jnp.float32) -> PLARecords:
+    """Empty fixed-slot buffer for incremental record emission."""
+    return PLARecords(jnp.zeros((n_streams, k_max), jnp.int32),
+                      jnp.zeros((n_streams, k_max), dtype),
+                      jnp.zeros((n_streams, k_max), dtype),
+                      jnp.zeros((n_streams,), jnp.int32),
+                      jnp.zeros((n_streams,), bool))
+
+
+@jax.jit
+def records_append(rec: PLARecords, seg_chunk: SegmentOutput,
+                   t_offset) -> PLARecords:
+    """Scatter a chunk's break events into the next free record slots.
+
+    ``seg_chunk`` covers absolute positions ``[t_offset, t_offset + n)``
+    (e.g. the output of :func:`step_chunk` at ``t_offset = state.emitted``
+    taken *before* the call).  Events beyond ``k_max`` slots are dropped but
+    still counted, so :func:`records_finalize` marks the row overflowed —
+    exactly like the batch :func:`to_records`."""
+    brk, a, v = seg_chunk
+    S, n = a.shape
+    K = rec.seg_end.shape[1]
+    if n == 0:
+        return rec
+    kc = min(n, K)  # at most K new events can land in slots; rest overflow
+    new = brk.sum(axis=1).astype(jnp.int32)
+
+    def row(brk_r, a_r, v_r):
+        idx = jnp.nonzero(brk_r, size=kc, fill_value=0)[0].astype(jnp.int32)
+        return idx, a_r[idx], v_r[idx]
+
+    idx, ak, vk = jax.vmap(row)(brk, a, v)
+    j = jnp.arange(kc)[None, :]
+    slots = rec.count[:, None] + j
+    # invalid or overflowing events -> slot K, dropped by mode="drop"
+    slots = jnp.where((j < new[:, None]) & (slots < K), slots, K)
+    rows = jnp.arange(S)[:, None]
+    t_offset = jnp.asarray(t_offset, jnp.int32)
+    seg_end = rec.seg_end.at[rows, slots].set(t_offset + idx, mode="drop")
+    a2 = rec.a.at[rows, slots].set(ak, mode="drop")
+    v2 = rec.v.at[rows, slots].set(vk, mode="drop")
+    return PLARecords(seg_end, a2, v2, rec.count + new, rec.overflow)
+
+
+@functools.partial(jax.jit, static_argnames=("t_len",))
+def records_finalize(rec: PLARecords, t_len: int) -> PLARecords:
+    """Convert an incrementally built buffer to canonical padded form.
+
+    Bit-identical to ``to_records(seg, k_max)`` when the appended chunks
+    concatenate to ``seg`` (requires >= 1 event per row, which the
+    streaming flush guarantees)."""
+    return _records_pad(rec.seg_end, rec.a, rec.v, rec.count,
+                        rec.seg_end.shape[1], t_len)
 
 
 @functools.partial(jax.jit, static_argnames=("t_len",))

@@ -3,7 +3,8 @@
 O(1) state per stream: the wedge origin (intersection of the two extreme
 lines through the first two error segments) plus the feasible slope
 interval.  Streams ride the lane dimension; time is walked sequentially by
-the inner grid dimension with carry state in VMEM scratch.
+the inner grid dimension with carry state in VMEM scratch, resumed from /
+handed back through the packed carry operand (kernels/common.py).
 
 All line state is *anchored* (origin kept as an offset from the current
 step; outputs are (slope, value-at-break)) so float32 stays exact for
@@ -11,8 +12,13 @@ arbitrarily long streams — see repro.core.jax_pla.
 
 Event semantics (see kernels/common.py): processing time ``t`` may emit
 "segment ended at t-1" at event row ``t``; a forced break is injected at
-``t == t_real`` (the first padded step) so the trailing run flushes without
-cross-block writes.
+``t == t_real`` (disabled with ``t_real=-1``) so the trailing run flushes
+without cross-block writes.
+
+Carry rows (ANGLE_STATE_ROWS = 8, all f32; see the carry-state contract in
+kernels/common.py): 0 started, 1 phase, 2 p0y, 3 od, 4 oy, 5 slo, 6 shi,
+7 run_len.  All state is position-relative, so resuming a launch needs no
+host-side shift (``angle_shift_carry`` is the identity).
 """
 
 from __future__ import annotations
@@ -27,27 +33,40 @@ from .common import BLOCK_S, BLOCK_T, launch_segmenter
 
 _BIG = 3.4e38
 
+ANGLE_STATE_ROWS = 8
 
-def _angle_kernel(y_ref, brk_ref, a_ref, v_ref,
-                  phase, p0y, od, oy, slo, shi, runl,
+
+def angle_init_carry(sp: int) -> jax.Array:
+    """Packed fresh-stream carry (started=0; empty wedge) for Sp lanes."""
+    c = jnp.zeros((ANGLE_STATE_ROWS, sp), jnp.float32)
+    return c.at[5].set(-_BIG).at[6].set(_BIG)
+
+
+def angle_shift_carry(carry: jax.Array, m: int) -> jax.Array:
+    return carry  # purely relative state
+
+
+def _angle_kernel(y_ref, cin, brk_ref, a_ref, v_ref, cout,
+                  started, phase, p0y, od, oy, slo, shi, runl,
                   *, eps: float, bt: int, t_real: int, max_run: int):
     ti = pl.program_id(1)
 
     @pl.when(ti == 0)
-    def _init():
-        phase[...] = jnp.zeros_like(phase)
-        p0y[...] = jnp.zeros_like(p0y)
-        od[...] = jnp.zeros_like(od)
-        oy[...] = jnp.zeros_like(oy)
-        slo[...] = jnp.full_like(slo, -_BIG)
-        shi[...] = jnp.full_like(shi, _BIG)
-        runl[...] = jnp.zeros_like(runl)
+    def _load():
+        started[...] = cin[0:1, :].astype(jnp.int32)
+        phase[...] = cin[1:2, :].astype(jnp.int32)
+        p0y[...] = cin[2:3, :]
+        od[...] = cin[3:4, :]
+        oy[...] = cin[4:5, :]
+        slo[...] = cin[5:6, :]
+        shi[...] = cin[6:7, :]
+        runl[...] = cin[7:8, :].astype(jnp.int32)
 
     def step(j, _):
-        t_abs = ti * bt + j
+        t_loc = ti * bt + j   # launch-local time
         yt = pl.load(y_ref, (pl.ds(j, 1), slice(None)))  # (1, BS)
 
-        is_first = t_abs == 0
+        is_first = started[...] == 0
         ph, py = phase[...], p0y[...]
         o_d, o_y, s_lo, s_hi, rl = od[...], oy[...], slo[...], shi[...], runl[...]
 
@@ -70,7 +89,7 @@ def _angle_kernel(y_ref, brk_ref, a_ref, v_ref,
         t_shi = jnp.minimum(s_hi, nhi)
         feasible = t_slo <= t_shi
         cap_hit = rl >= max_run
-        force = t_abs == t_real
+        force = t_loc == t_real
         brk = ((ph == 1) & (~feasible | cap_hit) | force) & ~is_first
 
         a_out = jnp.where(ph == 1, 0.5 * (s_lo + s_hi), 0.0)
@@ -90,23 +109,40 @@ def _angle_kernel(y_ref, brk_ref, a_ref, v_ref,
         slo[...] = jnp.where(go0, amin, jnp.where(brk, -_BIG, t_slo))
         shi[...] = jnp.where(go0, amax, jnp.where(brk, _BIG, t_shi))
         runl[...] = jnp.where(brk | is_first, 1, rl + 1).astype(jnp.int32)
+        started[...] = jnp.ones_like(started[...])
         return 0
 
     jax.lax.fori_loop(0, bt, step, 0)
+
+    @pl.when(ti == pl.num_programs(1) - 1)
+    def _store():
+        cout[0:1, :] = started[...].astype(jnp.float32)
+        cout[1:2, :] = phase[...].astype(jnp.float32)
+        cout[2:3, :] = p0y[...]
+        cout[3:4, :] = od[...]
+        cout[4:5, :] = oy[...]
+        cout[5:6, :] = slo[...]
+        cout[6:7, :] = shi[...]
+        cout[7:8, :] = runl[...].astype(jnp.float32)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("eps", "t_real", "max_run",
                                     "block_s", "block_t"))
 def angle_pallas(y_t: jax.Array, *, eps: float, t_real: int, max_run: int = 256,
-                 block_s: int = BLOCK_S, block_t: int = BLOCK_T):
+                 block_s: int = BLOCK_S, block_t: int = BLOCK_T,
+                 carry: jax.Array | None = None):
     """Run the Angle kernel on time-major ``y_t: (Tp, Sp)``.
 
-    Returns event arrays ``(brk_i8, a, v)`` of shape (Tp, Sp).
+    Returns event arrays ``(brk_i8, a, v)`` of shape (Tp, Sp) plus the
+    carry-out state; ``carry=None`` starts fresh streams.
     """
+    if carry is None:
+        carry = angle_init_carry(y_t.shape[1])
     kernel = functools.partial(_angle_kernel, eps=eps, bt=block_t,
                                t_real=t_real, max_run=max_run)
-    scratch = [((1, block_s), jnp.int32),    # phase
+    scratch = [((1, block_s), jnp.int32),    # started
+               ((1, block_s), jnp.int32),    # phase
                ((1, block_s), jnp.float32),  # p0y
                ((1, block_s), jnp.float32),  # od (origin offset)
                ((1, block_s), jnp.float32),  # oy
@@ -114,4 +150,4 @@ def angle_pallas(y_t: jax.Array, *, eps: float, t_real: int, max_run: int = 256,
                ((1, block_s), jnp.float32),  # shi
                ((1, block_s), jnp.int32)]    # run_len
     return launch_segmenter(kernel, y_t, block_s=block_s, block_t=block_t,
-                            scratch=scratch)
+                            scratch=scratch, carry=carry)

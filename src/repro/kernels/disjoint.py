@@ -10,8 +10,16 @@ Lines are anchored at the run start (``line(t) = v + a * (t - run_start)``)
 so float32 stays exact for arbitrarily long streams.
 
 Ring-buffer trick: no gathers.  Slot ``r`` of the (W, BS) ring holds the
-value at absolute position ``p_r = t-1 - ((t-1-r) mod W)``; the in-run mask
-and per-slot timestamps are pure arithmetic on an iota.
+value at launch-local position ``p_r = t-1 - ((t-1-r) mod W)``; the in-run
+mask and per-slot timestamps are pure arithmetic on an iota.
+
+Carry rows (disjoint_state_rows(W) = 9 + W, all f32; see the carry-state
+contract in kernels/common.py): 0 started, 1 run_start, 2 run_len, 3 y0,
+4 prev_y, 5 a_lo, 6 v_lo, 7 a_hi, 8 v_hi, then W ring rows.  Time is
+launch-local, so ``run_start`` may be *negative* on resume (run began in
+an earlier chunk — never below ``-W`` since runs are capped);
+``disjoint_shift_carry`` renumbers it and rolls the ring after each
+launch.  All uses are differences, so the renumbering is bit-transparent.
 """
 
 from __future__ import annotations
@@ -22,13 +30,32 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.jax_pla import check_window
+
 from .common import BLOCK_S, BLOCK_T, launch_segmenter
 
 _BIG = 3.4e38
 
+_HEAD_ROWS = 9  # scalar state rows before the ring
 
-def _disjoint_kernel(y_ref, brk_ref, a_ref, v_ref,
-                     ring, run_start, runl, y0s, prev_y,
+
+def disjoint_state_rows(window: int) -> int:
+    return _HEAD_ROWS + window
+
+
+def disjoint_init_carry(sp: int, window: int) -> jax.Array:
+    return jnp.zeros((disjoint_state_rows(window), sp), jnp.float32)
+
+
+def disjoint_shift_carry(carry: jax.Array, m: int) -> jax.Array:
+    """Renumber to the next launch's local frame after consuming m cols."""
+    carry = carry.at[1:2].add(-float(m))
+    return carry.at[_HEAD_ROWS:].set(
+        jnp.roll(carry[_HEAD_ROWS:], -m, axis=0))
+
+
+def _disjoint_kernel(y_ref, cin, brk_ref, a_ref, v_ref, cout,
+                     started, ring, run_start, runl, y0s, prev_y,
                      a_lo, v_lo, a_hi, v_hi,
                      *, eps: float, bt: int, t_real: int, max_run: int,
                      window: int):
@@ -36,24 +63,25 @@ def _disjoint_kernel(y_ref, brk_ref, a_ref, v_ref,
     W = window
 
     @pl.when(ti == 0)
-    def _init():
-        ring[...] = jnp.zeros_like(ring)
-        run_start[...] = jnp.zeros_like(run_start)
-        runl[...] = jnp.zeros_like(runl)
-        y0s[...] = jnp.zeros_like(y0s)
-        prev_y[...] = jnp.zeros_like(prev_y)
-        a_lo[...] = jnp.zeros_like(a_lo)
-        v_lo[...] = jnp.zeros_like(v_lo)
-        a_hi[...] = jnp.zeros_like(a_hi)
-        v_hi[...] = jnp.zeros_like(v_hi)
+    def _load():
+        started[...] = cin[0:1, :].astype(jnp.int32)
+        run_start[...] = cin[1:2, :]
+        runl[...] = cin[2:3, :].astype(jnp.int32)
+        y0s[...] = cin[3:4, :]
+        prev_y[...] = cin[4:5, :]
+        a_lo[...] = cin[5:6, :]
+        v_lo[...] = cin[6:7, :]
+        a_hi[...] = cin[7:8, :]
+        v_hi[...] = cin[8:9, :]
+        ring[...] = cin[_HEAD_ROWS:_HEAD_ROWS + W, :]
 
     slot_iota = jax.lax.broadcasted_iota(jnp.float32, (W, 1), 0)
 
     def step(j, _):
-        t_abs = ti * bt + j
-        t = t_abs.astype(jnp.float32)
+        t_loc = ti * bt + j
+        t = t_loc.astype(jnp.float32)
         yt = pl.load(y_ref, (pl.ds(j, 1), slice(None)))  # (1, BS)
-        is_first = t_abs == 0
+        is_first = started[...] == 0
 
         rs, rl = run_start[...], runl[...]
         al, vl, ah, vh = a_lo[...], v_lo[...], a_hi[...], v_hi[...]
@@ -65,7 +93,7 @@ def _disjoint_kernel(y_ref, brk_ref, a_ref, v_ref,
         vmin = al * rel + vl
         feas2 = (vmax >= lo_i) & (vmin <= hi_i)
         cap_hit = rl >= max_run
-        force = t_abs == t_real
+        force = t_loc == t_real
         brk = ((rl >= 2) & ~feas2 | cap_hit | force) & ~is_first
 
         # Chosen line anchored at the break position (t-1): parameter-space
@@ -80,9 +108,13 @@ def _disjoint_kernel(y_ref, brk_ref, a_ref, v_ref,
         pl.store(v_ref, (pl.ds(j, 1), slice(None)), jnp.where(brk, v_out, 0.0))
 
         # --- extreme-line retightening over the run window ----------------
+        # Local positions may be negative for points carried in from an
+        # earlier launch; everything below is difference-based, and the
+        # ``p_r >= rs`` mask alone delimits the run (runs never span more
+        # than W points, so carried slots are never stale).
         tm1 = t - 1.0
         p_r = tm1 - jnp.mod(tm1 - slot_iota, float(W))       # (W, 1)
-        in_run = (p_r >= rs) & (p_r >= 0.0)                  # (W, BS)
+        in_run = p_r >= rs                                   # (W, BS)
         dtw = t - p_r
         dtw_safe = jnp.where(in_run, dtw, 1.0)
         yw = ring[...]                                       # (W, BS)
@@ -124,24 +156,41 @@ def _disjoint_kernel(y_ref, brk_ref, a_ref, v_ref,
         v_lo[...] = jnp.where(restart, 0.0, v_lo_n)
         a_hi[...] = jnp.where(restart, 0.0, a_hi_n)
         v_hi[...] = jnp.where(restart, 0.0, v_hi_n)
-        pl.store(ring, (pl.ds(jnp.mod(t_abs, W), 1), slice(None)), yt)
+        started[...] = jnp.ones_like(started[...])
+        pl.store(ring, (pl.ds(jnp.mod(t_loc, W), 1), slice(None)), yt)
         return 0
 
     jax.lax.fori_loop(0, bt, step, 0)
+
+    @pl.when(ti == pl.num_programs(1) - 1)
+    def _store():
+        cout[0:1, :] = started[...].astype(jnp.float32)
+        cout[1:2, :] = run_start[...]
+        cout[2:3, :] = runl[...].astype(jnp.float32)
+        cout[3:4, :] = y0s[...]
+        cout[4:5, :] = prev_y[...]
+        cout[5:6, :] = a_lo[...]
+        cout[6:7, :] = v_lo[...]
+        cout[7:8, :] = a_hi[...]
+        cout[8:9, :] = v_hi[...]
+        cout[_HEAD_ROWS:_HEAD_ROWS + W, :] = ring[...]
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "t_real", "max_run",
                                              "window", "block_s", "block_t"))
 def disjoint_pallas(y_t: jax.Array, *, eps: float, t_real: int,
                     max_run: int = 256, window: int | None = None,
-                    block_s: int = BLOCK_S, block_t: int = BLOCK_T):
-    W = window or max_run
-    assert W >= max_run
+                    block_s: int = BLOCK_S, block_t: int = BLOCK_T,
+                    carry: jax.Array | None = None):
+    W = check_window(max_run, window)
+    if carry is None:
+        carry = disjoint_init_carry(y_t.shape[1], W)
     kernel = functools.partial(_disjoint_kernel, eps=eps, bt=block_t,
                                t_real=t_real, max_run=max_run, window=W)
     f32 = jnp.float32
-    scratch = [((W, block_s), f32),        # ring
-               ((1, block_s), f32),        # run_start (as f32 t)
+    scratch = [((1, block_s), jnp.int32),  # started
+               ((W, block_s), f32),        # ring
+               ((1, block_s), f32),        # run_start (local f32 t)
                ((1, block_s), jnp.int32),  # run_len
                ((1, block_s), f32),        # y0 (run start value)
                ((1, block_s), f32),        # prev y
@@ -150,4 +199,4 @@ def disjoint_pallas(y_t: jax.Array, *, eps: float, t_real: int,
                ((1, block_s), f32),        # a_hi
                ((1, block_s), f32)]        # v_hi
     return launch_segmenter(kernel, y_t, block_s=block_s, block_t=block_t,
-                            scratch=scratch)
+                            scratch=scratch, carry=carry)

@@ -3,6 +3,12 @@
 The paper's hull-based validity check of the running least-squares line
 becomes an exact masked max-residual reduction over the run's VMEM ring
 window (runs are capped by the protocols, so the window is exact).
+
+Carry rows (linear_state_rows(W) = 9 + W, all f32; see the carry-state
+contract in kernels/common.py): 0 started, 1 run_start, 2 n, 3 mt, 4 my,
+5 stt, 6 sty, 7 va, 8 vb, then W ring rows.  Same local-time convention as
+the disjoint kernel: ``run_start`` may be negative on resume;
+``linear_shift_carry`` renumbers and rolls the ring after each launch.
 """
 
 from __future__ import annotations
@@ -13,35 +19,55 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.jax_pla import check_window
+
 from .common import BLOCK_S, BLOCK_T, launch_segmenter
 
+_HEAD_ROWS = 9
 
-def _linear_kernel(y_ref, brk_ref, a_ref, b_ref,
-                   ring, run_start, nn, mt, my, stt, sty, va, vb,
+
+def linear_state_rows(window: int) -> int:
+    return _HEAD_ROWS + window
+
+
+def linear_init_carry(sp: int, window: int) -> jax.Array:
+    return jnp.zeros((linear_state_rows(window), sp), jnp.float32)
+
+
+def linear_shift_carry(carry: jax.Array, m: int) -> jax.Array:
+    carry = carry.at[1:2].add(-float(m))
+    return carry.at[_HEAD_ROWS:].set(
+        jnp.roll(carry[_HEAD_ROWS:], -m, axis=0))
+
+
+def _linear_kernel(y_ref, cin, brk_ref, a_ref, b_ref,
+                   cout, started, ring, run_start, nn, mt, my, stt, sty,
+                   va, vb,
                    *, eps: float, bt: int, t_real: int, max_run: int,
                    window: int):
     ti = pl.program_id(1)
     W = window
 
     @pl.when(ti == 0)
-    def _init():
-        ring[...] = jnp.zeros_like(ring)
-        run_start[...] = jnp.zeros_like(run_start)
-        nn[...] = jnp.zeros_like(nn)
-        mt[...] = jnp.zeros_like(mt)
-        my[...] = jnp.zeros_like(my)
-        stt[...] = jnp.zeros_like(stt)
-        sty[...] = jnp.zeros_like(sty)
-        va[...] = jnp.zeros_like(va)
-        vb[...] = jnp.zeros_like(vb)
+    def _load():
+        started[...] = cin[0:1, :].astype(jnp.int32)
+        run_start[...] = cin[1:2, :]
+        nn[...] = cin[2:3, :]
+        mt[...] = cin[3:4, :]
+        my[...] = cin[4:5, :]
+        stt[...] = cin[5:6, :]
+        sty[...] = cin[6:7, :]
+        va[...] = cin[7:8, :]
+        vb[...] = cin[8:9, :]
+        ring[...] = cin[_HEAD_ROWS:_HEAD_ROWS + W, :]
 
     slot_iota = jax.lax.broadcasted_iota(jnp.float32, (W, 1), 0)
 
     def step(j, _):
-        t_abs = ti * bt + j
-        t = t_abs.astype(jnp.float32)
+        t_loc = ti * bt + j
+        t = t_loc.astype(jnp.float32)
         yt = pl.load(y_ref, (pl.ds(j, 1), slice(None)))  # (1, BS)
-        is_first = t_abs == 0
+        is_first = started[...] == 0
 
         rs, n0 = run_start[...], nn[...]
         m_t, m_y, s_tt, s_ty = mt[...], my[...], stt[...], sty[...]
@@ -60,9 +86,11 @@ def _linear_kernel(y_ref, brk_ref, a_ref, b_ref,
         b_fit = my1 - a_fit * mt1    # value at rel == 0 (run start)
 
         # Window revalidation: residuals of all run points + the new point.
+        # Local slot positions may be negative on resume; the run mask is
+        # purely relative (see the disjoint kernel).
         tm1 = t - 1.0
         p_r = tm1 - jnp.mod(tm1 - slot_iota, float(W))       # (W, 1)
-        in_run = (p_r >= rs) & (p_r >= 0.0)
+        in_run = p_r >= rs
         relw = p_r - rs
         yw = ring[...]
         res = jnp.abs(yw - (a_fit * relw + b_fit))
@@ -72,7 +100,7 @@ def _linear_kernel(y_ref, brk_ref, a_ref, b_ref,
         tol = eps * (1 + 1e-6) + 1e-12
         valid = max_res <= tol
         cap_hit = n0 >= max_run
-        force = t_abs == t_real
+        force = t_loc == t_real
         brk = (~valid | cap_hit | force) & ~is_first
 
         # (v_a, v_v): last valid fit as (slope, value at previous point) —
@@ -91,23 +119,40 @@ def _linear_kernel(y_ref, brk_ref, a_ref, b_ref,
         va[...] = jnp.where(restart, 0.0, a_fit)
         # value of the (new) valid fit at the *current* point t.
         vb[...] = jnp.where(restart, yt, a_fit * rel + b_fit)
-        pl.store(ring, (pl.ds(jnp.mod(t_abs, W), 1), slice(None)), yt)
+        started[...] = jnp.ones_like(started[...])
+        pl.store(ring, (pl.ds(jnp.mod(t_loc, W), 1), slice(None)), yt)
         return 0
 
     jax.lax.fori_loop(0, bt, step, 0)
+
+    @pl.when(ti == pl.num_programs(1) - 1)
+    def _store():
+        cout[0:1, :] = started[...].astype(jnp.float32)
+        cout[1:2, :] = run_start[...]
+        cout[2:3, :] = nn[...]
+        cout[3:4, :] = mt[...]
+        cout[4:5, :] = my[...]
+        cout[5:6, :] = stt[...]
+        cout[6:7, :] = sty[...]
+        cout[7:8, :] = va[...]
+        cout[8:9, :] = vb[...]
+        cout[_HEAD_ROWS:_HEAD_ROWS + W, :] = ring[...]
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "t_real", "max_run", "window",
                                              "block_s", "block_t"))
 def linear_pallas(y_t: jax.Array, *, eps: float, t_real: int,
                   max_run: int = 256, window: int | None = None,
-                  block_s: int = BLOCK_S, block_t: int = BLOCK_T):
-    W = window or max_run
-    assert W >= max_run
+                  block_s: int = BLOCK_S, block_t: int = BLOCK_T,
+                  carry: jax.Array | None = None):
+    W = check_window(max_run, window)
+    if carry is None:
+        carry = linear_init_carry(y_t.shape[1], W)
     kernel = functools.partial(_linear_kernel, eps=eps, bt=block_t,
                                t_real=t_real, max_run=max_run, window=W)
     f32 = jnp.float32
-    scratch = [((W, block_s), f32)] + \
+    scratch = [((1, block_s), jnp.int32),   # started
+               ((W, block_s), f32)] + \
               [((1, block_s), f32) for _ in range(8)]
     return launch_segmenter(kernel, y_t, block_s=block_s, block_t=block_t,
-                            scratch=scratch)
+                            scratch=scratch, carry=carry)

@@ -6,6 +6,14 @@ handle padding/transposition at the boundary, and return the same
 reference implementations in :mod:`repro.kernels.ref` — the kernels are
 drop-in replacements validated by ``tests/test_kernels.py``.
 
+:class:`StreamingSegmenter` is the chunked front-end to the same kernels:
+it owns host-side buffering to time-block multiples, the carry-state
+handoff between launches (including the ring-roll / run-start renumbering
+of the windowed methods — see the carry contract in
+:mod:`repro.kernels.common`), and the trailing-run flush, so a stream can
+be pushed in chunks of any size with output bit-identical to the one-shot
+offline call.
+
 On non-TPU backends the kernels execute in Pallas ``interpret`` mode
 (bit-accurate kernel-body semantics, Python speed) so the whole framework
 remains runnable and testable on CPU.
@@ -14,30 +22,31 @@ remains runnable and testable on CPU.
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.jax_pla import SegmentOutput
-from .angle import angle_pallas
-from .swing import swing_pallas
+from repro.core.jax_pla import SegmentOutput, check_window
+from .angle import angle_init_carry, angle_pallas, angle_shift_carry
+from .swing import swing_init_carry, swing_pallas, swing_shift_carry
 from .common import BLOCK_S, BLOCK_T, assemble_segments, pad_streams
-from .disjoint import disjoint_pallas
-from .linear import linear_pallas
+from .disjoint import (disjoint_init_carry, disjoint_pallas,
+                       disjoint_shift_carry)
+from .linear import linear_init_carry, linear_pallas, linear_shift_carry
 from .reconstruct import reconstruct_pallas
 
 __all__ = ["angle_segment_tpu", "swing_segment_tpu",
            "disjoint_segment_tpu", "linear_segment_tpu",
-           "reconstruct_tpu", "KERNEL_SEGMENTERS"]
+           "reconstruct_tpu", "KERNEL_SEGMENTERS", "StreamingSegmenter"]
 
 
 def _run(kernel_fn, y, eps, max_run, block_s, block_t, **kw):
     y = jnp.asarray(y, jnp.float32)
     yp, S, T = pad_streams(y, block_s, block_t)
-    ev_brk, ev_a, ev_b = kernel_fn(yp.T, eps=float(eps), t_real=T,
-                                   max_run=max_run, block_s=block_s,
-                                   block_t=block_t, **kw)
+    ev_brk, ev_a, ev_b, _ = kernel_fn(yp.T, eps=float(eps), t_real=T,
+                                      max_run=max_run, block_s=block_s,
+                                      block_t=block_t, **kw)
     return assemble_segments(ev_brk, ev_a, ev_b, S, T)
 
 
@@ -97,8 +106,8 @@ def reconstruct_tpu(seg: SegmentOutput, block_s: int = BLOCK_S,
     brk_p = pad(breaks.astype(jnp.int8), 1)  # padded tail: all breaks
     a_p = pad(a.astype(jnp.float32), 0.0)
     b_p = pad(b.astype(jnp.float32), 0.0)
-    out = reconstruct_pallas(brk_p.T, a_p.T, b_p.T,
-                             block_s=block_s, block_t=block_t)
+    out, _ = reconstruct_pallas(brk_p.T, a_p.T, b_p.T,
+                                block_s=block_s, block_t=block_t)
     return out.T[:S, :T]
 
 
@@ -108,3 +117,152 @@ KERNEL_SEGMENTERS = {
     "disjoint": disjoint_segment_tpu,
     "linear": linear_segment_tpu,
 }
+
+
+# ---------------------------------------------------------------------------
+# Chunked streaming front-end
+# ---------------------------------------------------------------------------
+
+# method -> (kernel fn, init_carry(Sp, W), shift_carry(carry, m), windowed)
+_STREAM_KERNELS = {
+    "angle": (angle_pallas, lambda sp, w: angle_init_carry(sp),
+              angle_shift_carry, False),
+    "swing": (swing_pallas, lambda sp, w: swing_init_carry(sp),
+              swing_shift_carry, False),
+    "disjoint": (disjoint_pallas, disjoint_init_carry,
+                 disjoint_shift_carry, True),
+    "linear": (linear_pallas, linear_init_carry,
+               linear_shift_carry, True),
+}
+
+
+class StreamingSegmenter:
+    """Push ``(S, n)`` chunks through a Pallas segmenter kernel.
+
+    The class owns everything chunking needs around the raw kernel: it
+    buffers incoming columns until a whole number of ``block_t`` time
+    blocks is available (the kernel must not consume padding mid-stream),
+    launches with the packed carry state threaded in and out, renumbers
+    position-dependent carry rows between launches, and finally pads +
+    force-breaks the remainder so the trailing run flushes through the
+    regular event path.
+
+    ``push`` returns the newly finalized event columns as a
+    :class:`SegmentOutput` (possibly width-0 while columns are buffering);
+    ``finish`` returns the last columns.  Concatenating every ``push``
+    output plus the ``finish`` output is bit-identical to the one-shot
+    ``KERNEL_SEGMENTERS[method](y, eps, ...)`` call on the whole stream.
+    """
+
+    def __init__(self, method: str, n_streams: int, eps: float, *,
+                 max_run: int = 256, window: Optional[int] = None,
+                 block_s: int = BLOCK_S, block_t: int = BLOCK_T):
+        if method not in _STREAM_KERNELS:
+            raise ValueError(f"unknown method {method!r}; "
+                             f"have {sorted(_STREAM_KERNELS)}")
+        kernel_fn, init_carry, shift_carry, windowed = _STREAM_KERNELS[method]
+        self.method = method
+        self.n_streams = n_streams
+        self.eps = float(eps)
+        self.max_run = max_run
+        self.block_s = block_s
+        self.block_t = block_t
+        self._sp = (n_streams + block_s - 1) // block_s * block_s
+        self._kernel_fn = kernel_fn
+        self._shift = shift_carry
+        self._kw = {}
+        self.window = None
+        if windowed:
+            self.window = check_window(max_run, window)
+            self._kw["window"] = self.window
+        elif window is not None:
+            raise ValueError(f"method {method!r} takes no window")
+        self._carry = init_carry(self._sp, self.window)
+        self._pend: List[jax.Array] = []
+        self._navail = 0      # buffered, not yet fed to the kernel
+        self._t = 0           # columns consumed by the kernel
+        self._finished = False
+
+    @property
+    def pushed(self) -> int:
+        """Total stream positions pushed so far."""
+        return self._t + self._navail
+
+    def _empty(self) -> SegmentOutput:
+        S = self.n_streams
+        return SegmentOutput(jnp.zeros((S, 0), bool),
+                             jnp.zeros((S, 0), jnp.float32),
+                             jnp.zeros((S, 0), jnp.float32))
+
+    def _launch(self, feed: jax.Array, t_real: int):
+        """Run one kernel launch on (S, m) columns; returns (Tp, Sp) events."""
+        m = feed.shape[1]
+        if feed.shape[0] != self._sp:
+            feed = jnp.concatenate(
+                [feed, jnp.zeros((self._sp - feed.shape[0], m),
+                                 jnp.float32)], axis=0)
+        ev_brk, ev_a, ev_b, carry_out = self._kernel_fn(
+            feed.T, eps=self.eps, t_real=t_real, max_run=self.max_run,
+            block_s=self.block_s, block_t=self.block_t, carry=self._carry,
+            **self._kw)
+        return ev_brk, ev_a, ev_b, carry_out
+
+    def _events_to_out(self, ev_brk, ev_a, ev_b, rows: int) -> SegmentOutput:
+        """Event rows [0, rows) -> finalized columns; an event at local row
+        j finalizes absolute position t0 + j - 1, so the stream's first
+        ever row (position -1) is dropped."""
+        lo = 1 if self._t == 0 else 0
+        S = self.n_streams
+        return SegmentOutput(ev_brk[lo:rows, :S].T.astype(bool),
+                             ev_a[lo:rows, :S].T,
+                             ev_b[lo:rows, :S].T)
+
+    def push(self, y_chunk: jax.Array) -> SegmentOutput:
+        """Feed ``(S, n)`` columns; returns newly finalized event columns."""
+        if self._finished:
+            raise RuntimeError("push after finish()")
+        y = jnp.asarray(y_chunk, jnp.float32)
+        if y.ndim != 2 or y.shape[0] != self.n_streams:
+            raise ValueError(f"chunk must be ({self.n_streams}, n); "
+                             f"got {y.shape}")
+        if y.shape[1]:
+            self._pend.append(y)
+            self._navail += y.shape[1]
+        if self._navail < self.block_t:
+            return self._empty()
+        m = self._navail // self.block_t * self.block_t
+        buf = self._pend[0] if len(self._pend) == 1 \
+            else jnp.concatenate(self._pend, axis=1)
+        feed, rest = buf[:, :m], buf[:, m:]
+        self._pend = [rest] if rest.shape[1] else []
+        self._navail -= m
+        ev_brk, ev_a, ev_b, carry_out = self._launch(feed, t_real=-1)
+        out = self._events_to_out(ev_brk, ev_a, ev_b, m)
+        self._carry = self._shift(carry_out, m)
+        self._t += m
+        return out
+
+    def finish(self) -> SegmentOutput:
+        """Flush the trailing run; returns the final event columns."""
+        if self._finished:
+            raise RuntimeError("finish() called twice")
+        self._finished = True
+        r = self._navail
+        if self._t == 0 and r == 0:
+            return self._empty()
+        # Final launch: r real columns + padding (repeat of the last real
+        # value) to one time block; the forced break at local row r closes
+        # the trailing run, so event rows 0..r finalize positions up to T-1.
+        if r:
+            buf = self._pend[0] if len(self._pend) == 1 \
+                else jnp.concatenate(self._pend, axis=1)
+            pad = jnp.repeat(buf[:, -1:], self.block_t - r, axis=1)
+            feed = jnp.concatenate([buf, pad], axis=1)
+        else:
+            feed = jnp.zeros((self.n_streams, self.block_t), jnp.float32)
+        self._pend = []
+        self._navail = 0
+        ev_brk, ev_a, ev_b, _ = self._launch(feed, t_real=r)
+        out = self._events_to_out(ev_brk, ev_a, ev_b, r + 1)
+        self._t += r
+        return out

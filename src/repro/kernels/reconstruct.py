@@ -3,7 +3,14 @@
 Reverse time walk: each point takes the line of the segment ending at the
 next break at-or-after it.  The grid's sequential dimension maps to time
 blocks in *reverse* order via the BlockSpec index map; the (a, b) carry
-lives in VMEM scratch.
+lives in VMEM scratch and is resumed through the packed carry operand.
+
+Carry rows (RECON_STATE_ROWS = 3, all f32; see kernels/common.py):
+0 ca (slope), 1 cv (value at anchor), 2 cd (distance to anchor).  The
+carry propagates *backward* in time, so a chunked reconstruction pushes
+suffix chunks first: launch the latest (Tp-multiple) slab with a zero
+carry, then hand its carry-out to the preceding slab.  ``cd`` is a
+distance (frame-free) — no host-side shift is needed between launches.
 """
 
 from __future__ import annotations
@@ -16,16 +23,22 @@ from jax.experimental import pallas as pl
 
 from .common import BLOCK_S, BLOCK_T, launch_segmenter
 
+RECON_STATE_ROWS = 3
 
-def _recon_kernel(brk_ref, a_ref, v_ref, out_ref, ca, cv, cd,
+
+def recon_init_carry(sp: int) -> jax.Array:
+    return jnp.zeros((RECON_STATE_ROWS, sp), jnp.float32)
+
+
+def _recon_kernel(brk_ref, a_ref, v_ref, cin, out_ref, cout, ca, cv, cd,
                   *, bt: int, nt: int):
     ti = pl.program_id(1)  # 0 .. nt-1, mapped to reversed time blocks
 
     @pl.when(ti == 0)
-    def _init():
-        ca[...] = jnp.zeros_like(ca)
-        cv[...] = jnp.zeros_like(cv)
-        cd[...] = jnp.zeros_like(cd)
+    def _load():
+        ca[...] = cin[0:1, :]
+        cv[...] = cin[1:2, :]
+        cd[...] = cin[2:3, :]
 
     def step(k, _):
         j = bt - 1 - k  # walk rows backwards
@@ -46,18 +59,33 @@ def _recon_kernel(brk_ref, a_ref, v_ref, out_ref, ca, cv, cd,
 
     jax.lax.fori_loop(0, bt, step, 0)
 
+    @pl.when(ti == pl.num_programs(1) - 1)
+    def _store():
+        cout[0:1, :] = ca[...]
+        cout[1:2, :] = cv[...]
+        cout[2:3, :] = cd[...]
+
 
 @functools.partial(jax.jit, static_argnames=("block_s", "block_t"))
 def reconstruct_pallas(brk_t: jax.Array, a_t: jax.Array, v_t: jax.Array,
-                       block_s: int = BLOCK_S, block_t: int = BLOCK_T):
-    """Time-major (Tp, Sp) breaks/a/v -> (Tp, Sp) reconstructed values."""
+                       block_s: int = BLOCK_S, block_t: int = BLOCK_T,
+                       carry: jax.Array | None = None):
+    """Time-major (Tp, Sp) breaks/a/v -> (Tp, Sp) reconstructed values.
+
+    Returns ``(out, carry_out)``; pass the carry-out of a later-in-time
+    slab as ``carry`` to reconstruct the preceding slab (reverse-chunked
+    streaming).  ``carry=None`` starts from the stream tail.
+    """
     Tp, Sp = a_t.shape
+    if carry is None:
+        carry = recon_init_carry(Sp)
     nt = Tp // block_t
     kernel = functools.partial(_recon_kernel, bt=block_t, nt=nt)
     scratch = [((1, block_s), jnp.float32)] * 3
     # Sequential dim walks time blocks in reverse (reverse_time index map).
-    out, = launch_segmenter(kernel, (brk_t, a_t, v_t),
-                            block_s=block_s, block_t=block_t,
-                            out_dtypes=(a_t.dtype,), scratch=scratch,
-                            reverse_time=True)
-    return out
+    out, carry_out = launch_segmenter(kernel, (brk_t, a_t, v_t),
+                                      block_s=block_s, block_t=block_t,
+                                      out_dtypes=(a_t.dtype,),
+                                      scratch=scratch,
+                                      reverse_time=True, carry=carry)
+    return out, carry_out

@@ -1,0 +1,97 @@
+"""Property test: chunked == offline bit-equality under *random* splits.
+
+Covers all four Pallas kernel segmenters and the jnp reference segmenters;
+hypothesis draws arbitrary chunk partitions (sizes down to 1, non-divisors
+of the time block, final partial chunks arise naturally).  Skips when
+hypothesis is absent (dev dep; requirements-dev.txt / CI install it) — the
+deterministic split coverage in tests/test_streaming.py always runs.
+
+The small helpers below intentionally mirror tests/test_streaming.py
+rather than importing from it: this module must stay importable on its
+own under ``importorskip`` regardless of pytest's import mode (test
+modules are not reliably importable from each other without a package).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import jax_pla  # noqa: E402
+from repro.core.jax_pla import (STREAMING_METHODS, flush,  # noqa: E402
+                                init_state, step_chunk)
+from repro.kernels.ops import (KERNEL_SEGMENTERS,  # noqa: E402
+                               StreamingSegmenter)
+
+REF_FNS = {"angle": jax_pla.angle_segment, "swing": jax_pla.swing_segment,
+           "disjoint": jax_pla.disjoint_segment,
+           "linear": jax_pla.linear_segment}
+KBLOCK_T = 32  # small tiles keep interpret mode fast
+
+
+def _make(seed, S, T):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(np.cumsum(rng.normal(0, 0.5, (S, T)), axis=1),
+                       jnp.float32)
+
+
+def _assert_bit_equal(chunks, offline, label):
+    brk = np.concatenate([np.asarray(o.breaks) for o in chunks], axis=1)
+    a = np.concatenate([np.asarray(o.a) for o in chunks], axis=1)
+    v = np.concatenate([np.asarray(o.v) for o in chunks], axis=1)
+    assert brk.shape == offline.breaks.shape, label
+    np.testing.assert_array_equal(brk, np.asarray(offline.breaks),
+                                  err_msg=label)
+    np.testing.assert_array_equal(a, np.asarray(offline.a), err_msg=label)
+    np.testing.assert_array_equal(v, np.asarray(offline.v), err_msg=label)
+
+
+@st.composite
+def _splits(draw, t_min=2, t_max=140):
+    T = draw(st.integers(t_min, t_max))
+    widths = []
+    left = T
+    while left:
+        w = draw(st.integers(1, left))
+        widths.append(w)
+        left -= w
+    return T, tuple(widths)
+
+
+@settings(max_examples=10, deadline=None)
+@given(data=st.data(), method=st.sampled_from(sorted(STREAMING_METHODS)),
+       seed=st.integers(0, 2**16))
+def test_property_core_chunked_equals_offline(data, method, seed):
+    T, splits = data.draw(_splits())
+    y = _make(seed, 3, T)
+    offline = REF_FNS[method](y, 1.0, max_run=24)
+    state = init_state(method, 3, 1.0, max_run=24)
+    outs = []
+    pos = 0
+    for w in splits:
+        state, out = step_chunk(state, y[:, pos:pos + w])
+        outs.append(out)
+        pos += w
+    state, out_f = flush(state)
+    outs.append(out_f)
+    _assert_bit_equal(outs, offline, f"{method}/T={T}/splits={splits}")
+
+
+@settings(max_examples=6, deadline=None)
+@given(data=st.data(), method=st.sampled_from(sorted(KERNEL_SEGMENTERS)),
+       seed=st.integers(0, 2**16))
+def test_property_kernel_chunked_equals_offline(data, method, seed):
+    T, splits = data.draw(_splits(t_max=100))
+    y = _make(seed, 3, T)
+    offline = KERNEL_SEGMENTERS[method](y, 1.0, max_run=24,
+                                        block_t=KBLOCK_T)
+    ss = StreamingSegmenter(method, 3, 1.0, max_run=24, block_t=KBLOCK_T)
+    pos = 0
+    outs = []
+    for w in splits:
+        outs.append(ss.push(y[:, pos:pos + w]))
+        pos += w
+    outs.append(ss.finish())
+    _assert_bit_equal(outs, offline, f"{method}/T={T}/splits={splits}")
