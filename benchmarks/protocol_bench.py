@@ -1,0 +1,122 @@
+"""Protocol-engine benchmarks: batched §5 encode + §4.2 metrics throughput.
+
+Times the vectorized protocol layer of :mod:`repro.core.protocol_engine`
+on a stream-fleet-sized batch (128 streams x 64k points by default): the
+single-jit device metrics (``protocol_point_metrics`` — ratio / latency /
+error for every point of every stream), the per-stream wire byte totals,
+and the host-side vectorized wire packing (``encode_batch``).  Results
+land in the top-level ``BENCH_protocols.json`` so the perf trajectory is
+tracked across PRs.
+
+The acceptance bar (ROADMAP "Protocol & metrics engine"): the
+protocol+metrics evaluation of the full batch runs as array programs with
+no per-record Python on the metrics path, sustaining >= 10M points/s on
+the CI CPU runner (TPU is strictly faster; the segmentation scan itself
+is tracked separately in ``BENCH_streaming.json``).
+
+``BENCH_SMOKE=1`` shrinks the batch for CI smoke runs.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List, Tuple
+
+import jax
+import numpy as np
+
+from .framework_bench import _time as _time_us
+from repro.core import jax_pla
+from repro.core.protocol_engine import (ENGINE_PROTOCOLS, encode_batch,
+                                        protocol_nbytes,
+                                        protocol_point_metrics)
+from repro.core.protocols import PROTOCOL_CAPS
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_protocols.json")
+
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+S, T = (32, 4096) if SMOKE else (128, 65536)
+EPS = 1.0
+ITERS = 3
+METHOD = "angle"  # cheapest segmenter; the protocol layer is what's timed
+
+
+def _stream_batch(seed=0):
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.normal(0, 0.5, (S, T)), axis=1).astype(np.float32)
+
+
+def _time(fn) -> float:
+    """Seconds per call via the shared benchmark timer (warmup + ITERS)."""
+    return _time_us(fn, iters=ITERS) / 1e6
+
+
+def protocol_bench() -> List[Tuple[str, float, str]]:
+    """CSV rows for benchmarks.run + the BENCH_protocols.json artifact."""
+    y = jax.numpy.asarray(_stream_batch())
+    points = S * T
+    report = {
+        "config": {"streams": S, "t_len": T, "eps": EPS, "method": METHOD,
+                   "iters": ITERS, "smoke": SMOKE,
+                   "backend": jax.default_backend()},
+        "segmentation": {}, "metrics": {}, "encode": {},
+    }
+    rows: List[Tuple[str, float, str]] = []
+
+    segs = {}
+    for proto in ENGINE_PROTOCOLS:
+        cap = PROTOCOL_CAPS[proto] or 256
+        if cap not in segs:
+            fn = jax_pla.angle_segment
+            sec = _time(lambda: fn(y, EPS, max_run=cap))
+            segs[cap] = (fn(y, EPS, max_run=cap), sec)
+            report["segmentation"][f"max_run={cap}"] = {
+                "seconds": sec, "points_per_s": points / sec}
+
+    y_np = np.asarray(y)
+    for proto in ENGINE_PROTOCOLS:
+        cap = PROTOCOL_CAPS[proto] or 256
+        seg, _ = segs[cap]
+        met_s = _time(lambda: protocol_point_metrics(seg, y, proto))
+        nb, _ = protocol_nbytes(seg, proto)
+        wire = int(np.asarray(nb).sum())
+        report["metrics"][proto] = {
+            "seconds": met_s,
+            "points_per_s": points / met_s,
+            "us_per_point": met_s / points * 1e6,
+        }
+        rows.append((f"protocol/{proto}/metrics", met_s * 1e6,
+                     f"{points / met_s / 1e6:.1f}Mpts/s"))
+
+        t0 = time.perf_counter()
+        blobs = encode_batch(seg, y_np, proto)
+        enc_s = time.perf_counter() - t0
+        report["encode"][proto] = {
+            "seconds": enc_s,
+            "points_per_s": points / enc_s,
+            "bytes_per_s": wire / enc_s,
+            "wire_bytes": wire,
+            "overall_ratio": wire / (8.0 * points),
+        }
+        rows.append((f"protocol/{proto}/encode", enc_s * 1e6,
+                     f"{points / enc_s / 1e6:.1f}Mpts/s "
+                     f"{wire / enc_s / 1e6:.0f}MB/s"))
+        del blobs
+
+    report["metrics_ge_10Mpts_s"] = {
+        p: report["metrics"][p]["points_per_s"] >= 10e6
+        for p in ENGINE_PROTOCOLS}
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    # Run as a module: PYTHONPATH=src python -m benchmarks.protocol_bench
+    # (BENCH_SMOKE=1 shrinks the sweep).
+    for name, us, derived in protocol_bench():
+        print(f"{name},{us:.1f},{derived}")
+    print(f"[wrote {os.path.abspath(OUT_PATH)}]")

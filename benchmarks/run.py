@@ -9,7 +9,7 @@ import time
 
 def main() -> None:
     t0 = time.time()
-    from . import figures, framework_bench, streaming_bench
+    from . import figures, framework_bench, protocol_bench, streaming_bench
 
     csv_rows = []
 
@@ -30,6 +30,7 @@ def main() -> None:
 
     csv_rows.extend(framework_bench.kernel_throughput())
     csv_rows.extend(streaming_bench.streaming_bench())  # -> BENCH_streaming.json
+    csv_rows.extend(protocol_bench.protocol_bench())    # -> BENCH_protocols.json
     csv_rows.extend(framework_bench.grad_compression_bench())
     csv_rows.extend(framework_bench.kv_cache_bench())
     csv_rows.extend(framework_bench.adaptive_eps_bench())

@@ -28,12 +28,15 @@ from repro.core import jax_pla
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_streaming.json")
 
-S, T = 256, 8192
-CHUNKS = (32, 128, 512)
+# BENCH_SMOKE=1 shrinks the sweep for CI smoke runs (same structure,
+# smaller batch / fewer chunk sizes — the JSON is still comparable).
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+S, T = (64, 1024) if SMOKE else (256, 8192)
+CHUNKS = (128,) if SMOKE else (32, 128, 512)
 METHODS = ("angle", "swing", "disjoint", "linear")
 MAX_RUN = 256
 EPS = 1.0
-ITERS = 3
+ITERS = 2 if SMOKE else 3
 
 
 def _stream_batch(seed=0):

@@ -214,19 +214,30 @@ def block_nbytes(rec: PLARecords, block: int, cfg: PLAKVConfig) -> int:
     return int(jnp.where(rec.overflow, raw_row, per_row).sum())
 
 
-def kv_compression_stats(k: jax.Array, v: jax.Array, cfg: PLAKVConfig):
-    """Bytes + error report for one block (benchmarks/examples)."""
-    blk = compress_kv_block(k, v, cfg)
-    kd, vd = decompress_kv_block(blk, cfg)
-    raw = (k.size + v.size) * jnp.dtype(jnp.bfloat16).itemsize
-    comp = block_nbytes(blk.k_rec, cfg.block, cfg) + \
-        block_nbytes(blk.v_rec, cfg.block, cfg)
-    return {
+def compressed_block_stats(blk: CompressedKVBlock, cfg: PLAKVConfig,
+                           k: Optional[jax.Array] = None,
+                           v: Optional[jax.Array] = None):
+    """Bytes (+ errors, when the originals are given) for one compressed
+    block — works for blocks from :func:`compress_kv_block` and from
+    :class:`StreamingKVCompressor` alike (serving-side reporting)."""
+    B, block, KH, D = blk.shape
+    raw = 2 * (B * block * KH * D) * jnp.dtype(jnp.bfloat16).itemsize
+    comp = block_nbytes(blk.k_rec, block, cfg) + \
+        block_nbytes(blk.v_rec, block, cfg)
+    st = {
         "raw_bytes": int(raw),
         "compressed_bytes": int(comp),
         "ratio": float(comp / raw),
-        "k_max_err": float(jnp.abs(kd - k.astype(jnp.float32)).max()),
-        "v_max_err": float(jnp.abs(vd - v.astype(jnp.float32)).max()),
         "k_overflow_rows": int(blk.k_rec.overflow.sum()),
         "v_overflow_rows": int(blk.v_rec.overflow.sum()),
     }
+    if k is not None and v is not None:
+        kd, vd = decompress_kv_block(blk, cfg)
+        st["k_max_err"] = float(jnp.abs(kd - k.astype(jnp.float32)).max())
+        st["v_max_err"] = float(jnp.abs(vd - v.astype(jnp.float32)).max())
+    return st
+
+
+def kv_compression_stats(k: jax.Array, v: jax.Array, cfg: PLAKVConfig):
+    """Bytes + error report for one block (benchmarks/examples)."""
+    return compressed_block_stats(compress_kv_block(k, v, cfg), cfg, k, v)

@@ -6,49 +6,28 @@ exactly the paper's setting — compressed with the *Linear* method (lowest
 average error) under the *SingleStreamV* protocol (lowest latency, the
 paper's Table 3 recommendation for scenario (1)).
 
-By default the segmentation is driven off the carry-state streaming engine
-(:mod:`repro.core.jax_pla`): appended values are pushed through
-``step_chunk`` in small batches, so the per-flush work is O(new points)
-with bounded latency instead of re-running the whole window's method at
-send time.  The window's fitted segments are translated to the paper's
-protocol records at flush (steps must be uniformly spaced for the
-index-grid translation; irregular channels transparently fall back to the
-exact sequential methods, as does ``streaming=False``).
+By default the whole path is incremental: appended values are pushed
+through the carry-state segmentation engine
+(:func:`repro.core.jax_pla.step_chunk`) in small batches, and the
+finalized events flow straight into a
+:class:`repro.core.protocol_engine.ProtocolEmitter`, which packs
+**wire-ready SingleStreamV bytes as segments close** — the flush only
+closes the trailing run and ships what is already encoded, so per-flush
+work is O(new points) and the blob is bit-identical to the offline
+codec.  Channels need uniformly spaced steps for the index-grid engine;
+irregular channels transparently fall back to the exact sequential
+methods + record codec (as does ``streaming=False``).
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core import METHODS, PROTOCOLS, PROTOCOL_CAPS
-from repro.core.protocols import encode_singlestreamv
-from repro.core.types import Line, MethodOutput, Segment
-
-
-def _segments_from_events(brk: np.ndarray, a: np.ndarray, v: np.ndarray,
-                          ts: np.ndarray) -> MethodOutput:
-    """Translate anchored index-grid events to t-space MethodOutput.
-
-    Event k ends a segment at index ``e`` with the anchored line
-    ``y(i) = v + a * (i - e)``; on a uniform grid ``t = t0 + d*i`` that is
-    the line ``A*t + B`` with ``A = a/d``, ``B = v - a*e - A*t0``.
-    """
-    n = len(ts)
-    d = float(ts[1] - ts[0]) if n > 1 else 1.0
-    t0 = float(ts[0])
-    ends = np.flatnonzero(brk)
-    segments: List[Segment] = []
-    i0 = 0
-    for e in ends:
-        e = int(e)
-        A = float(a[e]) / d
-        B = float(v[e]) - float(a[e]) * e - A * t0
-        segments.append(Segment(i0=i0, i1=e + 1, line=Line(A, B),
-                                finalized_at=min(e + 1, n - 1)))
-        i0 = e + 1
-    return MethodOutput(segments=segments, knots=[])
+from repro.core.protocol_engine import ProtocolEmitter
+from repro.core.protocols import decode_singlestreamv, encode_singlestreamv
 
 
 class TelemetryCompressor:
@@ -57,8 +36,10 @@ class TelemetryCompressor:
     Flush semantics mirror a periodic sender: every ``flush_every`` appended
     steps the buffered window is compressed and (simulated) transmitted.
     With ``streaming=True`` (default) each channel owns a
-    :class:`repro.core.jax_pla.SegmenterState` that is advanced every
-    ``step_every`` appends, so the flush only closes the trailing run.
+    :class:`repro.core.jax_pla.SegmenterState` plus a
+    :class:`repro.core.protocol_engine.ProtocolEmitter`, both advanced
+    every ``step_every`` appends, so wire bytes accumulate incrementally
+    and the flush only closes the trailing run.
     """
 
     def __init__(self, eps: float = 1e-3, method: str = "linear",
@@ -78,9 +59,10 @@ class TelemetryCompressor:
         self.buffers: Dict[str, List[float]] = {}
         self.steps: Dict[str, List[int]] = {}
         self._states: Dict[str, object] = {}
+        self._emitters: Dict[str, ProtocolEmitter] = {}
+        self._wire: Dict[str, bytearray] = {}
         self._stepped: Dict[str, int] = {}
-        self._events: Dict[str, List[Tuple[np.ndarray, np.ndarray,
-                                           np.ndarray]]] = {}
+        self._irregular: Dict[str, bool] = {}
         self.sent_bytes = 0
         self.raw_bytes = 0
         self.max_err_seen = 0.0
@@ -89,8 +71,16 @@ class TelemetryCompressor:
         out = []
         for name, val in metrics.items():
             self.buffers.setdefault(name, []).append(float(val))
-            self.steps.setdefault(name, []).append(step)
-            if self.streaming:
+            steps = self.steps.setdefault(name, [])
+            steps.append(step)
+            if self.streaming and not self._irregular.get(name):
+                if len(steps) >= 3:
+                    d = steps[1] - steps[0]
+                    if d <= 0 or steps[-1] - steps[-2] != d:
+                        self._drop_streaming(name)
+                elif len(steps) == 2 and steps[1] - steps[0] <= 0:
+                    self._drop_streaming(name)
+            if self.streaming and not self._irregular.get(name):
                 pend = len(self.buffers[name]) - self._stepped.get(name, 0)
                 if pend >= self.step_every:
                     self._advance(name)
@@ -100,9 +90,34 @@ class TelemetryCompressor:
 
     # ---- streaming engine plumbing ---------------------------------------
 
+    def _drop_streaming(self, name: str) -> None:
+        """Non-uniform grid: abandon the incremental state for this window
+        (the exact sequential fallback recompresses it at flush)."""
+        self._irregular[name] = True
+        self._states.pop(name, None)
+        self._emitters.pop(name, None)
+        self._wire.pop(name, None)
+        self._stepped[name] = 0
+
+    def _emitter(self, name: str) -> ProtocolEmitter:
+        em = self._emitters.get(name)
+        if em is None:
+            steps = self.steps[name]
+            d = float(steps[1] - steps[0]) if len(steps) > 1 else 1.0
+            em = ProtocolEmitter("singlestreamv", 1, t0=float(steps[0]),
+                                 dt=d)
+            self._emitters[name] = em
+            self._wire[name] = bytearray()
+        return em
+
     def _advance(self, name: str) -> None:
-        """Push not-yet-segmented values through the channel's carry state."""
+        """Push not-yet-segmented values through the channel's carry state
+        and encode the newly finalized segments onto the wire."""
         from repro.core import jax_pla
+        if len(self.buffers[name]) < 2:
+            # Hold back until the grid spacing is known (the emitter needs
+            # dt); a 1-point window falls back to the batch path at flush.
+            return
         done = self._stepped.get(name, 0)
         vals = self.buffers[name][done:]
         if not vals:
@@ -112,59 +127,49 @@ class TelemetryCompressor:
             st = jax_pla.init_state(
                 self.method, 1, self.eps,
                 max_run=PROTOCOL_CAPS["singlestreamv"])
-        st, out = jax_pla.step_chunk(st, np.asarray(vals, np.float32)[None])
+        y = np.asarray(vals, np.float32)[None]
+        st, out = jax_pla.step_chunk(st, y)
         self._states[name] = st
         self._stepped[name] = len(self.buffers[name])
-        if out.breaks.shape[1]:
-            self._events.setdefault(name, []).append(
-                (np.asarray(out.breaks[0]), np.asarray(out.a[0]),
-                 np.asarray(out.v[0])))
+        em = self._emitter(name)
+        self._wire[name] += em.step_chunk(
+            out, np.asarray(vals, np.float64)[None])[0]
 
-    def _streaming_records(self, name: str, ts: np.ndarray, ys: np.ndarray):
-        """Close the channel's run and emit protocol records, or None when
-        the channel needs the irregular-timestamps fallback."""
+    def _streaming_blob(self, name: str) -> Optional[bytes]:
+        """Close the channel's run and return the window's wire bytes."""
         from repro.core import jax_pla
-        if len(ts) > 1:
-            dt = np.diff(ts)
-            if not np.allclose(dt, dt[0], rtol=1e-9, atol=0.0) or dt[0] <= 0:
-                # Index-grid translation needs a uniform grid; drop the
-                # carry (the window restarts either way) and fall back.
-                self._states.pop(name, None)
-                self._events.pop(name, None)
-                return None
+        if self._irregular.pop(name, False):
+            return None
         self._advance(name)
-        st, out_f = jax_pla.flush(self._states.pop(name))
-        ev = self._events.pop(name, [])
-        ev.append((np.asarray(out_f.breaks[0]), np.asarray(out_f.a[0]),
-                   np.asarray(out_f.v[0])))
-        brk = np.concatenate([e[0] for e in ev])
-        a = np.concatenate([e[1] for e in ev])
-        v = np.concatenate([e[2] for e in ev])
-        mo = _segments_from_events(brk, a, v, ts)
-        return PROTOCOLS["singlestreamv"](mo, ts, ys)
+        st = self._states.pop(name, None)
+        if st is None:  # nothing ever advanced (empty window)
+            return None
+        em = self._emitters.pop(name)
+        wire = self._wire.pop(name)
+        st, out_f = jax_pla.flush(st)
+        wire += em.step_chunk(out_f)[0]
+        wire += em.flush()[0]
+        return bytes(wire)
 
     # ---- flush -----------------------------------------------------------
 
     def _flush_channel(self, name: str) -> bytes:
         ys = np.asarray(self.buffers[name])
         ts = np.asarray(self.steps[name], dtype=float)
-        recs = self._streaming_records(name, ts, ys) if self.streaming \
-            else None
+        blob = self._streaming_blob(name) if self.streaming else None
         self.buffers[name] = []
         self.steps[name] = []
         self._stepped[name] = 0
-        if recs is None:
+        if blob is None:
             cap = PROTOCOL_CAPS["singlestreamv"]
             out = METHODS[self.method](ts, ys, self.eps, max_run=cap)
-            recs = PROTOCOLS["singlestreamv"](out, ts, ys)
-        blob = encode_singlestreamv(recs)
+            blob = encode_singlestreamv(PROTOCOLS["singlestreamv"](
+                out, ts, ys))
         self.sent_bytes += len(blob)
         self.raw_bytes += 8 * len(ys)
-        # Track the worst reconstruction error actually incurred.
-        recon = np.full(len(ys), np.nan)
-        for r in recs:
-            for kk, i in enumerate(r.covers):
-                recon[i] = r.values[kk]
+        # Track the worst reconstruction error actually incurred, measured
+        # off the wire (decode of the very bytes that were "sent").
+        recon = np.asarray(decode_singlestreamv(blob, ts))
         self.max_err_seen = max(self.max_err_seen,
                                 float(np.abs(recon - ys).max()))
         return blob

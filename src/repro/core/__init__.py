@@ -12,8 +12,14 @@ from .methods import (METHODS, run_angle, run_continuous, run_disjoint,
 from .protocols import (PROTOCOL_CAPS, PROTOCOLS, protocol_implicit,
                         protocol_singlestream, protocol_singlestreamv,
                         protocol_twostreams)
-from .metrics import PointMetrics, overall_compression, point_metrics
-from .evaluate import COMBINATIONS, EvalResult, evaluate, evaluate_all
+from .metrics import (BatchedPointMetrics, PointMetrics, batched_summary,
+                      overall_compression, point_metrics)
+from .evaluate import (BATCHED_SEGMENTERS, BatchedEvalResult, COMBINATIONS,
+                       EvalResult, evaluate, evaluate_all, evaluate_batched)
+from .protocol_engine import (ENGINE_PROTOCOLS, ProtocolEmitter,
+                              batched_point_metrics, encode_batch,
+                              protocol_nbytes, protocol_point_metrics,
+                              to_method_outputs)
 from .adaptive import (AdaptiveEps, StreamingAdaptiveEps,
                        compare_fixed_vs_adaptive)
 
@@ -22,7 +28,12 @@ __all__ = [
     "Segment", "METHODS", "run_angle", "run_continuous", "run_disjoint",
     "run_linear", "run_mixed", "run_swing", "PROTOCOL_CAPS", "PROTOCOLS",
     "protocol_implicit", "protocol_singlestream", "protocol_singlestreamv",
-    "protocol_twostreams", "PointMetrics", "overall_compression",
-    "point_metrics", "COMBINATIONS", "EvalResult", "evaluate", "evaluate_all",
+    "protocol_twostreams", "PointMetrics", "BatchedPointMetrics",
+    "batched_summary", "overall_compression", "point_metrics",
+    "COMBINATIONS", "EvalResult", "evaluate", "evaluate_all",
+    "BATCHED_SEGMENTERS", "BatchedEvalResult", "evaluate_batched",
+    "ENGINE_PROTOCOLS", "ProtocolEmitter", "batched_point_metrics",
+    "encode_batch", "protocol_nbytes", "protocol_point_metrics",
+    "to_method_outputs",
     "AdaptiveEps", "StreamingAdaptiveEps", "compare_fixed_vs_adaptive",
 ]

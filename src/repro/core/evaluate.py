@@ -1,6 +1,14 @@
 """End-to-end evaluation of (PLA method x protocol) combinations — the
 pipeline behind the paper's Figures 12-16 and Table 3.
 
+Two pipelines share the metric definitions: :func:`evaluate` runs one
+stream through the exact sequential methods + per-record protocols (all
+13 combinations, including continuous/mixed), while
+:func:`evaluate_batched` runs a whole ``(S, T)`` stream batch through the
+batched jnp segmenters and the vectorized protocol engine
+(:mod:`repro.core.protocol_engine`) — same numbers per stream, no
+per-record Python.
+
 The 13 combinations of Table 2:
 
 =====  ============  =============
@@ -19,14 +27,26 @@ M      mixed         implicit
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import jax_pla
 from .methods import METHODS
-from .metrics import PointMetrics, overall_compression, point_metrics
+from .metrics import BatchedPointMetrics, PointMetrics, overall_compression, \
+    point_metrics
+from .protocol_engine import batched_point_metrics, protocol_nbytes
 from .protocols import PROTOCOL_CAPS, PROTOCOLS
-from .types import CompressionRecord
+from .types import POINT_BYTES, CompressionRecord
+
+# Batched (S, T) segmenters of the four streaming methods; continuous and
+# mixed stay sequential-only (legacy pipeline below).
+BATCHED_SEGMENTERS = {
+    "angle": jax_pla.angle_segment,
+    "swing": jax_pla.swing_segment,
+    "disjoint": jax_pla.disjoint_segment,
+    "linear": jax_pla.linear_segment,
+}
 
 # Table 2 of the paper.
 COMBINATIONS: Dict[str, Tuple[str, str]] = {
@@ -86,3 +106,78 @@ def evaluate(method_name: str, proto_name: str, ts, ys, eps: float,
 def evaluate_all(ts, ys, eps: float,
                  keys: Sequence[str] = tuple(COMBINATIONS)) -> Dict[str, EvalResult]:
     return {k: run_combination(k, ts, ys, eps) for k in keys}
+
+
+# ---------------------------------------------------------------------------
+# Batched pipeline: (S, T) stream batches through the vectorized engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BatchedEvalResult:
+    """One (method x protocol) evaluated over a whole (S, T) batch.
+
+    Row ``s`` of every array equals the legacy :class:`EvalResult` of the
+    same segmentation's stream ``s`` (see
+    :func:`repro.core.protocol_engine.to_method_outputs`)."""
+
+    method: str
+    protocol: str
+    eps: float
+    n_streams: int
+    n_points: int
+    metrics: BatchedPointMetrics
+    overall_ratio: np.ndarray     # (S,)
+    n_records: np.ndarray         # (S,) int
+
+    def summary(self) -> Dict:
+        s = self.metrics.summary()
+        s["overall_ratio"] = self.overall_ratio
+        return s
+
+
+def evaluate_batched(method_name: str, proto_name: str, y, eps: float, *,
+                     max_run: Optional[int] = None,
+                     reconstruct: str = "lines",
+                     check_eps: bool = True) -> BatchedEvalResult:
+    """Evaluate one (method x protocol) pair over an (S, T) stream batch.
+
+    Streams live on the index grid (``ts = 0..T-1``).  Segmentation runs
+    through the batched jnp engine; protocol structure, byte accounting
+    and the three §4.2 metrics come from the vectorized
+    :mod:`repro.core.protocol_engine` — no per-record Python.
+
+    ``reconstruct`` selects the approximation-error path: ``"lines"``
+    evaluates the fitted lines in float64 on the host (bit-equal to the
+    legacy per-record metrics), ``"pallas"`` runs the fused
+    reconstruction+error kernel (:mod:`repro.kernels.reconstruct`) and
+    carries its float32 rounding.
+    """
+    if method_name not in BATCHED_SEGMENTERS:
+        raise ValueError(f"no batched segmenter for {method_name!r}; "
+                         f"have {sorted(BATCHED_SEGMENTERS)}")
+    y = np.asarray(y, np.float32)
+    S, T = y.shape
+    cap = PROTOCOL_CAPS[proto_name]
+    max_run = max_run or cap or 256
+    if cap is not None and max_run > cap:
+        raise ValueError(
+            f"max_run={max_run} exceeds the {proto_name!r} counter cap "
+            f"({cap} points): the byte accounting would describe an "
+            f"unencodable wire format")
+    knot_kind = "joint" if method_name == "swing" else "disjoint"
+    seg = BATCHED_SEGMENTERS[method_name](y, eps, max_run=max_run)
+    abs_err = None
+    if reconstruct == "pallas":
+        from repro.kernels.ops import reconstruct_error_tpu  # lazy: layering
+        _, abs_err = reconstruct_error_tpu(seg, y)
+    elif reconstruct != "lines":
+        raise ValueError(f"reconstruct must be lines|pallas; {reconstruct!r}")
+    pm = batched_point_metrics(seg, y, proto_name, knot_kind,
+                               eps=eps if check_eps else None,
+                               abs_err=abs_err)
+    nbytes, n_records = protocol_nbytes(seg, proto_name, knot_kind)
+    return BatchedEvalResult(
+        method=method_name, protocol=proto_name, eps=eps, n_streams=S,
+        n_points=T, metrics=pm,
+        overall_ratio=np.asarray(nbytes, np.float64) / (POINT_BYTES * T),
+        n_records=np.asarray(n_records))

@@ -54,11 +54,13 @@ Chunk boundaries are host-side (Python) decisions; the per-chunk work is a
 single jitted ``lax.scan`` whose absolute-time offset is a traced scalar —
 pushing many chunks does not retrace (one trace per distinct chunk width).
 ``eps`` is traced as well, so per-chunk ε retuning is recompile-free.
-Caveat: the reference segmenters walk *absolute* time (positions enter
-float32 through bounded differences only, but ``disjoint``/``linear`` keep
-the run window in an absolute ring), so a single :class:`SegmenterState`
-supports streams up to 2^24 points between flushes; the Pallas kernels
-(:mod:`repro.kernels`) renumber time per launch and have no such limit.
+Caveat: the reference segmenters walk *absolute* time (``disjoint`` /
+``linear`` cast positions to float32 before differencing), so a single
+:class:`SegmenterState` supports streams up to ``MAX_STREAM_T = 2^24``
+points over its lifetime — :func:`step_chunk` raises past that (flush
+does **not** rebase; start a fresh state to rebase time).  The Pallas
+kernels (:mod:`repro.kernels`) renumber time per launch and have no such
+limit.
 
 :func:`propagate_lines` turns segments into per-point reconstruction;
 :func:`to_records` / :func:`decode_records` give the fixed-slot record form
@@ -85,13 +87,22 @@ __all__ = [
     "SegmentOutput", "angle_segment", "disjoint_segment", "linear_segment",
     "swing_segment",
     "SegmenterState", "init_state", "step_chunk", "flush",
-    "STREAMING_METHODS", "check_window",
-    "propagate_lines", "to_records", "decode_records",
+    "STREAMING_METHODS", "MAX_STREAM_T", "check_window",
+    "propagate_lines", "to_records", "decode_records", "records_to_events",
     "records_init", "records_append", "records_finalize",
     "singlestream_nbytes", "PLARecords",
 ]
 
 _BIG = jnp.float32(3.4e38)
+
+# The jnp reference segmenters walk *absolute* time (the windowed methods
+# cast positions to float32 before differencing), so a single
+# SegmenterState supports at most 2^24 points over its lifetime — flush()
+# deliberately does not rebase, because callers use state.t/state.emitted
+# as absolute record positions across flushes.  step_chunk enforces the
+# limit with a clear error; the Pallas kernels renumber time per launch
+# and have no such limit.
+MAX_STREAM_T = 1 << 24
 
 
 class SegmentOutput(NamedTuple):
@@ -611,6 +622,17 @@ def step_chunk(state: SegmenterState, y_chunk: jax.Array
                          f"got {y.shape}")
     if y.shape[1] == 0:
         raise ValueError("chunk must contain at least one point")
+    if state.t + y.shape[1] > MAX_STREAM_T:
+        raise ValueError(
+            f"stream would reach {state.t + y.shape[1]} points on this "
+            f"SegmenterState, past the 2^24 absolute-time limit of the "
+            f"jnp reference segmenters (positions stop being exact in "
+            f"float32 and events would silently corrupt).  Start a fresh "
+            f"state (init_state) to rebase time — flush() does NOT "
+            f"rebase, positions stay absolute for record bookkeeping — "
+            f"or use the Pallas kernels "
+            f"(repro.kernels.ops.StreamingSegmenter), which renumber "
+            f"time per launch and have no such limit.")
     t0 = jnp.asarray(state.t, jnp.int32)
     if state.carry is None:
         carry, out = _stream_start(state.method, state.max_run, state.window,
@@ -771,6 +793,47 @@ def records_finalize(rec: PLARecords, t_len: int) -> PLARecords:
     streaming flush guarantees)."""
     return _records_pad(rec.seg_end, rec.a, rec.v, rec.count,
                         rec.seg_end.shape[1], t_len)
+
+
+@functools.partial(jax.jit, static_argnames=("t_len",))
+def records_to_events(rec: PLARecords, t_len: int) -> SegmentOutput:
+    """Expand canonical fixed-slot records back to (S, T) event arrays.
+
+    The inverse of :func:`to_records` for non-overflowed rows: each valid
+    slot scatters a break (and its anchored line) at ``seg_end``.  The
+    result feeds the event-form consumers — the Pallas reconstruction
+    kernel and the protocol engine — so record buffers (e.g. compressed
+    KV blocks, gradient records) can go through the same vectorized
+    protocol/metrics/reconstruction paths as fresh segmentations.
+    Overflowed rows reconstruct their covered prefix exactly; the tail
+    extends slot K-1's line (same contract as :func:`decode_records`).
+    """
+    S, K = rec.seg_end.shape
+    rows = jnp.arange(S)[:, None]
+    valid = jnp.arange(K)[None, :] < rec.count[:, None]
+    slot = jnp.where(valid, rec.seg_end, t_len)  # invalid -> dropped
+    breaks = jnp.zeros((S, t_len), bool).at[rows, slot].set(
+        True, mode="drop")
+    a = jnp.zeros((S, t_len), rec.a.dtype).at[rows, slot].set(
+        rec.a, mode="drop")
+    v = jnp.zeros((S, t_len), rec.v.dtype).at[rows, slot].set(
+        rec.v, mode="drop")
+    # Canonical form ends every stream with a break; rows whose last
+    # segment ends early (overflow) extend that segment's line.
+    last = jnp.clip(rec.count - 1, 0, K - 1)
+    last_end = jnp.take_along_axis(rec.seg_end, last[:, None], axis=1)
+    last_a = jnp.take_along_axis(rec.a, last[:, None], axis=1)
+    last_v = jnp.take_along_axis(rec.v, last[:, None], axis=1)
+    open_tail = (last_end < t_len - 1)
+    breaks = breaks.at[:, t_len - 1].set(True)
+    a = a.at[:, t_len - 1].set(
+        jnp.where(open_tail[:, 0], last_a[:, 0], a[:, t_len - 1]))
+    v = v.at[:, t_len - 1].set(jnp.where(
+        open_tail[:, 0],
+        last_v[:, 0] + last_a[:, 0]
+        * (t_len - 1 - last_end[:, 0]).astype(rec.v.dtype),
+        v[:, t_len - 1]))
+    return SegmentOutput(breaks, a, v)
 
 
 @functools.partial(jax.jit, static_argnames=("t_len",))

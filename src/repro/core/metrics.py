@@ -8,17 +8,59 @@ For input tuple i with completing compression record r = record(i):
 
 plus the aggregate statistics the paper plots: mean, 25th/75th percentiles,
 1.5-IQR whiskers and extremes (box plots of Figures 12-15).
+
+Two implementations share this module's summary math:
+
+- :func:`point_metrics` — the exact per-record reference.  It walks a
+  ``List[CompressionRecord]`` (the legacy protocol layer) one record at a
+  time and doubles as the coverage/eps auditor.
+- :class:`BatchedPointMetrics` — the array form used by the vectorized
+  protocol engine (:mod:`repro.core.protocol_engine`): the same three
+  metrics as ``(S, T)`` arrays over a whole stream batch, with
+  :func:`batched_summary` producing the box-plot statistics per stream in
+  one shot.  ``PointMetrics.summary`` routes through the same code, so
+  single-stream and batched summaries are numerically identical.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Sequence
+from typing import Dict, Sequence
 
 import numpy as np
 
 from .types import POINT_BYTES, CompressionRecord
+
+METRIC_NAMES = ("ratio", "latency", "error")
+
+
+def batched_summary(v: np.ndarray) -> Dict[str, np.ndarray]:
+    """Box-plot statistics of one metric over (S, T) rows, vectorized.
+
+    Returns ``mean / q25 / q75 / whisker_lo / whisker_hi / min / max`` as
+    ``(S,)`` float arrays (the paper's Figures 12-15 aggregates).  The
+    whiskers are the extreme values within 1.5 IQR of the quartiles.
+    """
+    v = np.asarray(v, np.float64)
+    if v.size == 0:
+        nan = np.full(v.shape[0], math.nan)
+        return {k: nan for k in ("mean", "q25", "q75", "whisker_lo",
+                                 "whisker_hi", "min", "max")}
+    q25, q75 = np.percentile(v, [25, 75], axis=1)
+    iqr = q75 - q25
+    lo_b, hi_b = q25 - 1.5 * iqr, q75 + 1.5 * iqr
+    lo_w = np.where(v >= lo_b[:, None], v, np.inf).min(axis=1)
+    hi_w = np.where(v <= hi_b[:, None], v, -np.inf).max(axis=1)
+    return {
+        "mean": v.mean(axis=1),
+        "q25": q25,
+        "q75": q75,
+        "whisker_lo": lo_w,
+        "whisker_hi": hi_w,
+        "min": v.min(axis=1),
+        "max": v.max(axis=1),
+    }
 
 
 @dataclasses.dataclass
@@ -31,21 +73,46 @@ class PointMetrics:
 
     def summary(self) -> Dict[str, Dict[str, float]]:
         out = {}
-        for name in ("ratio", "latency", "error"):
-            v = getattr(self, name)
-            q25, q75 = np.percentile(v, [25, 75])
-            iqr = q75 - q25
-            lo_w = v[v >= q25 - 1.5 * iqr].min() if len(v) else math.nan
-            hi_w = v[v <= q75 + 1.5 * iqr].max() if len(v) else math.nan
-            out[name] = {
-                "mean": float(v.mean()),
-                "q25": float(q25),
-                "q75": float(q75),
-                "whisker_lo": float(lo_w),
-                "whisker_hi": float(hi_w),
-                "min": float(v.min()),
-                "max": float(v.max()),
-            }
+        for name in METRIC_NAMES:
+            stats = batched_summary(getattr(self, name)[None, :])
+            out[name] = {k: float(s[0]) for k, s in stats.items()}
+        return out
+
+
+@dataclasses.dataclass
+class BatchedPointMetrics:
+    """Per-point metric arrays over an (S, T) stream batch.
+
+    Produced by :func:`repro.core.protocol_engine.batched_point_metrics`;
+    row ``s`` equals the legacy :func:`point_metrics` result on stream
+    ``s`` (same float64 expressions, down to the last bit when the
+    reconstruction uses the global-intercept line evaluation).
+    """
+
+    ratio: np.ndarray     # (S, T)
+    latency: np.ndarray   # (S, T)
+    error: np.ndarray     # (S, T)
+
+    @property
+    def n_streams(self) -> int:
+        return self.ratio.shape[0]
+
+    def stream(self, s: int) -> PointMetrics:
+        return PointMetrics(ratio=self.ratio[s], latency=self.latency[s],
+                            error=self.error[s])
+
+    def summary(self) -> Dict[str, Dict[str, np.ndarray]]:
+        """Per-stream box-plot statistics: {metric: {stat: (S,) array}}."""
+        return {name: batched_summary(getattr(self, name))
+                for name in METRIC_NAMES}
+
+    def pooled_summary(self) -> Dict[str, Dict[str, float]]:
+        """Statistics over all streams pooled (the paper's multi-file
+        aggregation in :mod:`benchmarks.paper_eval`)."""
+        out = {}
+        for name in METRIC_NAMES:
+            stats = batched_summary(getattr(self, name).reshape(1, -1))
+            out[name] = {k: float(s[0]) for k, s in stats.items()}
         return out
 
 

@@ -1,0 +1,705 @@
+"""Device-resident protocol & metrics engine (paper §5 + §4.2, batched).
+
+The legacy layer (:mod:`repro.core.protocols` / :mod:`repro.core.metrics`)
+walks ``List[CompressionRecord]`` one record at a time — exact, but
+host-bound.  This module is the array program equivalent: it consumes the
+``(S, T)`` :class:`~repro.core.jax_pla.SegmentOutput` produced by the
+batched segmenters (jnp references or Pallas kernels) and computes, for
+all ``S`` streams at once,
+
+- the *protocol record structure* of §5 (implicit / twostreams /
+  singlestream / singlestreamv) as per-point descriptor arrays — which
+  record covers each input point, the record's byte cost, coverage and
+  emission time — including the SingleStreamV *burst* packing with the
+  signed-byte counter semantics preserved (bursts split at 127);
+- the three per-point streaming metrics of §4.2 (compression ratio,
+  reconstruction latency, approximation error) as ``(S, T)`` arrays, in
+  one jit with no per-record Python;
+- per-stream wire byte totals, and — on the host — the actual wire bytes,
+  packed with vectorized numpy and **bit-identical** to the legacy
+  ``encode_*`` codecs on the same segmentation.
+
+Segments live on the index grid ``t = 0..T-1`` (the framework's streams
+are index-stamped); a uniform real-time grid ``t = t0 + dt*i`` is supported
+by the byte encoders for wire compatibility with the sequential methods.
+
+:class:`ProtocolEmitter` is the streaming face of the same codecs: an
+``init / step_chunk / flush`` object (mirroring the PR-2 carry API of
+:mod:`repro.core.jax_pla`) that consumes finalized event columns plus the
+raw value columns and emits wire-ready bytes incrementally, bit-identical
+to the offline encoders — the concatenation of every ``step_chunk`` output
+plus the ``flush`` output equals the one-shot encoding.
+
+The legacy Python codecs remain the golden references:
+:func:`to_method_outputs` translates a ``SegmentOutput`` row back into the
+sequential-layer :class:`~repro.core.types.MethodOutput` (segments *and*
+knots, joint or disjoint convention) so tests can prove byte-for-byte and
+metric-for-metric equality against :mod:`repro.core.protocols`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .jax_pla import SegmentOutput
+from .metrics import BatchedPointMetrics
+from .types import (COUNTER_BYTES, DisjointKnot, JointKnot, Line,
+                    MethodOutput, Segment, VALUE_BYTES)
+
+__all__ = [
+    "ENGINE_PROTOCOLS", "PROTOCOL_MIN_SEG", "ProtocolPointDescriptors",
+    "protocol_descriptors", "protocol_point_metrics", "protocol_nbytes",
+    "batched_point_metrics", "encode_batch", "to_method_outputs",
+    "ProtocolEmitter",
+]
+
+ENGINE_PROTOCOLS = ("implicit", "twostreams", "singlestream",
+                    "singlestreamv")
+
+# Minimum run length for a segment record; shorter runs flush as
+# singletons / bursts (paper §5.2; matches repro.core.protocols).
+PROTOCOL_MIN_SEG = {"twostreams": 4, "singlestream": 3, "singlestreamv": 3}
+
+# Per-point record kinds.
+KIND_SEGMENT = 1
+KIND_SINGLETON = 2
+KIND_BURST = 3
+
+_SEG_BYTES = {  # segment-record wire cost per protocol
+    "twostreams": 3 * VALUE_BYTES + COUNTER_BYTES,      # (t0, n, a, b) = 25
+    "singlestream": 2 * VALUE_BYTES + COUNTER_BYTES,    # (n, a, b) = 17
+    "singlestreamv": 2 * VALUE_BYTES + COUNTER_BYTES,   # (n, a, b) = 17
+}
+_SINGLE_BYTES = {
+    "twostreams": VALUE_BYTES,                  # bare value on stream 2
+    "singlestream": VALUE_BYTES + COUNTER_BYTES,  # (1, y) = 9
+}
+
+
+class ProtocolPointDescriptors(NamedTuple):
+    """Per-point record structure of one protocol over ``(S, T)`` streams.
+
+    For input point ``i`` with completing record ``r = record(i)``
+    (paper §4.2): ``rec_bytes[i] = |r|`` in bytes, ``rec_len[i] =
+    |reconstruct(r)|``, ``emit[i] = time(r)``.  ``kind`` is one of
+    ``KIND_SEGMENT / KIND_SINGLETON / KIND_BURST``; ``head`` marks the
+    first point of each record (summing ``rec_bytes`` over heads gives the
+    stream's wire size).  ``seg_end / a / v`` describe the covering
+    *segment*'s anchored line ``y(t) = v + a*(t - seg_end)`` (segment
+    points reconstruct through it; singleton/burst points are exact).
+    """
+
+    kind: jax.Array       # (S, T) int32
+    head: jax.Array       # (S, T) bool
+    rec_bytes: jax.Array  # (S, T) int32
+    rec_len: jax.Array    # (S, T) int32
+    emit: jax.Array       # (S, T) int32
+    seg_end: jax.Array    # (S, T) int32 — end of covering segment
+    seg_start: jax.Array  # (S, T) int32
+    seg_len: jax.Array    # (S, T) int32
+    a: jax.Array          # (S, T) — covering segment's slope
+    v: jax.Array          # (S, T) — covering segment's value at seg_end
+
+
+def _segment_geometry(seg: SegmentOutput):
+    """Per-point covering-segment arrays from (S, T) break events."""
+    brk = seg.breaks.astype(bool)
+    S, T = brk.shape
+    brk = brk.at[:, T - 1].set(True)  # canonical form: stream end breaks
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (S, T))
+    # Next break at-or-after t (the covering segment's end).
+    e = jnp.flip(jax.lax.cummin(
+        jnp.flip(jnp.where(brk, pos, T - 1), 1), axis=1), 1)
+    # Last break strictly before t; the segment starts one past it.
+    cm = jax.lax.cummax(jnp.where(brk, pos, -1), axis=1)
+    prevb = jnp.concatenate(
+        [jnp.full((S, 1), -1, jnp.int32), cm[:, :-1]], axis=1)
+    start = prevb + 1
+    n = e - start + 1
+    # The processing of e+1 decides the break => earliest emission time.
+    fin = jnp.minimum(e + 1, T - 1)
+    a_pt = jnp.take_along_axis(seg.a, e, axis=1)
+    v_pt = jnp.take_along_axis(seg.v, e, axis=1)
+    return pos, e, start, n, fin, a_pt, v_pt
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("protocol", "knot_kind", "burst_cap"))
+def protocol_descriptors(seg: SegmentOutput, protocol: str,
+                         knot_kind: str = "disjoint",
+                         burst_cap: int = 127) -> ProtocolPointDescriptors:
+    """Vectorize one §5 protocol over an ``(S, T)`` segmentation.
+
+    ``knot_kind`` only matters for ``implicit``: ``"joint"`` (SwingFilter)
+    knots cost 2 fields, ``"disjoint"`` knots 3 (streamed in two parts;
+    the stream's closing knot is joint, hence 2).
+    """
+    if protocol not in ENGINE_PROTOCOLS:
+        raise ValueError(f"unknown protocol {protocol!r}; "
+                         f"have {sorted(ENGINE_PROTOCOLS)}")
+    if knot_kind not in ("joint", "disjoint"):
+        raise ValueError(f"knot_kind must be joint|disjoint; {knot_kind!r}")
+    pos, e, start, n, fin, a_pt, v_pt = _segment_geometry(seg)
+    S, T = pos.shape
+    at_start = pos == start
+
+    if protocol == "implicit":
+        kind = jnp.full((S, T), KIND_SEGMENT, jnp.int32)
+        if knot_kind == "joint":
+            nbytes = jnp.full((S, T), 2 * VALUE_BYTES, jnp.int32)
+        else:
+            # Interior segments terminate on a 3-field disjoint knot; the
+            # last segment's right knot is the closing joint knot (2).
+            nbytes = jnp.where(e == T - 1, 2 * VALUE_BYTES, 3 * VALUE_BYTES)
+        return ProtocolPointDescriptors(
+            kind=kind, head=at_start, rec_bytes=nbytes.astype(jnp.int32),
+            rec_len=n, emit=fin, seg_end=e, seg_start=start, seg_len=n,
+            a=a_pt, v=v_pt)
+
+    long = n >= PROTOCOL_MIN_SEG[protocol]
+    seg_bytes = _SEG_BYTES[protocol]
+
+    if protocol in ("twostreams", "singlestream"):
+        kind = jnp.where(long, KIND_SEGMENT, KIND_SINGLETON)
+        head = jnp.where(long, at_start, True)
+        nbytes = jnp.where(long, seg_bytes, _SINGLE_BYTES[protocol])
+        rec_len = jnp.where(long, n, 1)
+        return ProtocolPointDescriptors(
+            kind=kind.astype(jnp.int32), head=head,
+            rec_bytes=nbytes.astype(jnp.int32), rec_len=rec_len, emit=fin,
+            seg_end=e, seg_start=start, seg_len=n, a=a_pt, v=v_pt)
+
+    # singlestreamv: short-run points buffer into bursts.  A maximal run of
+    # buffered points spans consecutive short segments; it flushes when the
+    # next segment record is emitted, at ``burst_cap`` values, or at end of
+    # stream (repro.core.protocols.protocol_singlestreamv semantics).
+    single = ~long
+    # Start of the maximal singleton run containing t.
+    run_start = jax.lax.cummax(jnp.where(~single, pos + 1, 0), axis=1)
+    c = pos - run_start                       # index within the run
+    b_start = run_start + (c // burst_cap) * burst_cap
+    # First non-singleton position after t (T when the run hits the end).
+    nxt_ns = jnp.flip(jax.lax.cummin(
+        jnp.flip(jnp.where(~single, pos, T), 1), axis=1), 1)
+    b_last = jnp.minimum(b_start + burst_cap - 1, nxt_ns - 1)
+    m = b_last - b_start + 1
+    fin_at = lambda idx: jnp.take_along_axis(  # noqa: E731
+        fin, jnp.clip(idx, 0, T - 1), axis=1)
+    # Cap-filled bursts flush while their last point's segment is being
+    # scattered; partial bursts wait for the next segment record (or the
+    # end of the stream, where fin[T-1] == T-1).
+    emit_burst = jnp.where(m == burst_cap, fin_at(b_last),
+                           fin_at(jnp.minimum(nxt_ns, T - 1)))
+    kind = jnp.where(long, KIND_SEGMENT, KIND_BURST)
+    head = jnp.where(long, at_start, c % burst_cap == 0)
+    nbytes = jnp.where(long, seg_bytes,
+                       COUNTER_BYTES + VALUE_BYTES * m)
+    rec_len = jnp.where(long, n, m)
+    emit = jnp.where(long, fin, emit_burst)
+    return ProtocolPointDescriptors(
+        kind=kind.astype(jnp.int32), head=head,
+        rec_bytes=nbytes.astype(jnp.int32), rec_len=rec_len, emit=emit,
+        seg_end=e, seg_start=start, seg_len=n, a=a_pt, v=v_pt)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("protocol", "knot_kind", "burst_cap"))
+def protocol_point_metrics(seg: SegmentOutput, y: jax.Array, protocol: str,
+                           knot_kind: str = "disjoint", burst_cap: int = 127
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """The §4.2 per-point metrics as (S, T) device arrays, in one jit.
+
+    Returns ``(ratio, latency, error)``: ``ratio = |r| / |reconstruct(r)|``
+    in y-value units, ``latency = time(r) - i`` in tuples, ``error =
+    |y'_i - y_i|`` (0 for singleton/burst points, which ship exact
+    values).  Reconstruction is the anchored gather
+    ``v + a * (t - seg_end)`` — no scan, no per-record host work.
+    """
+    d = protocol_descriptors(seg, protocol, knot_kind, burst_cap)
+    pos = jnp.arange(y.shape[1], dtype=jnp.int32)[None, :]
+    ratio = (d.rec_bytes.astype(jnp.float32) / VALUE_BYTES) \
+        / d.rec_len.astype(jnp.float32)
+    latency = (d.emit - pos).astype(jnp.float32)
+    y_hat = d.v + d.a * (pos - d.seg_end).astype(d.a.dtype)
+    error = jnp.where(d.kind == KIND_SEGMENT,
+                      jnp.abs(y_hat - y), jnp.zeros_like(y))
+    return ratio, latency, error
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("protocol", "knot_kind", "burst_cap"))
+def protocol_nbytes(seg: SegmentOutput, protocol: str,
+                    knot_kind: str = "disjoint", burst_cap: int = 127
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Per-stream ``(record_bytes, n_records)`` wire accounting, jitted.
+
+    ``record_bytes`` sums each record once (at its head); dividing by
+    ``VALUE_BYTES * T`` gives the whole-stream compression ratio of
+    :func:`repro.core.metrics.overall_compression`.  The implicit
+    protocol's byte-level codec adds one opening joint knot
+    (``2 * VALUE_BYTES``) on top of the per-record accounting.
+    """
+    d = protocol_descriptors(seg, protocol, knot_kind, burst_cap)
+    nbytes = jnp.where(d.head, d.rec_bytes, 0).sum(axis=1)
+    n_records = d.head.sum(axis=1).astype(jnp.int32)
+    return nbytes, n_records
+
+
+# ---------------------------------------------------------------------------
+# Host wrappers: float64 metrics + batched summaries, legacy-exact
+# ---------------------------------------------------------------------------
+
+def batched_point_metrics(seg: SegmentOutput, ys, protocol: str,
+                          knot_kind: str = "disjoint", *,
+                          eps: Optional[float] = None,
+                          burst_cap: int = 127,
+                          y_hat=None, abs_err=None) -> BatchedPointMetrics:
+    """Batched §4.2 metrics, bit-equal to the per-record reference.
+
+    Pulls the jitted descriptors once and finishes in float64 numpy with
+    the exact expressions of :func:`repro.core.metrics.point_metrics`
+    (``(nbytes / POINT_BYTES) / m``; values via the global-intercept line
+    ``A*t + B``), so each row equals the legacy single-stream result to
+    the last bit.  ``y_hat`` optionally substitutes a device-computed
+    reconstruction (e.g. :func:`repro.kernels.ops.reconstruct_tpu`) for
+    the line evaluation, and ``abs_err`` a device-computed ``|y' - y|``
+    surface (the second output of the fused
+    :func:`repro.kernels.ops.reconstruct_error_tpu`) — errors then carry
+    that path's float32 rounding.
+    """
+    d = protocol_descriptors(seg, protocol, knot_kind, burst_cap)
+    ys = np.asarray(ys, np.float64)
+    S, T = ys.shape
+    pos = np.arange(T, dtype=np.float64)[None, :]
+    rec_bytes = np.asarray(d.rec_bytes, np.float64)
+    rec_len = np.asarray(d.rec_len, np.float64)
+    ratio = (rec_bytes / VALUE_BYTES) / rec_len
+    latency = np.asarray(d.emit, np.float64) - pos
+    is_seg = np.asarray(d.kind) == KIND_SEGMENT
+    if abs_err is not None:
+        abs_err = np.asarray(abs_err, np.float64)
+    elif y_hat is not None:
+        abs_err = np.abs(np.asarray(y_hat, np.float64) - ys)
+    else:
+        a64 = np.asarray(d.a, np.float64)
+        v64 = np.asarray(d.v, np.float64)
+        e64 = np.asarray(d.seg_end, np.float64)
+        y_hat = a64 * pos + (v64 - a64 * e64)   # Line(A, B) evaluation
+        abs_err = np.abs(y_hat - ys)
+    error = np.where(is_seg, abs_err, 0.0)
+    if eps is not None:
+        # float32 engine slack (the jnp segmenters fit in f32; cf. the
+        # tighter f64 tolerance of metrics.point_metrics).
+        bad = error > eps * (1 + 1e-4) + 1e-5
+        if bad.any():
+            s, i = map(int, np.argwhere(bad)[0])
+            raise ValueError(
+                f"max-error guarantee violated at stream {s} point {i}: "
+                f"err={error[s, i]:.3e} > eps={eps:.3e}")
+    return BatchedPointMetrics(ratio=ratio, latency=latency, error=error)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized byte-level encoders (host; bit-identical to repro.core.protocols)
+# ---------------------------------------------------------------------------
+
+def _put_f64(buf: np.ndarray, offs: np.ndarray, vals: np.ndarray) -> None:
+    """Scatter little-endian float64 values at per-record byte offsets."""
+    if len(offs) == 0:
+        return
+    b = np.ascontiguousarray(vals, "<f8").view(np.uint8).reshape(-1, 8)
+    buf[offs[:, None] + np.arange(8)] = b
+
+
+def _row_lines(brk_row, a_row, v_row, t0: float, dt: float):
+    """Per-segment (ends, starts, n, A, B) with the legacy float64 math:
+    ``A = a/dt``; ``B = v - a*e - A*t0`` (e on the index grid)."""
+    ends = np.flatnonzero(brk_row)
+    if len(ends) == 0 or ends[-1] != len(brk_row) - 1:
+        ends = np.append(ends, len(brk_row) - 1)
+    starts = np.concatenate([[0], ends[:-1] + 1])
+    n = ends - starts + 1
+    a64 = np.asarray(a_row, np.float64)[ends]
+    v64 = np.asarray(v_row, np.float64)[ends]
+    A = a64 / dt
+    B = v64 - a64 * ends - A * t0
+    return ends, starts, n, A, B
+
+
+def _encode_row(protocol: str, brk_row, a_row, v_row, ys_row,
+                knot_kind: str, t0: float, dt: float, burst_cap: int):
+    T = len(ys_row)
+    ends, starts, n, A, B = _row_lines(brk_row, a_row, v_row, t0, dt)
+    ys64 = np.asarray(ys_row, np.float64)
+    t_of = lambda i: t0 + dt * np.asarray(i, np.float64)  # noqa: E731
+
+    if protocol == "implicit":
+        K = len(ends)
+        t_end = t_of(ends[-1])
+        if knot_kind == "joint":
+            # Opening knot = the raw first point (SwingFilter origin),
+            # then one joint knot per segment end, on the segment's line.
+            ts_k = np.concatenate([[t_of(0)], t_of(ends)])
+            ys_k = np.concatenate([[ys64[0]], A * t_of(ends) + B])
+            return np.stack([ts_k, ys_k], 1).ravel().astype("<f8").tobytes()
+        head = np.array([t_of(0), A[0] * t_of(0) + B[0]])
+        if K == 1:
+            body = np.empty(0)
+        else:
+            tb = t_of(starts[1:])
+            y1 = A[:-1] * tb + B[:-1]
+            y2 = A[1:] * tb + B[1:]
+            body = np.stack([-tb, y1, y2], 1).ravel()
+        tail = np.array([t_end, A[-1] * t_end + B[-1]])
+        return np.concatenate([head, body, tail]).astype("<f8").tobytes()
+
+    long = n >= PROTOCOL_MIN_SEG[protocol]
+    n_cap = 127 if protocol == "singlestreamv" else 256
+    if int(n[long].max(initial=0)) > n_cap:
+        raise ValueError(
+            f"{protocol}: segment of {int(n[long].max())} points exceeds "
+            f"the {n_cap}-point counter range — segment with "
+            f"max_run=PROTOCOL_CAPS[{protocol!r}]")
+    seg_id = np.searchsorted(ends, np.arange(T))
+    long_pt = long[seg_id]
+
+    if protocol == "twostreams":
+        kl = np.flatnonzero(long)
+        seg_buf = np.zeros(25 * len(kl), np.uint8)
+        offs = 25 * np.arange(len(kl))
+        _put_f64(seg_buf, offs, t_of(starts[kl]))
+        seg_buf[offs + 8] = (n[kl] - 1).astype(np.uint8)
+        _put_f64(seg_buf, offs + 9, A[kl])
+        _put_f64(seg_buf, offs + 17, B[kl])
+        single_buf = ys64[~long_pt].astype("<f8").tobytes()
+        return seg_buf.tobytes(), single_buf
+
+    if protocol == "singlestream":
+        head_pt = np.flatnonzero(np.where(long_pt,
+                                          np.arange(T) == starts[seg_id],
+                                          True))
+        is_seg = long_pt[head_pt]
+        sizes = np.where(is_seg, 17, 9)
+        offs = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+        buf = np.zeros(int(sizes.sum()), np.uint8)
+        buf[offs] = np.where(is_seg, n[seg_id[head_pt]] - 1, 0) \
+            .astype(np.uint8)
+        _put_f64(buf, offs[is_seg] + 1, A[seg_id[head_pt[is_seg]]])
+        _put_f64(buf, offs[is_seg] + 9, B[seg_id[head_pt[is_seg]]])
+        _put_f64(buf, offs[~is_seg] + 1, ys64[head_pt[~is_seg]])
+        return buf.tobytes()
+
+    # singlestreamv
+    pos = np.arange(T)
+    run_start = np.maximum.accumulate(np.where(long_pt, pos + 1, 0))
+    c = pos - run_start
+    head_pt = np.flatnonzero(np.where(long_pt, pos == starts[seg_id],
+                                      c % burst_cap == 0))
+    is_seg = long_pt[head_pt]
+    nxt_ns = np.minimum.accumulate(np.where(long_pt, pos, T)[::-1])[::-1]
+    b_last = np.minimum(head_pt + burst_cap - 1, nxt_ns[head_pt] - 1)
+    m = np.where(is_seg, 0, b_last - head_pt + 1)
+    sizes = np.where(is_seg, 17, 1 + 8 * m)
+    offs = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    buf = np.zeros(int(sizes.sum()), np.uint8)
+    buf[offs] = np.where(is_seg, n[seg_id[head_pt]],
+                         -m).astype(np.int8).view(np.uint8)
+    _put_f64(buf, offs[is_seg] + 1, A[seg_id[head_pt[is_seg]]])
+    _put_f64(buf, offs[is_seg] + 9, B[seg_id[head_pt[is_seg]]])
+    # Burst payloads: each buffered point writes its exact value at
+    # head_offset + 1 + 8 * (its index within the burst).
+    sp = np.flatnonzero(~long_pt)
+    if len(sp):
+        r = np.searchsorted(head_pt, sp, "right") - 1
+        _put_f64(buf, offs[r] + 1 + 8 * (sp - head_pt[r]), ys64[sp])
+    return buf.tobytes()
+
+
+def encode_batch(seg: SegmentOutput, ys, protocol: str,
+                 knot_kind: str = "disjoint", *, t0: float = 0.0,
+                 dt: float = 1.0, burst_cap: int = 127) -> List:
+    """Wire-encode every stream of an (S, T) segmentation.
+
+    Returns one ``bytes`` per stream (``(seg_bytes, singleton_bytes)``
+    pairs for ``twostreams``), bit-identical to the legacy
+    ``repro.core.protocols.encode_*`` codecs run on the same segmentation
+    (see :func:`to_method_outputs`).
+    """
+    if protocol not in ENGINE_PROTOCOLS:
+        raise ValueError(f"unknown protocol {protocol!r}")
+    brk = np.asarray(seg.breaks, bool)
+    a = np.asarray(seg.a)
+    v = np.asarray(seg.v)
+    ys = np.asarray(ys)
+    return [_encode_row(protocol, brk[s], a[s], v[s], ys[s], knot_kind,
+                        t0, dt, burst_cap) for s in range(brk.shape[0])]
+
+
+# ---------------------------------------------------------------------------
+# Golden-reference translation: SegmentOutput -> sequential MethodOutput
+# ---------------------------------------------------------------------------
+
+def to_method_outputs(seg: SegmentOutput, ts, ys,
+                      knot_kind: str = "disjoint") -> List[MethodOutput]:
+    """Translate each stream row into the sequential-layer MethodOutput.
+
+    Uses the same anchored-to-global line conversion as the engine
+    (``A = a/dt``, ``B = v - a*e - A*t0``), the break-decision emission
+    times (``finalized_at = min(e+1, T-1)``), and the knot conventions of
+    :mod:`repro.core.methods` — so the legacy protocols + codecs applied
+    to the result are the *golden reference* for the vectorized paths.
+    """
+    ts = np.asarray(ts, np.float64)
+    ys = np.asarray(ys)
+    T = ts.shape[-1]
+    dt = float(ts[1] - ts[0]) if T > 1 else 1.0
+    t0 = float(ts[0])
+    brk = np.asarray(seg.breaks, bool)
+    outs: List[MethodOutput] = []
+    for s in range(brk.shape[0]):
+        ends, starts, n, A, B = _row_lines(brk[s], np.asarray(seg.a)[s],
+                                           np.asarray(seg.v)[s], t0, dt)
+        fins = np.minimum(ends + 1, T - 1)
+        lines = [Line(float(A[k]), float(B[k])) for k in range(len(ends))]
+        segments = [Segment(int(starts[k]), int(ends[k]) + 1, lines[k],
+                            finalized_at=int(fins[k]))
+                    for k in range(len(ends))]
+        knots: List[object] = []
+        if knot_kind == "joint":
+            knots.append(JointKnot(float(ts[0]), float(ys[s][0]),
+                                   emitted_at=0))
+            for k, sg in enumerate(segments):
+                te = float(ts[ends[k]])
+                knots.append(JointKnot(te, sg.line(te),
+                                       emitted_at=int(fins[k])))
+        else:
+            knots.append(JointKnot(float(ts[0]), lines[0](float(ts[0])),
+                                   emitted_at=int(fins[0])))
+            for k in range(1, len(segments)):
+                tb = float(ts[starts[k]])
+                knots.append(DisjointKnot(
+                    tb, lines[k - 1](tb), lines[k](tb),
+                    emitted_at_first=int(fins[k - 1]),
+                    emitted_at_second=int(fins[k])))
+            te = float(ts[T - 1])
+            knots.append(JointKnot(te, lines[-1](te), emitted_at=T - 1))
+        outs.append(MethodOutput(segments=segments, knots=knots))
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# Streaming emitter: init / step_chunk / flush over event columns
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _RowCodec:
+    """Per-stream incremental codec state."""
+
+    k: int = 0                 # segments finalized so far
+    prev_end: int = -1         # last break position
+    prev_A: float = 0.0        # last finalized segment's Line(A, B)
+    prev_B: float = 0.0
+    pend_start: int = 0        # singlestreamv: buffered singleton window
+    pend_len: int = 0
+
+
+class ProtocolEmitter:
+    """Streaming protocol encoder over finalized event columns.
+
+    Mirrors the carry API of :mod:`repro.core.jax_pla`: construct, feed
+    ``step_chunk(events, y_chunk)`` any number of times, then ``flush()``.
+    ``events`` is a (S, w) :class:`SegmentOutput` of *newly finalized*
+    columns (the output of ``jax_pla.step_chunk`` / ``jax_pla.flush`` or
+    ``kernels.ops.StreamingSegmenter.push/finish``); ``y_chunk`` is the
+    matching raw (S, n) value columns (pass the values no later than the
+    events they produce — singleton records ship exact values).  Either
+    argument may be ``None``.
+
+    Each call returns the newly wire-ready bytes per stream (pairs of
+    ``(segment, singleton)`` bytes for ``twostreams``); concatenating all
+    returns plus the ``flush()`` return is **bit-identical** to the
+    offline :func:`encode_batch` / legacy ``encode_*`` on the one-shot
+    segmentation.  Values are buffered as float64, so feeding the same
+    arrays gives the same bytes as the host codecs.
+    """
+
+    def __init__(self, protocol: str, n_streams: int, *,
+                 knot_kind: str = "disjoint", t0: float = 0.0,
+                 dt: float = 1.0, burst_cap: int = 127):
+        if protocol not in ENGINE_PROTOCOLS:
+            raise ValueError(f"unknown protocol {protocol!r}; "
+                             f"have {sorted(ENGINE_PROTOCOLS)}")
+        if knot_kind not in ("joint", "disjoint"):
+            raise ValueError(f"knot_kind must be joint|disjoint; "
+                             f"{knot_kind!r}")
+        self.protocol = protocol
+        self.n_streams = n_streams
+        self.knot_kind = knot_kind
+        self.t0 = float(t0)
+        self.dt = float(dt)
+        self.burst_cap = burst_cap
+        self._rows = [_RowCodec() for _ in range(n_streams)]
+        self._ybuf = np.zeros((n_streams, 0), np.float64)
+        self._ybase = 0            # absolute position of _ybuf[:, 0]
+        self._epos = 0             # absolute position of next event column
+        self._finished = False
+
+    # -- plumbing -----------------------------------------------------------
+
+    def _t(self, i: int) -> float:
+        return self.t0 + self.dt * float(i)
+
+    def _y(self, s: int, lo: int, hi: int) -> np.ndarray:
+        """Values for absolute positions [lo, hi)."""
+        if lo < self._ybase or hi > self._ybase + self._ybuf.shape[1]:
+            raise ValueError(
+                f"record needs values [{lo}, {hi}) but only "
+                f"[{self._ybase}, {self._ybase + self._ybuf.shape[1]}) "
+                f"were pushed — pass y_chunk no later than its events")
+        return self._ybuf[s, lo - self._ybase:hi - self._ybase]
+
+    def _trim(self) -> None:
+        """Drop value columns no future record can reference."""
+        if self.protocol == "singlestreamv":
+            keep_from = min(r.pend_start for r in self._rows)
+        elif self.protocol == "implicit" and self.knot_kind == "joint" \
+                and any(r.k == 0 for r in self._rows):
+            keep_from = 0  # the opening knot ships the raw first value
+        else:
+            keep_from = min(r.prev_end + 1 for r in self._rows)
+        drop = keep_from - self._ybase
+        if drop > 0:
+            self._ybuf = self._ybuf[:, drop:]
+            self._ybase = keep_from
+
+    def _flush_burst(self, s: int, out: bytearray) -> None:
+        r = self._rows[s]
+        if not r.pend_len:
+            return
+        vals = self._y(s, r.pend_start, r.pend_start + r.pend_len)
+        out += np.int8(-r.pend_len).tobytes()
+        out += np.ascontiguousarray(vals, "<f8").tobytes()
+        r.pend_start += r.pend_len
+        r.pend_len = 0
+
+    def _on_break(self, s: int, e: int, A: float, B: float,
+                  seg_out: bytearray, single_out: bytearray) -> None:
+        """One finalized segment [prev_end+1, e] with line A*t + B."""
+        r = self._rows[s]
+        start, n = r.prev_end + 1, e - r.prev_end
+        p = self.protocol
+        if p == "implicit":
+            if r.k == 0:
+                if self.knot_kind == "joint":
+                    y0 = float(self._y(s, 0, 1)[0])
+                else:
+                    y0 = A * self._t(0) + B
+                seg_out += np.array([self._t(0), y0], "<f8").tobytes()
+            elif self.knot_kind == "disjoint":
+                tb = self._t(start)
+                seg_out += np.array([-tb, r.prev_A * tb + r.prev_B,
+                                     A * tb + B], "<f8").tobytes()
+            if self.knot_kind == "joint":
+                te = self._t(e)
+                seg_out += np.array([te, A * te + B], "<f8").tobytes()
+        elif n >= PROTOCOL_MIN_SEG[p]:
+            n_cap = 127 if p == "singlestreamv" else 256
+            if n > n_cap:
+                raise ValueError(
+                    f"{p}: segment of {n} points exceeds the {n_cap}-point "
+                    f"counter range — segment with "
+                    f"max_run=PROTOCOL_CAPS[{p!r}]")
+            if p == "singlestreamv":
+                self._flush_burst(s, seg_out)
+                seg_out += np.int8(n).tobytes()
+                seg_out += np.array([A, B], "<f8").tobytes()
+            elif p == "singlestream":
+                seg_out += np.uint8(n - 1).tobytes()
+                seg_out += np.array([A, B], "<f8").tobytes()
+            else:  # twostreams
+                seg_out += np.array([self._t(start)], "<f8").tobytes()
+                seg_out += np.uint8(n - 1).tobytes()
+                seg_out += np.array([A, B], "<f8").tobytes()
+        else:
+            vals = self._y(s, start, e + 1)
+            if p == "twostreams":
+                single_out += np.ascontiguousarray(vals, "<f8").tobytes()
+            elif p == "singlestream":
+                rec = np.zeros((n, 9), np.uint8)
+                rec[:, 1:] = np.ascontiguousarray(vals, "<f8") \
+                    .view(np.uint8).reshape(n, 8)
+                seg_out += rec.tobytes()
+            else:  # singlestreamv: buffer, splitting at the counter cap
+                r.pend_len += n
+                while r.pend_len >= self.burst_cap:
+                    save = r.pend_len
+                    r.pend_len = self.burst_cap
+                    self._flush_burst(s, seg_out)
+                    r.pend_len = save - self.burst_cap
+        r.k += 1
+        r.prev_end = e
+        r.prev_A, r.prev_B = A, B
+        # Advance past the segment unless singlestreamv just buffered it
+        # into the pending burst window.
+        if p != "singlestreamv" or n >= PROTOCOL_MIN_SEG[p]:
+            r.pend_start = e + 1
+
+    # -- public API ---------------------------------------------------------
+
+    def step_chunk(self, events: Optional[SegmentOutput] = None,
+                   y_chunk=None) -> List:
+        """Consume new event columns / value columns; return new bytes."""
+        if self._finished:
+            raise RuntimeError("step_chunk after flush()")
+        if y_chunk is not None:
+            y = np.asarray(y_chunk, np.float64)
+            if y.ndim != 2 or y.shape[0] != self.n_streams:
+                raise ValueError(f"y_chunk must be ({self.n_streams}, n); "
+                                 f"got {y.shape}")
+            self._ybuf = np.concatenate([self._ybuf, y], axis=1)
+        seg_bufs = [bytearray() for _ in range(self.n_streams)]
+        single_bufs = [bytearray() for _ in range(self.n_streams)]
+        if events is not None and events.breaks.shape[0] != self.n_streams:
+            raise ValueError(f"events must cover ({self.n_streams}, w) "
+                             f"streams; got {events.breaks.shape}")
+        if events is not None and events.breaks.shape[1]:
+            brk = np.asarray(events.breaks, bool)
+            a = np.asarray(events.a, np.float64)
+            v = np.asarray(events.v, np.float64)
+            w = brk.shape[1]
+            for s in range(self.n_streams):
+                for j in np.flatnonzero(brk[s]):
+                    e = self._epos + int(j)
+                    A = a[s, j] / self.dt
+                    B = v[s, j] - a[s, j] * e - A * self.t0
+                    self._on_break(s, e, A, B, seg_bufs[s], single_bufs[s])
+            self._epos += w
+            self._trim()
+        if self.protocol == "twostreams":
+            return [(bytes(sb), bytes(gb))
+                    for sb, gb in zip(seg_bufs, single_bufs)]
+        return [bytes(sb) for sb in seg_bufs]
+
+    def flush(self) -> List:
+        """Close the stream: trailing bursts and the closing knot."""
+        if self._finished:
+            raise RuntimeError("flush() called twice")
+        self._finished = True
+        outs = [bytearray() for _ in range(self.n_streams)]
+        for s, r in enumerate(self._rows):
+            if self.protocol == "singlestreamv":
+                self._flush_burst(s, outs[s])
+            elif self.protocol == "implicit" \
+                    and self.knot_kind == "disjoint" and r.k:
+                te = self._t(r.prev_end)
+                outs[s] += np.array([te, r.prev_A * te + r.prev_B],
+                                    "<f8").tobytes()
+        if self.protocol == "twostreams":
+            return [(bytes(o), b"") for o in outs]
+        return [bytes(o) for o in outs]

@@ -1,4 +1,4 @@
-"""Streaming PLA compression protocols (paper §5).
+"""Streaming PLA compression protocols (paper §5) — sequential reference.
 
 A protocol turns a :class:`~repro.core.types.MethodOutput` into the stream
 of *compression records* that would actually be transmitted / stored, and
@@ -22,6 +22,16 @@ compression-ratio accounting; what is compared is record bytes vs. the
 Every protocol also has a *byte-level codec* (``encode_* / decode_*``): the
 record stream is packed with ``struct`` and decoded back, proving both the
 byte accounting and the reconstruction algorithm are real.
+
+This module is the **golden reference**, deliberately record-at-a-time
+Python: one ``CompressionRecord`` per emission, one ``struct`` pack per
+field.  Production paths run the array form instead —
+:mod:`repro.core.protocol_engine` vectorizes the same four protocols
+(descriptors, §4.2 metrics, byte totals in one jit over ``(S, T)``
+batches; numpy-vectorized wire packing; a chunked ``ProtocolEmitter``) and
+is tested byte-for-byte and metric-for-metric against this module.  The
+``decode_*`` functions here decode the engine's bytes unchanged — the wire
+format is shared.
 """
 
 from __future__ import annotations

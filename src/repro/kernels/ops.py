@@ -27,18 +27,21 @@ from typing import List, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.jax_pla import SegmentOutput, check_window
+from repro.core.jax_pla import (PLARecords, SegmentOutput, check_window,
+                                records_to_events)
 from .angle import angle_init_carry, angle_pallas, angle_shift_carry
 from .swing import swing_init_carry, swing_pallas, swing_shift_carry
 from .common import BLOCK_S, BLOCK_T, assemble_segments, pad_streams
 from .disjoint import (disjoint_init_carry, disjoint_pallas,
                        disjoint_shift_carry)
 from .linear import linear_init_carry, linear_pallas, linear_shift_carry
-from .reconstruct import reconstruct_pallas
+from .reconstruct import reconstruct_error_pallas, reconstruct_pallas
 
 __all__ = ["angle_segment_tpu", "swing_segment_tpu",
            "disjoint_segment_tpu", "linear_segment_tpu",
-           "reconstruct_tpu", "KERNEL_SEGMENTERS", "StreamingSegmenter"]
+           "reconstruct_tpu", "reconstruct_error_tpu",
+           "reconstruct_records_tpu", "KERNEL_SEGMENTERS",
+           "StreamingSegmenter"]
 
 
 def _run(kernel_fn, y, eps, max_run, block_s, block_t, **kw):
@@ -94,6 +97,15 @@ def linear_segment_tpu(y: jax.Array, eps: float, max_run: int = 256,
 def reconstruct_tpu(seg: SegmentOutput, block_s: int = BLOCK_S,
                     block_t: int = BLOCK_T) -> jax.Array:
     """Per-point reconstruction of (S, T) streams via the Pallas kernel."""
+    brk_p, a_p, b_p, S, T, Sp, Tp = _pad_events(seg, block_s, block_t)
+    out, _ = reconstruct_pallas(brk_p.T, a_p.T, b_p.T,
+                                block_s=block_s, block_t=block_t)
+    return out.T[:S, :T]
+
+
+def _pad_events(seg: SegmentOutput, block_s: int, block_t: int):
+    """Pad (S, T) event arrays to the block grid (padded tail: all
+    breaks on the zero line, sliced off by the caller)."""
     breaks, a, b = seg
     S, T = a.shape
     Sp = (S + block_s - 1) // block_s * block_s
@@ -103,12 +115,38 @@ def reconstruct_tpu(seg: SegmentOutput, block_s: int = BLOCK_S,
         out = jnp.full((Sp, Tp), fill, x.dtype)
         return out.at[:S, :T].set(x)
 
-    brk_p = pad(breaks.astype(jnp.int8), 1)  # padded tail: all breaks
-    a_p = pad(a.astype(jnp.float32), 0.0)
-    b_p = pad(b.astype(jnp.float32), 0.0)
-    out, _ = reconstruct_pallas(brk_p.T, a_p.T, b_p.T,
-                                block_s=block_s, block_t=block_t)
-    return out.T[:S, :T]
+    return (pad(breaks.astype(jnp.int8), 1), pad(a.astype(jnp.float32), 0.0),
+            pad(b.astype(jnp.float32), 0.0), S, T, Sp, Tp)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_t"))
+def reconstruct_error_tpu(seg: SegmentOutput, y: jax.Array,
+                          block_s: int = BLOCK_S, block_t: int = BLOCK_T
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Fused per-point reconstruction + |error| of (S, T) streams.
+
+    One kernel pass returns ``(y_hat, |y_hat - y|)`` — the reconstruction
+    and the §4.2 approximation-error surface consumed by the batched
+    protocol metrics (singleton/burst masking happens protocol-side).
+    """
+    brk_p, a_p, b_p, S, T, Sp, Tp = _pad_events(seg, block_s, block_t)
+    y_p = jnp.zeros((Sp, Tp), jnp.float32).at[:S, :T].set(
+        y.astype(jnp.float32))
+    out, err, _ = reconstruct_error_pallas(brk_p.T, a_p.T, b_p.T, y_p.T,
+                                           block_s=block_s, block_t=block_t)
+    return out.T[:S, :T], err.T[:S, :T]
+
+
+@functools.partial(jax.jit, static_argnames=("t_len", "block_s", "block_t"))
+def reconstruct_records_tpu(rec: PLARecords, t_len: int,
+                            block_s: int = BLOCK_S, block_t: int = BLOCK_T
+                            ) -> jax.Array:
+    """Reconstruct (S, t_len) values from fixed-slot records via the
+    Pallas kernel (the device-resident alternative to
+    :func:`repro.core.jax_pla.decode_records` for serving paths that
+    already run the kernels)."""
+    return reconstruct_tpu(records_to_events(rec, t_len),
+                           block_s=block_s, block_t=block_t)
 
 
 KERNEL_SEGMENTERS = {

@@ -4,6 +4,9 @@ Reverse time walk: each point takes the line of the segment ending at the
 next break at-or-after it.  The grid's sequential dimension maps to time
 blocks in *reverse* order via the BlockSpec index map; the (a, b) carry
 lives in VMEM scratch and is resumed through the packed carry operand.
+Two kernel bodies share the walk: plain reconstruction, and a fused
+reconstruct-plus-|error| variant (:func:`reconstruct_error_pallas`) that
+feeds the batched §4.2 approximation-error metric in one pass.
 
 Carry rows (RECON_STATE_ROWS = 3, all f32; see kernels/common.py):
 0 ca (slope), 1 cv (value at anchor), 2 cd (distance to anchor).  The
@@ -64,6 +67,69 @@ def _recon_kernel(brk_ref, a_ref, v_ref, cin, out_ref, cout, ca, cv, cd,
         cout[0:1, :] = ca[...]
         cout[1:2, :] = cv[...]
         cout[2:3, :] = cd[...]
+
+
+def _recon_err_kernel(brk_ref, a_ref, v_ref, y_ref, cin, out_ref, err_ref,
+                      cout, ca, cv, cd, *, bt: int, nt: int):
+    """Fused variant for the §4.2 metrics engine: reconstruct and emit
+    ``|y' - y|`` in the same reverse walk (one pass over the stream
+    instead of reconstruct-then-subtract on the host)."""
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _load():
+        ca[...] = cin[0:1, :]
+        cv[...] = cin[1:2, :]
+        cd[...] = cin[2:3, :]
+
+    def step(k, _):
+        j = bt - 1 - k
+        brk = pl.load(brk_ref, (pl.ds(j, 1), slice(None))) != 0
+        at = pl.load(a_ref, (pl.ds(j, 1), slice(None)))
+        vt = pl.load(v_ref, (pl.ds(j, 1), slice(None)))
+        yt = pl.load(y_ref, (pl.ds(j, 1), slice(None)))
+        new_a = jnp.where(brk, at, ca[...])
+        new_v = jnp.where(brk, vt, cv[...])
+        new_d = jnp.where(brk, jnp.zeros_like(cd[...]), cd[...])
+        ca[...] = new_a
+        cv[...] = new_v
+        cd[...] = new_d + 1.0
+        recon = new_v - new_a * new_d
+        pl.store(out_ref, (pl.ds(j, 1), slice(None)), recon)
+        pl.store(err_ref, (pl.ds(j, 1), slice(None)), jnp.abs(recon - yt))
+        return 0
+
+    jax.lax.fori_loop(0, bt, step, 0)
+
+    @pl.when(ti == pl.num_programs(1) - 1)
+    def _store():
+        cout[0:1, :] = ca[...]
+        cout[1:2, :] = cv[...]
+        cout[2:3, :] = cd[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_t"))
+def reconstruct_error_pallas(brk_t: jax.Array, a_t: jax.Array,
+                             v_t: jax.Array, y_t: jax.Array,
+                             block_s: int = BLOCK_S, block_t: int = BLOCK_T,
+                             carry: jax.Array | None = None):
+    """Time-major (Tp, Sp) events + raw values -> (recon, |err|, carry).
+
+    Same carry contract as :func:`reconstruct_pallas` (reverse-chunked
+    streaming); the error output feeds the batched approximation-error
+    metric without a second pass over the reconstruction.
+    """
+    Tp, Sp = a_t.shape
+    if carry is None:
+        carry = recon_init_carry(Sp)
+    nt = Tp // block_t
+    kernel = functools.partial(_recon_err_kernel, bt=block_t, nt=nt)
+    scratch = [((1, block_s), jnp.float32)] * 3
+    out, err, carry_out = launch_segmenter(
+        kernel, (brk_t, a_t, v_t, y_t), block_s=block_s, block_t=block_t,
+        out_dtypes=(a_t.dtype, a_t.dtype), scratch=scratch,
+        reverse_time=True, carry=carry)
+    return out, err, carry_out
 
 
 @functools.partial(jax.jit, static_argnames=("block_s", "block_t"))

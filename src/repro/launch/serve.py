@@ -1,12 +1,17 @@
-"""Batched serving loop with optional PLA KV-cache compression.
+"""Batched serving loop with streaming PLA KV-cache compression.
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
-        --prompt-len 128 --gen 32 [--pla-kv]
+        --prompt-len 128 --gen 32 [--pla-kv --kv-hot 64 --kv-chunk 32]
 
-Prefills a batch of synthetic prompts, then decodes; with ``--pla-kv``,
-cold 256-token KV blocks are PLA-compressed (paper scenario 2) and decode
-runs against the reconstructed history, reporting storage savings and the
-logit perturbation vs. the exact cache.
+Prefills a batch of synthetic prompts, then decodes.  With ``--pla-kv``,
+KV tokens are compressed *as they cross the hot window* (paper scenario
+2): every ``--kv-chunk`` prefill steps the newly cold token columns of
+each layer are pushed through a :class:`StreamingKVCompressor`, which
+segments them incrementally through the carry-state engine and pops a
+finished :class:`CompressedKVBlock` every 256 tokens — no one-shot
+re-compression loop at the end of prefill.  Decode then runs against the
+reconstructed history, and the run reports storage savings plus the
+worst K/V perturbation vs. the exact cache.
 """
 
 import argparse
@@ -15,12 +20,19 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.compression.kv_cache import (PLAKVConfig, compress_kv_block,
-                                        decompress_kv_block,
-                                        kv_compression_stats)
+from repro.compression.kv_cache import (PLAKVConfig, StreamingKVCompressor,
+                                        compressed_block_stats,
+                                        decompress_kv_block)
 from repro.configs import ALIASES, get_config
 from repro.launch.specs import demo_batch
 from repro.models.zoo import build_model
+
+
+def _push_cold(comps, blocks, cache, lo: int, hi: int) -> None:
+    """Feed cache token columns [lo, hi) of every layer to its compressor."""
+    for layer, comp in enumerate(comps):
+        blocks[layer].extend(comp.push(cache.k[layer, :, lo:hi],
+                                       cache.v[layer, :, lo:hi]))
 
 
 def main():
@@ -32,6 +44,10 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--pla-kv", action="store_true")
     ap.add_argument("--kv-eps", type=float, default=0.1)
+    ap.add_argument("--kv-hot", type=int, default=64,
+                    help="hot window: most recent tokens kept raw")
+    ap.add_argument("--kv-chunk", type=int, default=32,
+                    help="push cold tokens to the compressor every N steps")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -42,33 +58,73 @@ def main():
     max_len = args.prompt_len + args.gen
     cache = api.make_cache(params, batch, max_len)
 
+    pla_on = args.pla_kv and hasattr(cache, "k")
+    kcfg = PLAKVConfig(block=256, eps=args.kv_eps)
+    if pla_on:
+        n_layers = cache.k.shape[0]
+        comps = [StreamingKVCompressor(kcfg) for _ in range(n_layers)]
+        blocks = [[] for _ in range(n_layers)]
+        pushed = 0
+
     decode = jax.jit(lambda p, t, c: api.decode(p, t, c))
     t0 = time.time()
     for i in range(args.prompt_len):
         logits, cache = decode(params, batch["tokens"][:, i:i + 1], cache)
+        if pla_on:
+            cold_end = i + 1 - args.kv_hot
+            if cold_end - pushed >= args.kv_chunk:
+                _push_cold(comps, blocks, cache, pushed, cold_end)
+                pushed = cold_end
     prefill_s = time.time() - t0
 
-    if args.pla_kv and hasattr(cache, "k") and args.prompt_len >= 256:
-        kcfg = PLAKVConfig(block=256, eps=args.kv_eps)
-        tot_raw = tot_comp = 0
-        kd_all, vd_all = [], []
-        for layer in range(cache.k.shape[0]):
-            kb, vb = cache.k[layer, :, :256], cache.v[layer, :, :256]
-            st = kv_compression_stats(kb, vb, kcfg)
-            tot_raw += st["raw_bytes"]
-            tot_comp += st["compressed_bytes"]
-            blk = compress_kv_block(kb, vb, kcfg)
-            kd, vd = decompress_kv_block(blk, kcfg)
-            kd_all.append(kd)
-            vd_all.append(vd)
-        cache = type(cache)(
-            cache.k.at[:, :, :256].set(
-                jnp.stack(kd_all).astype(cache.k.dtype)),
-            cache.v.at[:, :, :256].set(
-                jnp.stack(vd_all).astype(cache.v.dtype)),
-            cache.length)
-        print(f"PLA KV: {tot_comp} vs {tot_raw} raw bytes "
-              f"({tot_comp/tot_raw:.3f}x) at eps={kcfg.eps}")
+    if pla_on:
+        # Tokens that crossed the hot window by the end of prefill.
+        cold_end = max(args.prompt_len - args.kv_hot, 0)
+        if cold_end > pushed:
+            _push_cold(comps, blocks, cache, pushed, cold_end)
+            pushed = cold_end
+        n_blocks = len(blocks[0]) if blocks else 0
+        if n_blocks:
+            tot_raw = tot_comp = 0
+            max_err = 0.0
+            kd_layers, vd_layers = [], []
+            for layer, layer_blocks in enumerate(blocks):
+                kds, vds = [], []
+                for b, blk in enumerate(layer_blocks):
+                    lo, hi = b * kcfg.block, (b + 1) * kcfg.block
+                    st = compressed_block_stats(blk, kcfg)
+                    tot_raw += st["raw_bytes"]
+                    tot_comp += st["compressed_bytes"]
+                    kd, vd = decompress_kv_block(blk, kcfg)
+                    max_err = max(
+                        max_err,
+                        float(jnp.abs(kd - cache.k[layer, :, lo:hi]
+                                      .astype(jnp.float32)).max()),
+                        float(jnp.abs(vd - cache.v[layer, :, lo:hi]
+                                      .astype(jnp.float32)).max()))
+                    kds.append(kd)
+                    vds.append(vd)
+                kd_layers.append(jnp.concatenate(kds, axis=1))
+                vd_layers.append(jnp.concatenate(vds, axis=1))
+            # One scatter per tensor: .at[].set on the full (L,B,T,KH,hd)
+            # cache copies it whole, so per-block writes would be O(L*B_n)
+            # full-cache copies.
+            hi = n_blocks * kcfg.block
+            cache = type(cache)(
+                cache.k.at[:, :, :hi].set(
+                    jnp.stack(kd_layers).astype(cache.k.dtype)),
+                cache.v.at[:, :, :hi].set(
+                    jnp.stack(vd_layers).astype(cache.v.dtype)),
+                cache.length)
+            print(f"PLA KV (streaming): {n_blocks} cold block(s)/layer, "
+                  f"{tot_comp} vs {tot_raw} raw bytes "
+                  f"({tot_comp/tot_raw:.3f}x) at eps={kcfg.eps}, "
+                  f"max |err|={max_err:.3g}; "
+                  f"{comps[0].pending_tokens} tokens pending")
+        else:
+            print(f"PLA KV (streaming): no block completed "
+                  f"(cold tokens={pushed} < block={kcfg.block}); "
+                  f"{comps[0].pending_tokens} tokens pending")
 
     tok = batch["tokens"][:, -1:]
     t0 = time.time()
