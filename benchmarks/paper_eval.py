@@ -4,6 +4,18 @@ Runs the 13 (method x protocol) combinations of Table 2 over the four
 (synthetic-surrogate) datasets at the paper's three error thresholds and
 aggregates the three per-point streaming metrics exactly as the paper's
 box plots do (mean, quartiles, 1.5-IQR whiskers, extremes).
+
+Since PR 4 every combination — including the continuous ("C") and mixed
+("M") methods — rides the batched ``(S, T)`` engine
+(:func:`repro.core.evaluate.evaluate_batched`): the dataset's files are
+stacked as stream rows and each combination is one vectorized
+segmentation + protocol/metrics pass, no per-record Python.  The
+sequential pipeline (``pipeline="sequential"``) is kept as the golden
+reference; ``tests/test_evaluate_batched.py`` asserts the two agree.
+
+``BENCH_SMOKE=1 python -m benchmarks.paper_eval`` runs all 13
+combinations on a small synthetic batch and writes the top-level
+``BENCH_paper.json`` artifact (CI uploads it with the other BENCH files).
 """
 
 from __future__ import annotations
@@ -15,44 +27,56 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import COMBINATIONS, evaluate_all
-from repro.core.metrics import PointMetrics
+from repro.core import COMBINATIONS, evaluate_all, evaluate_batched
+from repro.core.metrics import PointMetrics, batched_summary
 from repro.data.synthetic import EPS_GRID, make_dataset, ucr_eps
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "paper")
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_paper.json")
 
 
 def _agg(metrics_list: List[PointMetrics]) -> Dict:
+    """Pool per-file metrics and compute the shared box-plot statistics
+    (same metrics.batched_summary math the batched pipeline uses via
+    pooled_summary, so the two pipelines' figures cannot drift)."""
     out = {}
     for name in ("ratio", "latency", "error"):
         v = np.concatenate([getattr(m, name) for m in metrics_list])
-        q25, q75 = np.percentile(v, [25, 75])
-        iqr = q75 - q25
-        out[name] = {
-            "mean": float(v.mean()),
-            "q25": float(q25), "q75": float(q75),
-            "whisker_lo": float(v[v >= q25 - 1.5 * iqr].min()),
-            "whisker_hi": float(v[v <= q75 + 1.5 * iqr].max()),
-            "min": float(v.min()), "max": float(v.max()),
-        }
+        out[name] = {k: float(s[0])
+                     for k, s in batched_summary(v[None, :]).items()}
     return out
 
 
+def _resolve_eps(traces, eps_spec) -> np.ndarray:
+    """Per-trace eps vector (UCR thresholds are percent-of-range)."""
+    return np.asarray([ucr_eps(ys, eps_spec) if isinstance(eps_spec, str)
+                       else float(eps_spec) for _, ys in traces], np.float32)
+
+
 def eval_dataset(name: str, n: int = 20000, files: int = 1,
-                 seed: int = 0) -> Dict:
-    """Returns {eps_label: {combo_key: {metric: stats}}}."""
+                 seed: int = 0, pipeline: str = "batched") -> Dict:
+    """Returns {eps_label: {combo_key: {metric: stats}}}.
+
+    ``pipeline="batched"`` stacks the dataset's files as stream rows and
+    evaluates every Table-2 combination through ``evaluate_batched``;
+    ``"sequential"`` is the exact per-record reference pipeline.
+    """
     traces = make_dataset(name, n=n, seed=seed, files=files)
+    if pipeline == "batched":
+        return _eval_batched(traces, EPS_GRID[name])
+    if pipeline != "sequential":
+        raise ValueError(f"pipeline must be batched|sequential; {pipeline!r}")
     results: Dict = {}
     for eps_spec in EPS_GRID[name]:
         per_combo: Dict[str, List[PointMetrics]] = {k: []
                                                     for k in COMBINATIONS}
         per_combo_overall: Dict[str, List[float]] = {k: []
                                                      for k in COMBINATIONS}
-        for ts, ys in traces:
-            eps = ucr_eps(ys, eps_spec) if isinstance(eps_spec, str) \
-                else float(eps_spec)
-            res = evaluate_all(ts, ys, eps)
+        eps_vec = _resolve_eps(traces, eps_spec)
+        for (ts, ys), eps in zip(traces, eps_vec):
+            res = evaluate_all(ts, ys, float(eps))
             for k, r in res.items():
                 per_combo[k].append(r.metrics)
                 per_combo_overall[k].append(r.overall_ratio)
@@ -60,6 +84,21 @@ def eval_dataset(name: str, n: int = 20000, files: int = 1,
             k: {**_agg(v),
                 "overall_ratio": float(np.mean(per_combo_overall[k]))}
             for k, v in per_combo.items()}
+    return results
+
+
+def _eval_batched(traces, eps_specs) -> Dict:
+    y = np.stack([ys for _, ys in traces]).astype(np.float32)
+    results: Dict = {}
+    for eps_spec in eps_specs:
+        eps_vec = _resolve_eps(traces, eps_spec)
+        combos: Dict[str, Dict] = {}
+        for k, (method, proto) in COMBINATIONS.items():
+            r = evaluate_batched(method, proto, y, eps_vec)
+            stats = r.metrics.pooled_summary()
+            stats["overall_ratio"] = float(np.mean(r.overall_ratio))
+            combos[k] = stats
+        results[str(eps_spec)] = combos
     return results
 
 
@@ -89,3 +128,34 @@ def run_figure(dataset: str, n: int = 20000, files: int = 1) -> Dict:
     print_figure(dataset, res)
     print(f"[{dataset}: {time.time()-t0:.1f}s]")
     return res
+
+
+def paper_smoke(n: int = 1024, files: int = 2, dataset: str = "gps") -> Dict:
+    """All 13 Table-2 combinations through ``evaluate_batched`` on a small
+    synthetic batch; writes the top-level ``BENCH_paper.json``."""
+    import jax
+
+    t0 = time.time()
+    res = eval_dataset(dataset, n=n, files=files)
+    report = {
+        "config": {"dataset": dataset, "n": n, "files": files,
+                   "pipeline": "batched",
+                   "backend": jax.default_backend()},
+        "combinations": sorted(COMBINATIONS),
+        "results": res,
+        "seconds": time.time() - t0,
+    }
+    with open(BENCH_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    print_figure(dataset, res)
+    print(f"[paper smoke: {len(COMBINATIONS)} combinations x "
+          f"{len(res)} eps in {report['seconds']:.1f}s -> {BENCH_PATH}]")
+    return report
+
+
+if __name__ == "__main__":
+    if bool(int(os.environ.get("BENCH_SMOKE", "0"))):
+        paper_smoke()
+    else:
+        for ds in EPS_GRID:
+            run_figure(ds)

@@ -51,10 +51,13 @@ class TelemetryCompressor:
         self.eps = eps
         self.method = method
         self.flush_every = flush_every
-        # Only the jnp carry-state engine's methods stream; the remaining
-        # sequential methods (continuous/mixed) keep the batch flush path.
-        from repro.core.jax_pla import STREAMING_METHODS
-        self.streaming = streaming and method in STREAMING_METHODS
+        # Only the uniform-width streaming methods feed the per-flush wire
+        # path; the deferred-output methods (continuous/mixed) release
+        # event columns one segment late, which would starve the periodic
+        # sender, so they keep the batch flush path.
+        from repro.core.jax_pla import DEFERRED_METHODS, STREAMING_METHODS
+        self.streaming = streaming and method in STREAMING_METHODS \
+            and method not in DEFERRED_METHODS
         self.step_every = max(1, step_every)
         self.buffers: Dict[str, List[float]] = {}
         self.steps: Dict[str, List[int]] = {}

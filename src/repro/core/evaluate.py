@@ -39,13 +39,26 @@ from .protocol_engine import batched_point_metrics, protocol_nbytes
 from .protocols import PROTOCOL_CAPS, PROTOCOLS
 from .types import POINT_BYTES, CompressionRecord
 
-# Batched (S, T) segmenters of the four streaming methods; continuous and
-# mixed stay sequential-only (legacy pipeline below).
+# Batched (S, T) segmenters — all six Table-2 methods (continuous/mixed
+# are the deferred-event scans of PR 4; the sequential pipeline below is
+# the golden reference).
 BATCHED_SEGMENTERS = {
     "angle": jax_pla.angle_segment,
     "swing": jax_pla.swing_segment,
     "disjoint": jax_pla.disjoint_segment,
     "linear": jax_pla.linear_segment,
+    "continuous": jax_pla.continuous_segment,
+    "mixed": jax_pla.mixed_segment,
+}
+
+# Knot convention of each method's SegmentOutput, as understood by the
+# protocol engine: SwingFilter emits joint knots, continuous a connected
+# polyline with one-segment-deferred emission, mixed a joint/disjoint mix
+# (detected from line continuity), the rest disjoint knots.
+METHOD_KNOT_KINDS = {
+    "swing": "joint",
+    "continuous": "continuous",
+    "mixed": "mixed",
 }
 
 # Table 2 of the paper.
@@ -89,11 +102,22 @@ def run_combination(key: str, ts, ys, eps: float) -> EvalResult:
 
 
 def evaluate(method_name: str, proto_name: str, ts, ys, eps: float,
-             key: str | None = None) -> EvalResult:
+             key: str | None = None,
+             max_run: Optional[int] = None) -> EvalResult:
+    """Sequential golden-reference evaluation of one combination.
+
+    ``max_run`` optionally caps segments for *every* method (the batched
+    engine's window bounds its hull state, so `evaluate_batched` always
+    caps at ``PROTOCOL_CAPS[protocol] or 256``; pass the same value here
+    to compare the two pipelines like-for-like).
+    """
     cap = PROTOCOL_CAPS[proto_name]
-    out = METHODS[method_name](ts, ys, eps, max_run=cap) \
-        if method_name in ("angle", "disjoint", "linear") \
-        else METHODS[method_name](ts, ys, eps)
+    if max_run is not None:
+        out = METHODS[method_name](ts, ys, eps, max_run=max_run)
+    elif method_name in ("angle", "disjoint", "linear"):
+        out = METHODS[method_name](ts, ys, eps, max_run=cap)
+    else:
+        out = METHODS[method_name](ts, ys, eps)
     records: List[CompressionRecord] = PROTOCOLS[proto_name](out, ts, ys)
     pm = point_metrics(records, ts, ys, eps=eps)
     return EvalResult(
@@ -122,7 +146,7 @@ class BatchedEvalResult:
 
     method: str
     protocol: str
-    eps: float
+    eps: "float | np.ndarray"
     n_streams: int
     n_points: int
     metrics: BatchedPointMetrics
@@ -135,16 +159,18 @@ class BatchedEvalResult:
         return s
 
 
-def evaluate_batched(method_name: str, proto_name: str, y, eps: float, *,
+def evaluate_batched(method_name: str, proto_name: str, y, eps, *,
                      max_run: Optional[int] = None,
                      reconstruct: str = "lines",
                      check_eps: bool = True) -> BatchedEvalResult:
     """Evaluate one (method x protocol) pair over an (S, T) stream batch.
 
     Streams live on the index grid (``ts = 0..T-1``).  Segmentation runs
-    through the batched jnp engine; protocol structure, byte accounting
-    and the three §4.2 metrics come from the vectorized
-    :mod:`repro.core.protocol_engine` — no per-record Python.
+    through the batched jnp engine (all six Table-2 methods); protocol
+    structure, byte accounting and the three §4.2 metrics come from the
+    vectorized :mod:`repro.core.protocol_engine` — no per-record Python.
+    ``eps`` may be a scalar or a per-stream ``(S,)`` array (the UCR
+    percent-of-range thresholds differ per trace).
 
     ``reconstruct`` selects the approximation-error path: ``"lines"``
     evaluates the fitted lines in float64 on the host (bit-equal to the
@@ -164,7 +190,8 @@ def evaluate_batched(method_name: str, proto_name: str, y, eps: float, *,
             f"max_run={max_run} exceeds the {proto_name!r} counter cap "
             f"({cap} points): the byte accounting would describe an "
             f"unencodable wire format")
-    knot_kind = "joint" if method_name == "swing" else "disjoint"
+    knot_kind = METHOD_KNOT_KINDS.get(method_name, "disjoint")
+    eps = np.asarray(eps, np.float32)  # scalar or per-stream (S,)
     seg = BATCHED_SEGMENTERS[method_name](y, eps, max_run=max_run)
     abs_err = None
     if reconstruct == "pallas":

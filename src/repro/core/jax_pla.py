@@ -6,14 +6,23 @@ walked by ``jax.lax.scan``, and the dynamic convex hulls are replaced by
 exact bounded-window vector reductions (the paper's own protocols cap
 segments at 256 points, so the current segment always fits a window).
 
-Three segmenters, mirroring the methods the paper pairs with its streaming
-protocols:
+All six Table-2 segmenters:
 
 - :func:`angle_segment`    — O(1)-state greedy (Angle, §3.1)
+- :func:`swing_segment`    — O(1)-state greedy, joint knots (SwingFilter)
 - :func:`disjoint_segment` — optimal greedy (ConvexHull, §3.2) with the
   hull replaced by an exact masked argmin/argmax over the run window
 - :func:`linear_segment`   — best-fit line (Linear, §3.5) with window
   revalidation instead of hull checks
+- :func:`continuous_segment` — connected polyline (§3.3): a *gate*
+  interval + run fitter with the knot choice deferred one segment
+- :func:`mixed_segment`    — MixedPLA (§3.4): disjoint stage-1 runs with
+  a joint-merge decision one run behind the frontier
+
+The last two are **deferred** (``DEFERRED_METHODS``): a break finalizes a
+segment one knot in the past, so their scan emits position-tagged events
+``(ev, pos, a, v)`` that the wrappers scatter into the canonical event
+arrays, and their chunked output has data-dependent width (below).
 
 All take ``y: (S, T)`` on the regular grid ``t = 0..T-1`` (the framework's
 streams — gradient rows, KV-cache channels, telemetry — are index-stamped)
@@ -50,6 +59,15 @@ Concatenating all :func:`step_chunk` outputs plus the :func:`flush` column
 reproduces the offline ``(S, T)`` :class:`SegmentOutput` exactly.  Offline
 functions are thin wrappers over one full-length chunk of the same
 building blocks, so the equality is structural, not coincidental.
+
+For the deferred methods (``continuous`` / ``mixed``) the same
+concatenation guarantee holds, but each :func:`step_chunk` returns a
+**data-dependent** number of columns (possibly zero): an event can only
+be released once no future break may target its position (the last fixed
+knot bounds that frontier), so finalized columns are buffered host-side
+and ``flush`` releases the remainder.  Widths differ, positions do not:
+output column ``j`` of the concatenation is always absolute position
+``j``.
 Chunk boundaries are host-side (Python) decisions; the per-chunk work is a
 single jitted ``lax.scan`` whose absolute-time offset is a traced scalar —
 pushing many chunks does not retrace (one trace per distinct chunk width).
@@ -82,14 +100,17 @@ from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
     "SegmentOutput", "angle_segment", "disjoint_segment", "linear_segment",
-    "swing_segment",
+    "swing_segment", "continuous_segment", "mixed_segment",
     "SegmenterState", "init_state", "step_chunk", "flush",
-    "STREAMING_METHODS", "MAX_STREAM_T", "check_window",
+    "STREAMING_METHODS", "DEFERRED_METHODS", "MAX_STREAM_T", "check_window",
+    "mixed_ring",
     "propagate_lines", "to_records", "decode_records", "records_to_events",
     "records_init", "records_append", "records_finalize",
+    "scatter_events", "release_deferred", "assemble_deferred_events",
     "singlestream_nbytes", "PLARecords",
 ]
 
@@ -131,6 +152,7 @@ class _MethodImpl(NamedTuple):
     flush: Callable
     int_ts: bool      # scan times as int32 (ring methods) vs value dtype
     windowed: bool    # takes a window parameter
+    deferred: bool = False  # emits (ev, pos, a, v) events at past positions
 
 
 # ---- Angle: O(1) state per stream -----------------------------------------
@@ -436,6 +458,402 @@ def _linear_flush(carry, t_last):
     return va, vv
 
 
+# ---- Continuous: connected polyline, gate-deferred knot choice -------------
+#
+# The sequential reference (methods.run_continuous) keeps a HullFitter over
+# a *gate* interval (the feasible-value range inherited from the previous
+# segment at its last point) plus the current run's error intervals; at a
+# break it fixes the knot at the gate (mid-line evaluation) and only then
+# can the *previous* segment's line — through the two bounding knots — be
+# emitted.  Events therefore target positions one segment in the past:
+# deferred methods emit ``(ev, pos, a, v)`` tuples per step instead of the
+# aligned ``(brk, a, v)`` column, and the wrappers scatter them by absolute
+# position (see ``_segment_offline_deferred`` / the pending-buffer release
+# logic in :func:`step_chunk`).
+#
+# Carry (per stream): ring of run values, gate (g_pos, glo, ghi), the
+# extreme lines of the gate+run fitter anchored at ``g_pos``, the run
+# length, a lines-initialized flag, and the last *fixed* knot
+# ``(k_pos, k_val)`` (left end of the pending segment).  The convex-hull
+# pivot searches become exact masked reductions over the run window with
+# the gate as one extra constraint (same argument as the disjoint method:
+# the binding extremum over all constraints equals the hull extremum).
+
+def _continuous_init(y0, eps, max_run, window, t0):
+    S = y0.shape[0]
+    dtype = y0.dtype
+    W = window
+    t0 = jnp.asarray(t0, jnp.int32)
+    ybuf0 = jnp.zeros((S, W), dtype).at[:, t0 % W].set(y0)
+    z = jnp.zeros((S,), dtype)
+    zi = jnp.zeros((S,), jnp.int32)
+    return (ybuf0,
+            jnp.full((S,), t0, jnp.int32),    # g_pos (gate position)
+            y0 - eps, y0 + eps,               # glo, ghi
+            jnp.ones((S,), jnp.int32),        # run_len (sequential i - i0)
+            zi,                               # has2: extreme lines valid
+            z, z, z, z,                       # a_lo, v_lo, a_hi, v_hi @ g
+            zi, jnp.full((S,), t0, jnp.int32), z)  # has_k, k_pos, k_val
+
+
+def _continuous_step(eps, max_run, window, state, inp):
+    (ybuf, g_pos, glo, ghi, rl, has2,
+     a_lo, v_lo, a_hi, v_hi, has_k, k_pos, k_val) = state
+    W = window
+    t_i, yt = inp
+    S = yt.shape[0]
+    dtype = yt.dtype
+    dg = (t_i - g_pos).astype(dtype)          # t - gate position, >= 1
+
+    lo_i, hi_i = yt - eps, yt + eps
+    vmax = a_hi * dg + v_hi
+    vmin = a_lo * dg + v_lo
+    feas = (vmax >= lo_i) & (vmin <= hi_i)
+    cap_hit = rl >= max_run
+    brk = (has2 == 1) & (~feas | cap_hit)
+
+    # Knot fixed by this break: mid-line evaluation at the gate (both
+    # extreme lines are anchored at g_pos, so the parameter-space midpoint
+    # evaluates to the plain average there).
+    Kv = 0.5 * (v_lo + v_hi)
+    dk = (g_pos - k_pos).astype(dtype)
+    dk_safe = jnp.where(dk > 0, dk, 1.0)
+    ev = brk & (has_k == 1)
+    a_ev = jnp.where(ev, (Kv - k_val) / dk_safe, 0.0)
+    v_ev = jnp.where(ev, Kv, 0.0)
+    pos_ev = jnp.where(ev, g_pos, -1)
+
+    # ---- run window (positions strictly after the gate) ----------------
+    abs_pos = t_i - 1 - jnp.arange(W)
+    slot = (abs_pos % W).astype(jnp.int32)
+    yw = jnp.take_along_axis(ybuf, jnp.broadcast_to(slot, (S, W)), axis=1)
+    apf = abs_pos.astype(dtype)[None, :]
+    gpf = g_pos.astype(dtype)
+    in_run = apf > gpf[:, None]
+    dtw = t_i.astype(dtype) - apf
+    dtw_safe = jnp.where(in_run, dtw, 1.0)
+
+    # ---- extreme-line retightening (gate is one extra constraint) ------
+    need_hi = vmax > hi_i
+    s_hi = (hi_i[:, None] - (yw - eps[:, None])) / dtw_safe
+    s_hi = jnp.where(in_run, s_hi, _BIG)
+    a_hi_new = jnp.minimum(jnp.min(s_hi, axis=1), (hi_i - glo) / dg)
+    v_hi_new = hi_i - a_hi_new * dg
+    a_hi_u = jnp.where(need_hi, a_hi_new, a_hi)
+    v_hi_u = jnp.where(need_hi, v_hi_new, v_hi)
+
+    need_lo = vmin < lo_i
+    s_lo = (lo_i[:, None] - (yw + eps[:, None])) / dtw_safe
+    s_lo = jnp.where(in_run, s_lo, -_BIG)
+    a_lo_new = jnp.maximum(jnp.max(s_lo, axis=1), (lo_i - ghi) / dg)
+    v_lo_new = lo_i - a_lo_new * dg
+    a_lo_u = jnp.where(need_lo, a_lo_new, a_lo)
+    v_lo_u = jnp.where(need_lo, v_lo_new, v_lo)
+
+    # Second constraint (gate + first run point) initializes the lines.
+    first = has2 == 0
+    a_hi_n = jnp.where(first, (hi_i - glo) / dg, a_hi_u)
+    v_hi_n = jnp.where(first, glo, v_hi_u)
+    a_lo_n = jnp.where(first, (lo_i - ghi) / dg, a_lo_u)
+    v_lo_n = jnp.where(first, ghi, v_lo_u)
+
+    # ---- break: next gate = feasible range of the wedge through K ------
+    ds = apf - gpf[:, None]
+    ds_safe = jnp.where(in_run, ds, 1.0)
+    w1 = jnp.where(in_run, (yw - eps[:, None] - Kv[:, None]) / ds_safe, -_BIG)
+    w2 = jnp.where(in_run, (yw + eps[:, None] - Kv[:, None]) / ds_safe, _BIG)
+    wslo = jnp.max(w1, axis=1)
+    wshi = jnp.min(w2, axis=1)
+    dgn = (t_i - 1 - g_pos).astype(dtype)     # distance gate -> new gate
+    glo_b = Kv + wslo * dgn
+    ghi_b = Kv + wshi * dgn
+    # New fitter = gate' + this point's interval (dt == 1 from the gate).
+    a_hi_b = hi_i - glo_b
+    a_lo_b = lo_i - ghi_b
+
+    # ---- commit --------------------------------------------------------
+    new_state = (ybuf.at[:, (t_i % W).astype(jnp.int32)].set(yt),
+                 jnp.where(brk, t_i - 1, g_pos),
+                 jnp.where(brk, glo_b, glo), jnp.where(brk, ghi_b, ghi),
+                 jnp.where(brk, 1, rl + 1),
+                 jnp.ones_like(has2),
+                 jnp.where(brk, a_lo_b, a_lo_n),
+                 jnp.where(brk, ghi_b, v_lo_n),
+                 jnp.where(brk, a_hi_b, a_hi_n),
+                 jnp.where(brk, glo_b, v_hi_n),
+                 jnp.where(brk, 1, has_k),
+                 jnp.where(brk, g_pos, k_pos),
+                 jnp.where(brk, Kv, k_val))
+    return new_state, (ev, pos_ev, a_ev, v_ev)
+
+
+def _continuous_flush(eps, window, carry, t_last):
+    """Fix the last knot; emit the pending segment + the trailing one.
+
+    Deferred flushes return ``((ev1, pos1, a1, v1), (a2, v2))``: an
+    optional event for the still-pending segment plus the trailing
+    segment's line (its event always lands at ``t_last``).
+    """
+    (ybuf, g_pos, glo, ghi, rl, has2,
+     a_lo, v_lo, a_hi, v_hi, has_k, k_pos, k_val) = carry
+    dtype = glo.dtype
+    Kv = jnp.where(has2 == 1, 0.5 * (v_lo + v_hi), 0.5 * (glo + ghi))
+    dk = (g_pos - k_pos).astype(dtype)
+    dk_safe = jnp.where(dk > 0, dk, 1.0)
+    ev1 = has_k == 1
+    a1 = jnp.where(ev1, (Kv - k_val) / dk_safe, 0.0)
+    v1 = jnp.where(ev1, Kv, 0.0)
+    am = jnp.where(has2 == 1, 0.5 * (a_lo + a_hi), 0.0)
+    dl = (jnp.asarray(t_last, jnp.int32) - g_pos).astype(dtype)
+    return (ev1, g_pos, a1, v1), (am, Kv + am * dl)
+
+
+# ---- MixedPLA: disjoint stage-1 runs + joint-merge stage-2 -----------------
+#
+# Stage 1 is exactly the disjoint scan (same extreme lines / window
+# retightening); stage 2 holds the *previous* finalized run and, when the
+# current run breaks, decides joint-vs-disjoint by intersecting the two
+# feasible-value ranges at the previous run's last point (Luo et al.'s
+# single-segment-lookahead merge, methods.run_mixed).  A join places the
+# shared knot at that point and shortens the previous segment by one
+# position, so — as with ``continuous`` — events land one run in the past
+# and the method is *deferred*.  The ring must retain both runs:
+# :func:`mixed_ring` sizes it at ``2 * window + 8``.
+
+def mixed_ring(window: int) -> int:
+    """Ring rows for the mixed method: the join decision re-reads both the
+    previous run (<= window + 1 points with an absorbed knot) and the
+    current run (<= window points)."""
+    return 2 * window + 8
+
+
+def _mixed_init(y0, eps, max_run, window, t0):
+    S = y0.shape[0]
+    dtype = y0.dtype
+    W = window
+    t0 = jnp.asarray(t0, jnp.int32)
+    ybuf0 = jnp.zeros((S, W), dtype).at[:, t0 % W].set(y0)
+    z = jnp.zeros((S,), dtype)
+    zi = jnp.zeros((S,), jnp.int32)
+    return (ybuf0,
+            jnp.full((S,), t0, jnp.int32),    # run_start
+            jnp.ones((S,), jnp.int32),        # run_len
+            y0, y0,                           # y0, prev_y
+            z, z, z, z,                       # a_lo, v_lo, a_hi, v_hi
+            zi, zi, zi,                       # p_exists, p_i0, p_i1
+            zi, zi, z,                        # p_lk, p_lk_pos, p_lk_val
+            z, z, z, z)                       # p_lo, p_hi, p_amid, p_vmid
+
+
+def _mixed_step(eps, max_run, window, state, inp):
+    (ybuf, run_start, rl, y0, prev_y, a_lo, v_lo, a_hi, v_hi,
+     p_ex, p_i0, p_i1, p_lk, p_lk_pos, p_lk_val,
+     p_lo, p_hi, p_amid, p_vmid) = state
+    W = window
+    t_i, yt = inp
+    S = yt.shape[0]
+    dtype = yt.dtype
+    rel = (t_i - run_start).astype(dtype)
+
+    # ---- stage 1: disjoint feasibility + retightening (as _disjoint_step)
+    lo_i, hi_i = yt - eps, yt + eps
+    vmax = a_hi * rel + v_hi
+    vmin = a_lo * rel + v_lo
+    feas2 = (vmax >= lo_i) & (vmin <= hi_i)
+    feasible = jnp.where(rl >= 2, feas2, True)
+    cap_hit = rl >= max_run
+    brk = ~feasible | cap_hit
+
+    abs_pos = t_i - 1 - jnp.arange(W)
+    slot = (abs_pos % W).astype(jnp.int32)
+    yw = jnp.take_along_axis(ybuf, jnp.broadcast_to(slot, (S, W)), axis=1)
+    apf = abs_pos.astype(dtype)[None, :]
+    in_run = (abs_pos[None, :] >= run_start[:, None]) & (abs_pos >= 0)
+    dtw_safe = jnp.where(in_run, t_i.astype(dtype) - apf, 1.0)
+
+    need_hi = vmax > hi_i
+    s_hi = jnp.where(in_run, (hi_i[:, None] - (yw - eps[:, None]))
+                     / dtw_safe, _BIG)
+    a_hi_new = jnp.min(s_hi, axis=1)
+    a_hi_u = jnp.where(need_hi, a_hi_new, a_hi)
+    v_hi_u = jnp.where(need_hi, hi_i - a_hi_new * rel, v_hi)
+
+    need_lo = vmin < lo_i
+    s_lo = jnp.where(in_run, (lo_i[:, None] - (yw + eps[:, None]))
+                     / dtw_safe, -_BIG)
+    a_lo_new = jnp.max(s_lo, axis=1)
+    a_lo_u = jnp.where(need_lo, a_lo_new, a_lo)
+    v_lo_u = jnp.where(need_lo, lo_i - a_lo_new * rel, v_lo)
+
+    rel_s = jnp.maximum(rel, 1.0)
+    second = rl == 1
+    a_hi_n = jnp.where(second, (hi_i - (y0 - eps)) / rel_s, a_hi_u)
+    v_hi_n = jnp.where(second, y0 - eps, v_hi_u)
+    a_lo_n = jnp.where(second, (lo_i - (y0 + eps)) / rel_s, a_lo_u)
+    v_lo_n = jnp.where(second, y0 + eps, v_lo_u)
+
+    # ---- stage 2: join decision at the current run's break -------------
+    tau = run_start - 1                       # prev run's last point
+    tauf = tau.astype(dtype)
+
+    # prev feasible range + mid line when prev carries a left knot:
+    # wedge through (p_lk_pos, p_lk_val) over prev's own points.
+    lkpf = p_lk_pos.astype(dtype)
+    m_prev = (abs_pos[None, :] >= p_i0[:, None]) \
+        & (abs_pos[None, :] < p_i1[:, None]) \
+        & (abs_pos[None, :] > p_lk_pos[:, None])
+    ds = jnp.where(m_prev, apf - lkpf[:, None], 1.0)   # > 0 under mask
+    lk_slo = jnp.max(jnp.where(
+        m_prev, (yw - eps[:, None] - p_lk_val[:, None]) / ds, -_BIG), axis=1)
+    lk_shi = jnp.min(jnp.where(
+        m_prev, (yw + eps[:, None] - p_lk_val[:, None]) / ds, _BIG), axis=1)
+    dtl = tauf - lkpf
+    dtl_safe = jnp.where(dtl > 0, dtl, 1.0)
+    lk_lo = p_lk_val + lk_slo * dtl
+    lk_hi = p_lk_val + lk_shi * dtl
+    lk_amid = 0.5 * (lk_slo + lk_shi)
+    lk_vmid = p_lk_val + lk_amid * dtl
+    plo = jnp.where(p_lk == 1, lk_lo, p_lo)
+    phi = jnp.where(p_lk == 1, lk_hi, p_hi)
+
+    # current run's feasible range at tau (one step before its start).
+    cv1 = v_lo - a_lo
+    cv2 = v_hi - a_hi
+    clo = jnp.where(rl >= 2, jnp.minimum(cv1, cv2), -_BIG)
+    chi = jnp.where(rl >= 2, jnp.maximum(cv1, cv2), _BIG)
+
+    jlo = jnp.maximum(plo, clo)
+    jhi = jnp.minimum(phi, chi)
+    join = brk & (p_ex == 1) & (p_i1 - p_i0 >= 2) & (jlo <= jhi)
+    vK = 0.5 * (jlo + jhi)
+
+    # Joint emission: prev shortened by one point, line through the knots.
+    m_jw = (abs_pos[None, :] >= p_i0[:, None]) \
+        & (abs_pos[None, :] < (p_i1 - 1)[:, None])
+    ds2 = jnp.where(m_jw, apf - tauf[:, None], 1.0)    # < 0 under mask
+    jb1 = (yw - eps[:, None] - vK[:, None]) / ds2
+    jb2 = (yw + eps[:, None] - vK[:, None]) / ds2
+    jw_slo = jnp.max(jnp.where(m_jw, jb2, -_BIG), axis=1)
+    jw_shi = jnp.min(jnp.where(m_jw, jb1, _BIG), axis=1)
+    aJ = jnp.where(p_lk == 1, (vK - p_lk_val) / dtl_safe,
+                   0.5 * (jw_slo + jw_shi))
+    # Disjoint emission: prev's chosen mid line, value at its last point.
+    aN = jnp.where(p_lk == 1, lk_amid, p_amid)
+    vN = jnp.where(p_lk == 1, lk_vmid, p_vmid)
+
+    ev = brk & (p_ex == 1)
+    pos_ev = jnp.where(ev, jnp.where(join, tau - 1, tau), -1)
+    a_ev = jnp.where(ev, jnp.where(join, aJ, aN), 0.0)
+    v_ev = jnp.where(ev, jnp.where(join, vK - aJ, vN), 0.0)
+
+    # The breaking run becomes prev: cache its free-case range/mid at its
+    # last point (t - 1) before stage-1 state resets.
+    rel2 = rel - 1.0
+    nv1 = v_lo + a_lo * rel2
+    nv2 = v_hi + a_hi * rel2
+    np_lo = jnp.where(rl >= 2, jnp.minimum(nv1, nv2), prev_y - eps)
+    np_hi = jnp.where(rl >= 2, jnp.maximum(nv1, nv2), prev_y + eps)
+    np_amid = jnp.where(rl >= 2, 0.5 * (a_lo + a_hi), 0.0)
+    np_vmid = jnp.where(rl >= 2, 0.5 * (v_lo + v_hi) + np_amid * rel2,
+                        prev_y)
+
+    # ---- commit --------------------------------------------------------
+    z = jnp.zeros_like(a_lo)
+    new_state = (ybuf.at[:, (t_i % W).astype(jnp.int32)].set(yt),
+                 jnp.where(brk, t_i, run_start),
+                 jnp.where(brk, 1, rl + 1),
+                 jnp.where(brk, yt, y0), yt,
+                 jnp.where(brk, z, a_lo_n), jnp.where(brk, z, v_lo_n),
+                 jnp.where(brk, z, a_hi_n), jnp.where(brk, z, v_hi_n),
+                 jnp.where(brk, 1, p_ex),
+                 jnp.where(brk, jnp.where(join, tau, run_start), p_i0),
+                 jnp.where(brk, t_i, p_i1),
+                 jnp.where(brk, join.astype(jnp.int32), p_lk),
+                 jnp.where(brk & join, tau, p_lk_pos),
+                 jnp.where(brk & join, vK, p_lk_val),
+                 jnp.where(brk, np_lo, p_lo), jnp.where(brk, np_hi, p_hi),
+                 jnp.where(brk, np_amid, p_amid),
+                 jnp.where(brk, np_vmid, p_vmid))
+    return new_state, (ev, pos_ev, a_ev, v_ev)
+
+
+def _mixed_flush(eps, window, carry, t_last):
+    """Final join decision (prev vs the trailing run) + trailing segment."""
+    (ybuf, run_start, rl, y0, prev_y, a_lo, v_lo, a_hi, v_hi,
+     p_ex, p_i0, p_i1, p_lk, p_lk_pos, p_lk_val,
+     p_lo, p_hi, p_amid, p_vmid) = carry
+    S, W = ybuf.shape
+    dtype = prev_y.dtype
+    t_last = jnp.asarray(t_last, jnp.int32)
+
+    tau = run_start - 1
+    tauf = tau.astype(dtype)
+    abs_pos = t_last - jnp.arange(W)
+    slot = (abs_pos % W).astype(jnp.int32)
+    yw = jnp.take_along_axis(ybuf, jnp.broadcast_to(slot, (S, W)), axis=1)
+    apf = abs_pos.astype(dtype)[None, :]
+
+    # -- decision between prev and the trailing run (as in _mixed_step) --
+    lkpf = p_lk_pos.astype(dtype)
+    m_prev = (abs_pos[None, :] >= p_i0[:, None]) \
+        & (abs_pos[None, :] < p_i1[:, None]) \
+        & (abs_pos[None, :] > p_lk_pos[:, None])
+    ds = jnp.where(m_prev, apf - lkpf[:, None], 1.0)
+    lk_slo = jnp.max(jnp.where(
+        m_prev, (yw - eps[:, None] - p_lk_val[:, None]) / ds, -_BIG), axis=1)
+    lk_shi = jnp.min(jnp.where(
+        m_prev, (yw + eps[:, None] - p_lk_val[:, None]) / ds, _BIG), axis=1)
+    dtl = tauf - lkpf
+    dtl_safe = jnp.where(dtl > 0, dtl, 1.0)
+    lk_amid = 0.5 * (lk_slo + lk_shi)
+    plo = jnp.where(p_lk == 1, p_lk_val + lk_slo * dtl, p_lo)
+    phi = jnp.where(p_lk == 1, p_lk_val + lk_shi * dtl, p_hi)
+
+    cv1 = v_lo - a_lo
+    cv2 = v_hi - a_hi
+    clo = jnp.where(rl >= 2, jnp.minimum(cv1, cv2), -_BIG)
+    chi = jnp.where(rl >= 2, jnp.maximum(cv1, cv2), _BIG)
+    jlo = jnp.maximum(plo, clo)
+    jhi = jnp.minimum(phi, chi)
+    join = (p_ex == 1) & (p_i1 - p_i0 >= 2) & (jlo <= jhi)
+    vK = 0.5 * (jlo + jhi)
+
+    m_jw = (abs_pos[None, :] >= p_i0[:, None]) \
+        & (abs_pos[None, :] < (p_i1 - 1)[:, None])
+    ds2 = jnp.where(m_jw, apf - tauf[:, None], 1.0)
+    jw_slo = jnp.max(jnp.where(
+        m_jw, (yw + eps[:, None] - vK[:, None]) / ds2, -_BIG), axis=1)
+    jw_shi = jnp.min(jnp.where(
+        m_jw, (yw - eps[:, None] - vK[:, None]) / ds2, _BIG), axis=1)
+    aJ = jnp.where(p_lk == 1, (vK - p_lk_val) / dtl_safe,
+                   0.5 * (jw_slo + jw_shi))
+    aN = jnp.where(p_lk == 1, lk_amid, p_amid)
+    vN = jnp.where(p_lk == 1, p_lk_val + lk_amid * dtl, p_vmid)
+
+    ev1 = p_ex == 1
+    pos1 = jnp.where(join, tau - 1, tau)
+    a1 = jnp.where(ev1, jnp.where(join, aJ, aN), 0.0)
+    v1 = jnp.where(ev1, jnp.where(join, vK - aJ, vN), 0.0)
+
+    # -- trailing segment: wedge from the (possibly new) left knot, else
+    # the free mid line of the stage-1 fitter ----------------------------
+    m_cur = (abs_pos[None, :] > tau[:, None]) \
+        & (abs_pos[None, :] <= t_last)
+    ds3 = jnp.where(m_cur, apf - tauf[:, None], 1.0)   # > 0 under mask
+    cw_slo = jnp.max(jnp.where(
+        m_cur, (yw - eps[:, None] - vK[:, None]) / ds3, -_BIG), axis=1)
+    cw_shi = jnp.min(jnp.where(
+        m_cur, (yw + eps[:, None] - vK[:, None]) / ds3, _BIG), axis=1)
+    a2j = 0.5 * (cw_slo + cw_shi)
+    dte = (t_last - tau).astype(dtype)
+    rel_last = (t_last - run_start).astype(dtype)
+    a2n = jnp.where(rl >= 2, 0.5 * (a_lo + a_hi), 0.0)
+    v2n = jnp.where(rl >= 2, 0.5 * (v_lo + v_hi) + a2n * rel_last, prev_y)
+    a2 = jnp.where(join, a2j, a2n)
+    v2 = jnp.where(join, vK + a2j * dte, v2n)
+    return (ev1, pos1, a1, v1), (a2, v2)
+
+
 _METHOD_IMPLS = {
     "angle": _MethodImpl(_angle_init, _angle_step, _angle_flush,
                          int_ts=False, windowed=False),
@@ -445,9 +863,26 @@ _METHOD_IMPLS = {
                             int_ts=True, windowed=True),
     "linear": _MethodImpl(_linear_init, _linear_step, _linear_flush,
                           int_ts=True, windowed=True),
+    "continuous": _MethodImpl(_continuous_init, _continuous_step,
+                              _continuous_flush, int_ts=True, windowed=True,
+                              deferred=True),
+    "mixed": _MethodImpl(_mixed_init, _mixed_step, _mixed_flush,
+                         int_ts=True, windowed=True, deferred=True),
 }
 
 STREAMING_METHODS = tuple(_METHOD_IMPLS)
+
+# Methods whose events resolve one segment late: their chunked output has
+# data-dependent width (finalized columns are released only once no future
+# event can target them) and their scan emits position-tagged events.
+DEFERRED_METHODS = tuple(m for m, impl in _METHOD_IMPLS.items()
+                         if impl.deferred)
+
+
+def _ring_size(method: str, max_run: int, window: Optional[int]) -> int:
+    """Resolve the ring-buffer row count of a windowed method."""
+    W = check_window(max_run, window)
+    return mixed_ring(W) if method == "mixed" else W
 
 
 # ---------------------------------------------------------------------------
@@ -456,6 +891,8 @@ STREAMING_METHODS = tuple(_METHOD_IMPLS)
 
 def _segment_offline(method, y, eps, max_run, window):
     impl = _METHOD_IMPLS[method]
+    if impl.deferred:
+        return _segment_offline_deferred(method, y, eps, max_run, window)
     S, T = y.shape
     dtype = y.dtype
     eps = jnp.broadcast_to(jnp.asarray(eps, dtype), (S,))
@@ -473,6 +910,56 @@ def _segment_offline(method, y, eps, max_run, window):
     a = a.at[:, T - 1].set(a_f)
     v = v.at[:, T - 1].set(v_f)
     return SegmentOutput(breaks, a, v)
+
+
+def scatter_events(breaks, a, v, ev, pos, ea, ev_v):
+    """Scatter position-tagged events into (S, T) event arrays.
+
+    ``ev/pos/ea/ev_v`` are (S, n) batches of deferred events; positions of
+    disabled events are redirected past T and dropped.
+    """
+    S, T = breaks.shape
+    rows = jnp.arange(S)[:, None]
+    tgt = jnp.where(ev, pos, T)
+    breaks = breaks.at[rows, tgt].set(True, mode="drop")
+    a = a.at[rows, tgt].set(ea, mode="drop")
+    v = v.at[rows, tgt].set(ev_v, mode="drop")
+    return breaks, a, v
+
+
+def assemble_deferred_events(S, T, dtype, ev, pos, ea, ev_v, flush_evs
+                             ) -> SegmentOutput:
+    """Canonical (S, T) assembly of a deferred segmentation: scatter the
+    scan's ``(S, n)`` position-tagged event batch (absolute positions),
+    scatter the flush's pending-segment event, and force the trailing
+    segment's break at ``T - 1``.  Shared by the jnp offline wrappers and
+    the deferred kernel wrappers (``kernels.ops.assemble_deferred``) so
+    the two paths cannot drift."""
+    breaks = jnp.zeros((S, T), bool)
+    a = jnp.zeros((S, T), dtype)
+    v = jnp.zeros((S, T), dtype)
+    breaks, a, v = scatter_events(breaks, a, v, ev, pos, ea, ev_v)
+    (ev1, p1, a1, v1), (a2, v2) = flush_evs
+    breaks, a, v = scatter_events(breaks, a, v, ev1[:S, None], p1[:S, None],
+                                  a1[:S, None], v1[:S, None])
+    breaks = breaks.at[:, T - 1].set(True)
+    a = a.at[:, T - 1].set(a2[:S])
+    v = v.at[:, T - 1].set(v2[:S])
+    return SegmentOutput(breaks, a, v)
+
+
+def _segment_offline_deferred(method, y, eps, max_run, window):
+    impl = _METHOD_IMPLS[method]
+    S, T = y.shape
+    dtype = y.dtype
+    eps = jnp.broadcast_to(jnp.asarray(eps, dtype), (S,))
+    carry = impl.init(y[:, 0], eps, max_run, window, 0)
+    ts = jnp.arange(1, T, dtype=jnp.int32)
+    step = functools.partial(impl.step, eps, max_run, window)
+    carry, (ev, pos, ea, ev_v) = jax.lax.scan(step, carry, (ts, y[:, 1:].T))
+    flush_evs = impl.flush(eps, window, carry, T - 1)
+    return assemble_deferred_events(S, T, dtype, ev.T, pos.T, ea.T, ev_v.T,
+                                    flush_evs)
 
 
 @functools.partial(jax.jit, static_argnames=("max_run",))
@@ -534,6 +1021,37 @@ def linear_segment(y: jax.Array, eps: jax.Array, max_run: int = 256,
                             check_window(max_run, window))
 
 
+@functools.partial(jax.jit, static_argnames=("max_run", "window"))
+def continuous_segment(y: jax.Array, eps: jax.Array, max_run: int = 256,
+                       window: Optional[int] = None) -> SegmentOutput:
+    """Batched Continuous method (connected polyline, paper §3.3).
+
+    The emitted segmentation is *connected-knot*: consecutive segments
+    share their boundary value, i.e. for adjacent breaks ``e < e'`` the
+    lines satisfy ``v[e'] - a[e'] * (e' - e) == v[e]`` (up to f32
+    rounding), so ``propagate_lines`` reconstructs one polyline.  Knot
+    choice is deferred one segment (the paper's extra segment of output
+    latency); requires ``max_run >= 2``.
+    """
+    return _segment_offline("continuous", y, eps, max_run,
+                            check_window(max_run, window))
+
+
+@functools.partial(jax.jit, static_argnames=("max_run", "window"))
+def mixed_segment(y: jax.Array, eps: jax.Array, max_run: int = 256,
+                  window: Optional[int] = None) -> SegmentOutput:
+    """Batched MixedPLA (Luo et al. joint/disjoint trade-off, paper §3.4).
+
+    Stage 1 greedy optimal-disjoint runs; stage 2 merges adjacent runs on
+    a joint knot whenever their feasible-value ranges overlap at the
+    boundary point.  Breaks followed by a continuity-preserving line are
+    joint knots (2 wire fields); the rest are disjoint (3 fields) — see
+    ``protocol_engine.protocol_descriptors(knot_kind="mixed")``.
+    """
+    return _segment_offline("mixed", y, eps, max_run,
+                            _ring_size("mixed", max_run, window))
+
+
 # ---------------------------------------------------------------------------
 # Streaming (chunked) API
 # ---------------------------------------------------------------------------
@@ -557,6 +1075,11 @@ class SegmenterState:
     t: int = 0
     emitted: int = 0
     carry: Any = None
+    # Deferred methods only: host-side buffers of event columns covering
+    # absolute positions [emitted, emitted + pend width) that a future
+    # event may still target, plus the per-stream determined frontier.
+    pend: Any = None          # (brk, a, v) numpy arrays (S, L)
+    det: Any = None           # (S,) int64
 
 
 def init_state(method: str, n_streams: int, eps, *, max_run: int = 256,
@@ -567,7 +1090,7 @@ def init_state(method: str, n_streams: int, eps, *, max_run: int = 256,
         raise ValueError(f"unknown method {method!r}; "
                          f"have {sorted(_METHOD_IMPLS)}")
     if _METHOD_IMPLS[method].windowed:
-        W = check_window(max_run, window)
+        W = _ring_size(method, max_run, window)
     elif window is not None:
         raise ValueError(f"method {method!r} takes no window")
     else:
@@ -608,13 +1131,117 @@ def _stream_flush(method, max_run, window, carry, t_last):
     return SegmentOutput(jnp.ones((S, 1), bool), a_f[:, None], v_f[:, None])
 
 
+@functools.partial(jax.jit, static_argnames=("method", "max_run", "window"))
+def _dstream_start(method, max_run, window, y_chunk, eps, t0):
+    impl = _METHOD_IMPLS[method]
+    carry = impl.init(y_chunk[:, 0], eps, max_run, window, t0)
+    ts = t0 + jnp.arange(1, y_chunk.shape[1], dtype=jnp.int32)
+    step = functools.partial(impl.step, eps, max_run, window)
+    carry, evs = jax.lax.scan(step, carry, (ts, y_chunk[:, 1:].T))
+    return carry, tuple(e.T for e in evs)
+
+
+@functools.partial(jax.jit, static_argnames=("method", "max_run", "window"))
+def _dstream_cont(method, max_run, window, carry, y_chunk, eps, t0):
+    impl = _METHOD_IMPLS[method]
+    ts = t0 + jnp.arange(y_chunk.shape[1], dtype=jnp.int32)
+    step = functools.partial(impl.step, eps, max_run, window)
+    carry, evs = jax.lax.scan(step, carry, (ts, y_chunk.T))
+    return carry, tuple(e.T for e in evs)
+
+
+@functools.partial(jax.jit, static_argnames=("method", "max_run", "window"))
+def _dstream_flush(method, max_run, window, carry, eps, t_last):
+    return _METHOD_IMPLS[method].flush(eps, window, carry, t_last)
+
+
+def release_deferred(pend, det, released: int, t_new: int, batches,
+                      flush_tail):
+    """Shared pending-buffer engine for deferred-event streaming (used by
+    this module's chunked API and by ``kernels.ops.StreamingSegmenter``).
+
+    ``pend`` is the ``(brk, a, v)`` numpy buffer triple covering absolute
+    positions ``[released, released + width)``; ``det`` the per-stream
+    determined frontier; ``batches`` yields ``(ev, pos, a, v)`` event
+    batches with **absolute** positions.  ``flush_tail = (a2, v2)`` forces
+    the final column at ``t_new - 1`` and releases everything; otherwise
+    only the prefix no future event can target (min frontier) is
+    released.  Returns ``(out, pend', det', released')``.
+    """
+    pend_brk, pend_a, pend_v = pend
+    S = pend_brk.shape[0]
+    grow = t_new - released - pend_brk.shape[1]
+    if grow > 0:
+        z = np.zeros((S, grow))
+        pend_brk = np.concatenate([pend_brk, z.astype(bool)], axis=1)
+        pend_a = np.concatenate([pend_a, z.astype(pend_a.dtype)], axis=1)
+        pend_v = np.concatenate([pend_v, z.astype(pend_v.dtype)], axis=1)
+    det = det.copy()
+    for ev, pos, ea, ev_v in batches:
+        ev = np.asarray(ev, bool)
+        if ev.size == 0 or not ev.any():
+            continue
+        pos = np.asarray(pos).astype(np.int64)
+        ss, jj = np.nonzero(ev)
+        cols = pos[ss, jj] - released
+        pend_brk[ss, cols] = True
+        pend_a[ss, cols] = np.asarray(ea)[ss, jj]
+        pend_v[ss, cols] = np.asarray(ev_v)[ss, jj]
+        np.maximum.at(det, ss, pos[ss, jj] + 1)
+    if flush_tail is not None:
+        a2, v2 = flush_tail
+        last = t_new - 1 - released
+        pend_brk[:, last] = True
+        pend_a[:, last] = np.asarray(a2)[:S]
+        pend_v[:, last] = np.asarray(v2)[:S]
+        release = t_new - released
+        det[:] = t_new
+    else:
+        release = max(int(det.min()) - released, 0)
+    out = SegmentOutput(jnp.asarray(pend_brk[:, :release]),
+                        jnp.asarray(pend_a[:, :release]),
+                        jnp.asarray(pend_v[:, :release]))
+    pend = (pend_brk[:, release:], pend_a[:, release:], pend_v[:, release:])
+    return out, pend, det, released + release
+
+
+def _deferred_release(state: SegmenterState, evs, n_consumed: int,
+                      flush_evs=None) -> tuple[SegmenterState, SegmentOutput]:
+    """Scatter new events into the pending buffers; release the prefix no
+    future event can target (everything on flush)."""
+    S = state.n_streams
+    t_new = state.t + n_consumed
+    if state.pend is None:
+        dtype = np.asarray(state.eps).dtype
+        pend = (np.zeros((S, 0), bool), np.zeros((S, 0), dtype),
+                np.zeros((S, 0), dtype))
+        det = np.full((S,), state.emitted, np.int64)
+    else:
+        pend, det = state.pend, state.det
+    batches = []
+    if evs is not None:
+        batches.append(evs)  # jnp-engine events: positions are absolute
+    flush_tail = None
+    if flush_evs is not None:
+        (ev1, p1, a1, v1), flush_tail = flush_evs
+        batches.append((np.asarray(ev1)[:, None], np.asarray(p1)[:, None],
+                        np.asarray(a1)[:, None], np.asarray(v1)[:, None]))
+    out, pend, det, released = release_deferred(pend, det, state.emitted,
+                                                 t_new, batches, flush_tail)
+    return dataclasses.replace(state, t=t_new, emitted=released,
+                               pend=pend, det=det), out
+
+
 def step_chunk(state: SegmenterState, y_chunk: jax.Array
                ) -> tuple[SegmenterState, SegmentOutput]:
     """Consume ``y_chunk: (S, n)``; return the newly finalized events.
 
     The returned :class:`SegmentOutput` has width ``n`` (``n - 1`` for the
     first chunk of a stream) and covers the absolute positions
-    ``[state.emitted, state.emitted + width)``.
+    ``[state.emitted, state.emitted + width)``.  For the deferred methods
+    (``DEFERRED_METHODS``) the width is data-dependent (possibly zero):
+    only positions no future event can target are released; the coverage
+    contract ``[state.emitted, state.emitted + width)`` is unchanged.
     """
     y = jnp.asarray(y_chunk, state.dtype)
     if y.ndim != 2 or y.shape[0] != state.n_streams:
@@ -634,6 +1261,16 @@ def step_chunk(state: SegmenterState, y_chunk: jax.Array
             f"(repro.kernels.ops.StreamingSegmenter), which renumber "
             f"time per launch and have no such limit.")
     t0 = jnp.asarray(state.t, jnp.int32)
+    if _METHOD_IMPLS[state.method].deferred:
+        if state.carry is None:
+            carry, evs = _dstream_start(state.method, state.max_run,
+                                        state.window, y, state.eps, t0)
+        else:
+            carry, evs = _dstream_cont(state.method, state.max_run,
+                                       state.window, state.carry, y,
+                                       state.eps, t0)
+        new, out = _deferred_release(state, evs, y.shape[1])
+        return dataclasses.replace(new, carry=carry), out
     if state.carry is None:
         carry, out = _stream_start(state.method, state.max_run, state.window,
                                    y, state.eps, t0)
@@ -650,10 +1287,18 @@ def flush(state: SegmenterState) -> tuple[SegmenterState, SegmentOutput]:
     """Close the trailing run: one forced-break event at position t-1.
 
     The returned state has no carry — the next :func:`step_chunk` starts a
-    fresh stream at absolute position ``state.t``.
+    fresh stream at absolute position ``state.t``.  Deferred methods
+    return every still-buffered column plus up to two closing events (the
+    pending segment and the trailing one) instead of a single column.
     """
     if state.carry is None:
         raise ValueError("flush with no open run (no data since last flush)")
+    if _METHOD_IMPLS[state.method].deferred:
+        flush_evs = _dstream_flush(state.method, state.max_run, state.window,
+                                   state.carry, state.eps,
+                                   jnp.asarray(state.t - 1, jnp.int32))
+        new, out = _deferred_release(state, None, 0, flush_evs=flush_evs)
+        return dataclasses.replace(new, carry=None), out
     out = _stream_flush(state.method, state.max_run, state.window,
                         state.carry, jnp.asarray(state.t - 1, jnp.int32))
     new = dataclasses.replace(state, carry=None, emitted=state.emitted + 1)

@@ -39,7 +39,6 @@ metric-for-metric equality against :mod:`repro.core.protocols`.
 
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import List, NamedTuple, Optional, Sequence, Tuple, Union
 
@@ -53,7 +52,8 @@ from .types import (COUNTER_BYTES, DisjointKnot, JointKnot, Line,
                     MethodOutput, Segment, VALUE_BYTES)
 
 __all__ = [
-    "ENGINE_PROTOCOLS", "PROTOCOL_MIN_SEG", "ProtocolPointDescriptors",
+    "ENGINE_PROTOCOLS", "KNOT_KINDS", "PROTOCOL_MIN_SEG",
+    "ProtocolPointDescriptors",
     "protocol_descriptors", "protocol_point_metrics", "protocol_nbytes",
     "batched_point_metrics", "encode_batch", "to_method_outputs",
     "ProtocolEmitter",
@@ -129,6 +129,32 @@ def _segment_geometry(seg: SegmentOutput):
     return pos, e, start, n, fin, a_pt, v_pt
 
 
+# Relative tolerance of the joint-knot continuity detector for mixed
+# segmentations: joint knots agree to f32 rounding (~1e-7 relative), while
+# disjoint knots are separated by the infeasibility gap that caused the
+# break — 1e-4 sits three decades above the former.
+_JOINT_RTOL = 1e-4
+
+KNOT_KINDS = ("joint", "disjoint", "continuous", "mixed")
+
+
+def _joint_flags(e, a_pt, v_pt):
+    """Per-position jointness of the break at that position (meaningful at
+    break positions only): the covering segment's line and the *next*
+    segment's line agree at ``p + 1`` within ``_JOINT_RTOL``.  The closing
+    break at T-1 is always a joint knot."""
+    S, T = e.shape
+    nxt = jnp.minimum(jnp.arange(T, dtype=jnp.int32) + 1, T - 1)[None, :]
+    e_n = jnp.take_along_axis(e, jnp.broadcast_to(nxt, (S, T)), axis=1)
+    a_n = jnp.take_along_axis(a_pt, jnp.broadcast_to(nxt, (S, T)), axis=1)
+    v_n = jnp.take_along_axis(v_pt, jnp.broadcast_to(nxt, (S, T)), axis=1)
+    left = v_pt + a_pt                      # this line at p + 1
+    right = v_n - a_n * (e_n - nxt).astype(a_n.dtype)
+    tol = _JOINT_RTOL * (1.0 + jnp.abs(left) + jnp.abs(right))
+    return (jnp.abs(left - right) <= tol) \
+        | (jnp.arange(T, dtype=jnp.int32)[None, :] == T - 1)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("protocol", "knot_kind", "burst_cap"))
 def protocol_descriptors(seg: SegmentOutput, protocol: str,
@@ -138,13 +164,19 @@ def protocol_descriptors(seg: SegmentOutput, protocol: str,
 
     ``knot_kind`` only matters for ``implicit``: ``"joint"`` (SwingFilter)
     knots cost 2 fields, ``"disjoint"`` knots 3 (streamed in two parts;
-    the stream's closing knot is joint, hence 2).
+    the stream's closing knot is joint, hence 2).  ``"continuous"`` is
+    joint with the one-segment-deferred emission of the continuous method
+    (a segment's line resolves only when the *next* segment breaks);
+    ``"mixed"`` detects joint vs disjoint knots from line continuity
+    (:func:`_joint_flags`) and defers emission likewise (a join shifts the
+    decision one extra position).
     """
     if protocol not in ENGINE_PROTOCOLS:
         raise ValueError(f"unknown protocol {protocol!r}; "
                          f"have {sorted(ENGINE_PROTOCOLS)}")
-    if knot_kind not in ("joint", "disjoint"):
-        raise ValueError(f"knot_kind must be joint|disjoint; {knot_kind!r}")
+    if knot_kind not in KNOT_KINDS:
+        raise ValueError(f"knot_kind must be one of {KNOT_KINDS}; "
+                         f"{knot_kind!r}")
     pos, e, start, n, fin, a_pt, v_pt = _segment_geometry(seg)
     S, T = pos.shape
     at_start = pos == start
@@ -153,13 +185,29 @@ def protocol_descriptors(seg: SegmentOutput, protocol: str,
         kind = jnp.full((S, T), KIND_SEGMENT, jnp.int32)
         if knot_kind == "joint":
             nbytes = jnp.full((S, T), 2 * VALUE_BYTES, jnp.int32)
-        else:
+            emit = fin
+        elif knot_kind == "disjoint":
             # Interior segments terminate on a 3-field disjoint knot; the
             # last segment's right knot is the closing joint knot (2).
             nbytes = jnp.where(e == T - 1, 2 * VALUE_BYTES, 3 * VALUE_BYTES)
+            emit = fin
+        else:
+            # Deferred methods: the segment ending at e is emitted at the
+            # break of the *next* segment (end e2); for mixed, a join at
+            # that next break pushes the decision one position further.
+            e2 = jnp.take_along_axis(e, jnp.minimum(e + 1, T - 1), axis=1)
+            if knot_kind == "continuous":
+                nbytes = jnp.full((S, T), 2 * VALUE_BYTES, jnp.int32)
+                emit = jnp.minimum(e2 + 1, T - 1)
+            else:  # mixed
+                joint = _joint_flags(e, a_pt, v_pt)
+                j_e = jnp.take_along_axis(joint, e, axis=1)
+                j_e2 = jnp.take_along_axis(joint, e2, axis=1)
+                nbytes = jnp.where(j_e, 2 * VALUE_BYTES, 3 * VALUE_BYTES)
+                emit = jnp.minimum(e2 + 1 + j_e2.astype(jnp.int32), T - 1)
         return ProtocolPointDescriptors(
             kind=kind, head=at_start, rec_bytes=nbytes.astype(jnp.int32),
-            rec_len=n, emit=fin, seg_end=e, seg_start=start, seg_len=n,
+            rec_len=n, emit=emit, seg_end=e, seg_start=start, seg_len=n,
             a=a_pt, v=v_pt)
 
     long = n >= PROTOCOL_MIN_SEG[protocol]
@@ -295,13 +343,16 @@ def batched_point_metrics(seg: SegmentOutput, ys, protocol: str,
     error = np.where(is_seg, abs_err, 0.0)
     if eps is not None:
         # float32 engine slack (the jnp segmenters fit in f32; cf. the
-        # tighter f64 tolerance of metrics.point_metrics).
-        bad = error > eps * (1 + 1e-4) + 1e-5
+        # tighter f64 tolerance of metrics.point_metrics).  eps may be a
+        # scalar or a per-stream (S,) array.
+        eps_row = np.broadcast_to(np.asarray(eps, np.float64).reshape(-1),
+                                  (S,))
+        bad = error > eps_row[:, None] * (1 + 1e-4) + 1e-5
         if bad.any():
             s, i = map(int, np.argwhere(bad)[0])
             raise ValueError(
                 f"max-error guarantee violated at stream {s} point {i}: "
-                f"err={error[s, i]:.3e} > eps={eps:.3e}")
+                f"err={error[s, i]:.3e} > eps={eps_row[s]:.3e}")
     return BatchedPointMetrics(ratio=ratio, latency=latency, error=error)
 
 
@@ -342,12 +393,41 @@ def _encode_row(protocol: str, brk_row, a_row, v_row, ys_row,
     if protocol == "implicit":
         K = len(ends)
         t_end = t_of(ends[-1])
-        if knot_kind == "joint":
-            # Opening knot = the raw first point (SwingFilter origin),
-            # then one joint knot per segment end, on the segment's line.
+        if knot_kind in ("joint", "continuous"):
+            # One joint knot per segment end, on the segment's line.  The
+            # opening knot is the raw first point for SwingFilter (its
+            # wedge origin) and the first line's value for the continuous
+            # polyline (methods.run_continuous's first fixed knot).
+            y_open = ys64[0] if knot_kind == "joint" \
+                else A[0] * t_of(0) + B[0]
             ts_k = np.concatenate([[t_of(0)], t_of(ends)])
-            ys_k = np.concatenate([[ys64[0]], A * t_of(ends) + B])
+            ys_k = np.concatenate([[y_open], A * t_of(ends) + B])
             return np.stack([ts_k, ys_k], 1).ravel().astype("<f8").tobytes()
+        if knot_kind == "mixed":
+            # Joint knots (detected from line continuity) pack as (t, y);
+            # disjoint knots use Luo et al.'s sign trick with the y''
+            # value interleaved before the next knot's first part.
+            buf = bytearray()
+            buf += np.array([t_of(0), A[0] * t_of(0) + B[0]],
+                            "<f8").tobytes()
+            tb = t_of(ends[:-1] + 1)
+            y1 = A[:-1] * tb + B[:-1]
+            y2 = A[1:] * tb + B[1:]
+            joint = np.abs(y1 - y2) <= _JOINT_RTOL * (1 + np.abs(y1)
+                                                      + np.abs(y2))
+            pend: List[float] = []
+            for k in range(K - 1):
+                if pend:
+                    buf += np.array([pend.pop()], "<f8").tobytes()
+                if joint[k]:
+                    buf += np.array([tb[k], y1[k]], "<f8").tobytes()
+                else:
+                    buf += np.array([-tb[k], y1[k]], "<f8").tobytes()
+                    pend.append(y2[k])
+            if pend:
+                buf += np.array([pend.pop()], "<f8").tobytes()
+            buf += np.array([t_end, A[-1] * t_end + B[-1]], "<f8").tobytes()
+            return bytes(buf)
         head = np.array([t_of(0), A[0] * t_of(0) + B[0]])
         if K == 1:
             body = np.empty(0)
@@ -497,18 +577,6 @@ def to_method_outputs(seg: SegmentOutput, ts, ys,
 # Streaming emitter: init / step_chunk / flush over event columns
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
-class _RowCodec:
-    """Per-stream incremental codec state."""
-
-    k: int = 0                 # segments finalized so far
-    prev_end: int = -1         # last break position
-    prev_A: float = 0.0        # last finalized segment's Line(A, B)
-    prev_B: float = 0.0
-    pend_start: int = 0        # singlestreamv: buffered singleton window
-    pend_len: int = 0
-
-
 class ProtocolEmitter:
     """Streaming protocol encoder over finalized event columns.
 
@@ -527,6 +595,19 @@ class ProtocolEmitter:
     offline :func:`encode_batch` / legacy ``encode_*`` on the one-shot
     segmentation.  Values are buffered as float64, so feeding the same
     arrays gives the same bytes as the host codecs.
+
+    The per-stream row-codec bookkeeping (segment counter, previous break
+    and line, burst window, pending disjoint y'') lives in flat ``(S,)``
+    numpy arrays, and per chunk the event coordinates and line conversions
+    are computed for all streams in one vectorized pass — ``step_chunk``
+    then walks only the actual events (``np.nonzero``), not all ``S``
+    streams, so fleets of mostly-quiet channels cost O(events), not O(S).
+
+    ``knot_kind`` extends to the deferred methods: ``"continuous"``
+    (joint knots on the connected polyline, opening knot on the first
+    line) and ``"mixed"`` (joint/disjoint detected from line continuity,
+    one knot of lag, sign-trick interleaving) — byte-identical to
+    :func:`encode_batch` with the same kind.
     """
 
     def __init__(self, protocol: str, n_streams: int, *,
@@ -535,8 +616,8 @@ class ProtocolEmitter:
         if protocol not in ENGINE_PROTOCOLS:
             raise ValueError(f"unknown protocol {protocol!r}; "
                              f"have {sorted(ENGINE_PROTOCOLS)}")
-        if knot_kind not in ("joint", "disjoint"):
-            raise ValueError(f"knot_kind must be joint|disjoint; "
+        if knot_kind not in KNOT_KINDS:
+            raise ValueError(f"knot_kind must be one of {KNOT_KINDS}; "
                              f"{knot_kind!r}")
         self.protocol = protocol
         self.n_streams = n_streams
@@ -544,8 +625,17 @@ class ProtocolEmitter:
         self.t0 = float(t0)
         self.dt = float(dt)
         self.burst_cap = burst_cap
-        self._rows = [_RowCodec() for _ in range(n_streams)]
-        self._ybuf = np.zeros((n_streams, 0), np.float64)
+        S = n_streams
+        # Vectorized row-codec state (one slot per stream).
+        self._k = np.zeros(S, np.int64)            # segments finalized
+        self._prev_end = np.full(S, -1, np.int64)  # last break position
+        self._prev_A = np.zeros(S, np.float64)     # last segment's Line
+        self._prev_B = np.zeros(S, np.float64)
+        self._pend_start = np.zeros(S, np.int64)   # singlestreamv window
+        self._pend_len = np.zeros(S, np.int64)
+        self._pend_y2 = np.zeros(S, np.float64)    # mixed: deferred y''
+        self._has_y2 = np.zeros(S, bool)
+        self._ybuf = np.zeros((S, 0), np.float64)
         self._ybase = 0            # absolute position of _ybuf[:, 0]
         self._epos = 0             # absolute position of next event column
         self._finished = False
@@ -567,47 +657,70 @@ class ProtocolEmitter:
     def _trim(self) -> None:
         """Drop value columns no future record can reference."""
         if self.protocol == "singlestreamv":
-            keep_from = min(r.pend_start for r in self._rows)
+            keep_from = int(self._pend_start.min())
         elif self.protocol == "implicit" and self.knot_kind == "joint" \
-                and any(r.k == 0 for r in self._rows):
+                and (self._k == 0).any():
             keep_from = 0  # the opening knot ships the raw first value
         else:
-            keep_from = min(r.prev_end + 1 for r in self._rows)
+            keep_from = int(self._prev_end.min()) + 1
         drop = keep_from - self._ybase
         if drop > 0:
             self._ybuf = self._ybuf[:, drop:]
             self._ybase = keep_from
 
     def _flush_burst(self, s: int, out: bytearray) -> None:
-        r = self._rows[s]
-        if not r.pend_len:
+        n = int(self._pend_len[s])
+        if not n:
             return
-        vals = self._y(s, r.pend_start, r.pend_start + r.pend_len)
-        out += np.int8(-r.pend_len).tobytes()
+        start = int(self._pend_start[s])
+        vals = self._y(s, start, start + n)
+        out += np.int8(-n).tobytes()
         out += np.ascontiguousarray(vals, "<f8").tobytes()
-        r.pend_start += r.pend_len
-        r.pend_len = 0
+        self._pend_start[s] = start + n
+        self._pend_len[s] = 0
+
+    def _implicit_knot(self, s: int, e: int, A: float, B: float,
+                       out: bytearray) -> None:
+        """Implicit-protocol knot emission at the break of segment k."""
+        kk = self.knot_kind
+        if self._k[s] == 0:
+            if kk == "joint":
+                y0 = float(self._y(s, 0, 1)[0])
+            else:
+                y0 = A * self._t(0) + B
+            out += np.array([self._t(0), y0], "<f8").tobytes()
+        elif kk == "disjoint":
+            tb = self._t(self._prev_end[s] + 1)
+            out += np.array([-tb, self._prev_A[s] * tb + self._prev_B[s],
+                             A * tb + B], "<f8").tobytes()
+        elif kk == "mixed":
+            # The knot between the previous segment and this one: joint
+            # when the two lines agree at the shared point (continuity),
+            # else disjoint with the y'' deferred one knot (sign trick).
+            tb = self._t(self._prev_end[s] + 1)
+            y1 = self._prev_A[s] * tb + self._prev_B[s]
+            y2 = A * tb + B
+            if self._has_y2[s]:
+                out += np.array([self._pend_y2[s]], "<f8").tobytes()
+                self._has_y2[s] = False
+            if abs(y1 - y2) <= _JOINT_RTOL * (1 + abs(y1) + abs(y2)):
+                out += np.array([tb, y1], "<f8").tobytes()
+            else:
+                out += np.array([-tb, y1], "<f8").tobytes()
+                self._pend_y2[s] = y2
+                self._has_y2[s] = True
+        if kk in ("joint", "continuous"):
+            te = self._t(e)
+            out += np.array([te, A * te + B], "<f8").tobytes()
 
     def _on_break(self, s: int, e: int, A: float, B: float,
                   seg_out: bytearray, single_out: bytearray) -> None:
         """One finalized segment [prev_end+1, e] with line A*t + B."""
-        r = self._rows[s]
-        start, n = r.prev_end + 1, e - r.prev_end
+        start = int(self._prev_end[s]) + 1
+        n = e - int(self._prev_end[s])
         p = self.protocol
         if p == "implicit":
-            if r.k == 0:
-                if self.knot_kind == "joint":
-                    y0 = float(self._y(s, 0, 1)[0])
-                else:
-                    y0 = A * self._t(0) + B
-                seg_out += np.array([self._t(0), y0], "<f8").tobytes()
-            elif self.knot_kind == "disjoint":
-                tb = self._t(start)
-                seg_out += np.array([-tb, r.prev_A * tb + r.prev_B,
-                                     A * tb + B], "<f8").tobytes()
-            if self.knot_kind == "joint":
-                te = self._t(e)
-                seg_out += np.array([te, A * te + B], "<f8").tobytes()
+            self._implicit_knot(s, e, A, B, seg_out)
         elif n >= PROTOCOL_MIN_SEG[p]:
             n_cap = 127 if p == "singlestreamv" else 256
             if n > n_cap:
@@ -636,19 +749,20 @@ class ProtocolEmitter:
                     .view(np.uint8).reshape(n, 8)
                 seg_out += rec.tobytes()
             else:  # singlestreamv: buffer, splitting at the counter cap
-                r.pend_len += n
-                while r.pend_len >= self.burst_cap:
-                    save = r.pend_len
-                    r.pend_len = self.burst_cap
+                self._pend_len[s] += n
+                while self._pend_len[s] >= self.burst_cap:
+                    save = int(self._pend_len[s])
+                    self._pend_len[s] = self.burst_cap
                     self._flush_burst(s, seg_out)
-                    r.pend_len = save - self.burst_cap
-        r.k += 1
-        r.prev_end = e
-        r.prev_A, r.prev_B = A, B
+                    self._pend_len[s] = save - self.burst_cap
+        self._k[s] += 1
+        self._prev_end[s] = e
+        self._prev_A[s] = A
+        self._prev_B[s] = B
         # Advance past the segment unless singlestreamv just buffered it
         # into the pending burst window.
         if p != "singlestreamv" or n >= PROTOCOL_MIN_SEG[p]:
-            r.pend_start = e + 1
+            self._pend_start[s] = e + 1
 
     # -- public API ---------------------------------------------------------
 
@@ -670,14 +784,19 @@ class ProtocolEmitter:
                              f"streams; got {events.breaks.shape}")
         if events is not None and events.breaks.shape[1]:
             brk = np.asarray(events.breaks, bool)
-            a = np.asarray(events.a, np.float64)
-            v = np.asarray(events.v, np.float64)
             w = brk.shape[1]
-            for s in range(self.n_streams):
-                for j in np.flatnonzero(brk[s]):
-                    e = self._epos + int(j)
-                    A = a[s, j] / self.dt
-                    B = v[s, j] - a[s, j] * e - A * self.t0
+            # Vectorized event extraction + anchored-to-global line
+            # conversion for every event of the chunk at once; row-major
+            # nonzero keeps each stream's events in time order.
+            ss, jj = np.nonzero(brk)
+            if len(ss):
+                a = np.asarray(events.a, np.float64)[ss, jj]
+                v = np.asarray(events.v, np.float64)[ss, jj]
+                es = self._epos + jj
+                As = a / self.dt
+                Bs = v - a * es - As * self.t0
+                for s, e, A, B in zip(ss.tolist(), es.tolist(),
+                                      As.tolist(), Bs.tolist()):
                     self._on_break(s, e, A, B, seg_bufs[s], single_bufs[s])
             self._epos += w
             self._trim()
@@ -692,14 +811,18 @@ class ProtocolEmitter:
             raise RuntimeError("flush() called twice")
         self._finished = True
         outs = [bytearray() for _ in range(self.n_streams)]
-        for s, r in enumerate(self._rows):
+        for s in range(self.n_streams):
             if self.protocol == "singlestreamv":
                 self._flush_burst(s, outs[s])
-            elif self.protocol == "implicit" \
-                    and self.knot_kind == "disjoint" and r.k:
-                te = self._t(r.prev_end)
-                outs[s] += np.array([te, r.prev_A * te + r.prev_B],
-                                    "<f8").tobytes()
+            elif self.protocol == "implicit" and self._k[s]:
+                if self.knot_kind == "mixed" and self._has_y2[s]:
+                    outs[s] += np.array([self._pend_y2[s]], "<f8").tobytes()
+                    self._has_y2[s] = False
+                if self.knot_kind in ("disjoint", "mixed"):
+                    te = self._t(self._prev_end[s])
+                    outs[s] += np.array(
+                        [te, self._prev_A[s] * te + self._prev_B[s]],
+                        "<f8").tobytes()
         if self.protocol == "twostreams":
             return [(bytes(o), b"") for o in outs]
         return [bytes(o) for o in outs]

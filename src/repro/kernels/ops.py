@@ -27,21 +27,29 @@ from typing import List, Optional
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.core.jax_pla import (PLARecords, SegmentOutput, check_window,
-                                records_to_events)
+                                records_to_events, release_deferred,
+                                assemble_deferred_events)
 from .angle import angle_init_carry, angle_pallas, angle_shift_carry
 from .swing import swing_init_carry, swing_pallas, swing_shift_carry
 from .common import BLOCK_S, BLOCK_T, assemble_segments, pad_streams
+from .continuous import (cont_init_carry, cont_shift_carry,
+                         continuous_flush_carry, continuous_pallas)
 from .disjoint import (disjoint_init_carry, disjoint_pallas,
                        disjoint_shift_carry)
 from .linear import linear_init_carry, linear_pallas, linear_shift_carry
+from .mixed import (mixed_flush_carry, mixed_init_carry, mixed_pallas,
+                    mixed_shift_carry)
 from .reconstruct import reconstruct_error_pallas, reconstruct_pallas
 
 __all__ = ["angle_segment_tpu", "swing_segment_tpu",
            "disjoint_segment_tpu", "linear_segment_tpu",
+           "continuous_segment_tpu", "mixed_segment_tpu",
            "reconstruct_tpu", "reconstruct_error_tpu",
            "reconstruct_records_tpu", "KERNEL_SEGMENTERS",
-           "StreamingSegmenter"]
+           "DEFERRED_KERNELS", "StreamingSegmenter"]
 
 
 def _run(kernel_fn, y, eps, max_run, block_s, block_t, **kw):
@@ -91,6 +99,50 @@ def linear_segment_tpu(y: jax.Array, eps: float, max_run: int = 256,
     """Best-fit (Linear) PLA segmentation via the Pallas kernel."""
     return _run(linear_pallas, y, eps, max_run, block_s, block_t,
                 window=window)
+
+
+def assemble_deferred(ev, pos, ea, ev_v, flush_evs, S: int, T: int
+                      ) -> SegmentOutput:
+    """Scatter a deferred kernel's position-tagged events (time-major
+    ``(Tp, Sp)``, launch-local positions == absolute for the offline call)
+    plus the host-flush events into canonical (S, T) SegmentOutput.  Thin
+    transposer over the shared ``jax_pla.assemble_deferred_events``."""
+    return assemble_deferred_events(S, T, jnp.float32,
+                                    ev.T[:S].astype(bool), pos.T[:S],
+                                    ea.T[:S], ev_v.T[:S], flush_evs)
+
+
+def _run_deferred(method, y, eps, max_run, window, block_s, block_t):
+    kernel_fn, _, _, flush_fn = DEFERRED_KERNELS[method]
+    y = jnp.asarray(y, jnp.float32)
+    yp, S, T = pad_streams(y, block_s, block_t)
+    W = check_window(max_run, window)
+    ev, pos, ea, ev_v, carry = kernel_fn(
+        yp.T, eps=float(eps), t_stop=T, max_run=max_run, window=W,
+        block_s=block_s, block_t=block_t)
+    flush_evs = flush_fn(carry, float(eps), W, T - 1)
+    return assemble_deferred(ev, pos, ea, ev_v, flush_evs, S, T)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "max_run", "window",
+                                             "block_s", "block_t"))
+def continuous_segment_tpu(y: jax.Array, eps: float, max_run: int = 256,
+                           window: Optional[int] = None,
+                           block_s: int = BLOCK_S, block_t: int = BLOCK_T
+                           ) -> SegmentOutput:
+    """Continuous (connected-polyline) PLA via the deferred Pallas kernel."""
+    return _run_deferred("continuous", y, eps, max_run, window,
+                         block_s, block_t)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "max_run", "window",
+                                             "block_s", "block_t"))
+def mixed_segment_tpu(y: jax.Array, eps: float, max_run: int = 256,
+                      window: Optional[int] = None,
+                      block_s: int = BLOCK_S, block_t: int = BLOCK_T
+                      ) -> SegmentOutput:
+    """MixedPLA (joint/disjoint merge) via the deferred Pallas kernel."""
+    return _run_deferred("mixed", y, eps, max_run, window, block_s, block_t)
 
 
 @functools.partial(jax.jit, static_argnames=("block_s", "block_t"))
@@ -154,6 +206,20 @@ KERNEL_SEGMENTERS = {
     "angle": angle_segment_tpu,
     "disjoint": disjoint_segment_tpu,
     "linear": linear_segment_tpu,
+    "continuous": continuous_segment_tpu,
+    "mixed": mixed_segment_tpu,
+}
+
+# Deferred kernels: (kernel fn, init_carry(Sp, W), shift_carry(carry, m),
+# flush(carry, eps, W, t_last)).  Their events carry launch-local
+# positions and the trailing flush runs on the host from the carry.
+DEFERRED_KERNELS = {
+    "continuous": (continuous_pallas, cont_init_carry, cont_shift_carry,
+                   lambda carry, eps, w, t_last: continuous_flush_carry(
+                       carry, window=w, t_last=t_last)),
+    "mixed": (mixed_pallas, mixed_init_carry, mixed_shift_carry,
+              lambda carry, eps, w, t_last: mixed_flush_carry(
+                  carry, eps=eps, window=w, t_last=t_last)),
 }
 
 
@@ -171,6 +237,9 @@ _STREAM_KERNELS = {
                  disjoint_shift_carry, True),
     "linear": (linear_pallas, linear_init_carry,
                linear_shift_carry, True),
+    "continuous": (continuous_pallas, cont_init_carry,
+                   cont_shift_carry, True),
+    "mixed": (mixed_pallas, mixed_init_carry, mixed_shift_carry, True),
 }
 
 
@@ -190,6 +259,13 @@ class StreamingSegmenter:
     ``finish`` returns the last columns.  Concatenating every ``push``
     output plus the ``finish`` output is bit-identical to the one-shot
     ``KERNEL_SEGMENTERS[method](y, eps, ...)`` call on the whole stream.
+
+    The deferred kernels (continuous / mixed) emit position-tagged events
+    one segment in the past, so their ``push`` output width is
+    data-dependent: columns are buffered host-side and released only once
+    no future event can target them (``finish`` releases the rest).  The
+    trailing flush runs on the host from the carry (the same jitted math
+    as the offline wrappers), not through an in-kernel forced break.
     """
 
     def __init__(self, method: str, n_streams: int, eps: float, *,
@@ -220,6 +296,14 @@ class StreamingSegmenter:
         self._navail = 0      # buffered, not yet fed to the kernel
         self._t = 0           # columns consumed by the kernel
         self._finished = False
+        self._deferred = method in DEFERRED_KERNELS
+        if self._deferred:
+            self._flush_fn = DEFERRED_KERNELS[method][3]
+            self._ev_pend = (np.zeros((n_streams, 0), bool),
+                            np.zeros((n_streams, 0), np.float32),
+                            np.zeros((n_streams, 0), np.float32))
+            self._det = np.zeros((n_streams,), np.int64)
+            self._released = 0
 
     @property
     def pushed(self) -> int:
@@ -239,11 +323,47 @@ class StreamingSegmenter:
             feed = jnp.concatenate(
                 [feed, jnp.zeros((self._sp - feed.shape[0], m),
                                  jnp.float32)], axis=0)
+        if self._deferred:
+            # t_real carries the live-column count here (inert past it).
+            return self._kernel_fn(
+                feed.T, eps=self.eps, t_stop=t_real, max_run=self.max_run,
+                block_s=self.block_s, block_t=self.block_t,
+                carry=self._carry, **self._kw)
         ev_brk, ev_a, ev_b, carry_out = self._kernel_fn(
             feed.T, eps=self.eps, t_real=t_real, max_run=self.max_run,
             block_s=self.block_s, block_t=self.block_t, carry=self._carry,
             **self._kw)
         return ev_brk, ev_a, ev_b, carry_out
+
+    def _deferred_collect(self, launch_evs, rows: int, consumed: int,
+                          flush_evs=None) -> SegmentOutput:
+        """Scatter position-tagged events into the host pending buffers;
+        release the prefix no future event can target (all on flush).
+        The buffer/frontier logic is the shared
+        ``jax_pla._release_deferred`` engine; this wrapper only converts
+        the kernel's time-major, launch-local events to (S, w) absolute
+        batches."""
+        S = self.n_streams
+        batches = []
+        if launch_evs is not None:
+            ev, pos, ea, ev_v = launch_evs
+            batches.append((np.asarray(ev[:rows, :S]).T,
+                            np.asarray(pos[:rows, :S]).T
+                            .astype(np.int64) + self._t,
+                            np.asarray(ea[:rows, :S]).T,
+                            np.asarray(ev_v[:rows, :S]).T))
+        flush_tail = None
+        if flush_evs is not None:
+            (ev1, p1, a1, v1), flush_tail = flush_evs
+            batches.append((np.asarray(ev1)[:S, None],
+                            np.asarray(p1)[:S, None]
+                            .astype(np.int64) + self._t,
+                            np.asarray(a1)[:S, None],
+                            np.asarray(v1)[:S, None]))
+        out, self._ev_pend, self._det, self._released = release_deferred(
+            self._ev_pend, self._det, self._released, self._t + consumed,
+            batches, flush_tail)
+        return out
 
     def _events_to_out(self, ev_brk, ev_a, ev_b, rows: int) -> SegmentOutput:
         """Event rows [0, rows) -> finalized columns; an event at local row
@@ -274,6 +394,12 @@ class StreamingSegmenter:
         feed, rest = buf[:, :m], buf[:, m:]
         self._pend = [rest] if rest.shape[1] else []
         self._navail -= m
+        if self._deferred:
+            ev, pos, ea, ev_v, carry_out = self._launch(feed, t_real=m)
+            out = self._deferred_collect((ev, pos, ea, ev_v), m, m)
+            self._carry = self._shift(carry_out, m)
+            self._t += m
+            return out
         ev_brk, ev_a, ev_b, carry_out = self._launch(feed, t_real=-1)
         out = self._events_to_out(ev_brk, ev_a, ev_b, m)
         self._carry = self._shift(carry_out, m)
@@ -288,6 +414,28 @@ class StreamingSegmenter:
         r = self._navail
         if self._t == 0 and r == 0:
             return self._empty()
+        if self._deferred:
+            # Launch any remainder inert-padded (no in-kernel flush), then
+            # close the stream from the carry on the host — the same
+            # jitted flush as the offline wrapper, hence bit-identical.
+            if r:
+                buf = self._pend[0] if len(self._pend) == 1 \
+                    else jnp.concatenate(self._pend, axis=1)
+                pad = jnp.repeat(buf[:, -1:], self.block_t - r, axis=1)
+                feed = jnp.concatenate([buf, pad], axis=1)
+                ev, pos, ea, ev_v, carry_out = self._launch(feed, t_real=r)
+                launch_evs = (ev, pos, ea, ev_v)
+            else:
+                carry_out = self._carry
+                launch_evs = None
+            self._pend = []
+            self._navail = 0
+            flush_evs = self._flush_fn(carry_out, self.eps, self.window,
+                                       r - 1)
+            out = self._deferred_collect(launch_evs, r, r,
+                                         flush_evs=flush_evs)
+            self._t += r
+            return out
         # Final launch: r real columns + padding (repeat of the last real
         # value) to one time block; the forced break at local row r closes
         # the trailing run, so event rows 0..r finalize positions up to T-1.

@@ -12,11 +12,12 @@ from __future__ import annotations
 import jax
 
 from repro.core.jax_pla import (SegmentOutput, angle_segment,
-                                disjoint_segment, linear_segment,
+                                continuous_segment, disjoint_segment,
+                                linear_segment, mixed_segment,
                                 swing_segment, propagate_lines)
 
 __all__ = ["swing_ref", "angle_ref", "disjoint_ref", "linear_ref",
-           "reconstruct_ref",
+           "continuous_ref", "mixed_ref", "reconstruct_ref",
            "REF_SEGMENTERS"]
 
 
@@ -36,6 +37,15 @@ def linear_ref(y: jax.Array, eps: float, max_run: int = 256) -> SegmentOutput:
     return linear_segment(y, eps, max_run=max_run)
 
 
+def continuous_ref(y: jax.Array, eps: float, max_run: int = 256
+                   ) -> SegmentOutput:
+    return continuous_segment(y, eps, max_run=max_run)
+
+
+def mixed_ref(y: jax.Array, eps: float, max_run: int = 256) -> SegmentOutput:
+    return mixed_segment(y, eps, max_run=max_run)
+
+
 def reconstruct_ref(seg: SegmentOutput) -> jax.Array:
     return propagate_lines(seg)
 
@@ -45,4 +55,6 @@ REF_SEGMENTERS = {
     "angle": angle_ref,
     "disjoint": disjoint_ref,
     "linear": linear_ref,
+    "continuous": continuous_ref,
+    "mixed": mixed_ref,
 }

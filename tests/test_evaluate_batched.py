@@ -1,0 +1,129 @@
+"""evaluate_batched over all 13 Table-2 combinations + edge paths (ISSUE 4).
+
+Covers: the counter-cap guard on ``max_run``, batched-vs-sequential
+summary agreement for every combination (the sequential pipeline is the
+golden reference, compared at the engine's matched run cap), ε retuning
+through ``StreamingAdaptiveEps`` on the deferred methods, device
+reconstruction of connected-knot records, and the paper-eval smoke
+producing Table-3 numbers for all 13 combinations through the batched
+pipeline.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import COMBINATIONS, evaluate, evaluate_batched, jax_pla
+from repro.core.evaluate import BATCHED_SEGMENTERS
+from repro.core.protocols import PROTOCOL_CAPS
+
+
+def _walks(seed=0, S=3, T=400):
+    rng = np.random.default_rng(seed)
+    y = np.cumsum(rng.normal(0, 0.6, (S, T)), axis=1)
+    y[-1] = rng.normal(0, 25, T)  # noisy row: singleton/burst paths
+    return y.astype(np.float32)
+
+
+def test_batched_segmenters_cover_all_six_methods():
+    assert sorted(BATCHED_SEGMENTERS) == sorted(
+        {m for m, _ in COMBINATIONS.values()})
+    assert {"continuous", "mixed"} <= set(BATCHED_SEGMENTERS)
+
+
+def test_max_run_counter_cap_guard():
+    y = _walks(S=2, T=64)
+    with pytest.raises(ValueError, match="counter cap"):
+        evaluate_batched("disjoint", "singlestreamv", y, 1.0, max_run=256)
+    with pytest.raises(ValueError, match="counter cap"):
+        evaluate_batched("angle", "singlestream", y, 1.0, max_run=300)
+    with pytest.raises(ValueError, match="no batched segmenter"):
+        evaluate_batched("nope", "implicit", y, 1.0)
+    # cap == max_run is legal; implicit is uncapped (engine default 256)
+    evaluate_batched("disjoint", "singlestreamv", y, 1.0, max_run=127)
+    r = evaluate_batched("mixed", "implicit", y, 1.0, max_run=512)
+    assert r.n_records.min() >= 1
+
+
+@pytest.mark.parametrize("key", sorted(COMBINATIONS))
+def test_batched_summary_agrees_with_sequential(key):
+    """Per-combination agreement of the pooled §4.2 summaries against the
+    sequential golden pipeline at the engine's matched run cap."""
+    method, proto = COMBINATIONS[key]
+    y = _walks(seed=5, S=3, T=400)
+    ts = np.arange(y.shape[1], dtype=float)
+    eps = 1.0
+    cap = PROTOCOL_CAPS[proto] or 256
+    r = evaluate_batched(method, proto, y, eps)
+    stats = r.metrics.pooled_summary()
+    seqs = [evaluate(method, proto, ts, y[s], eps, max_run=cap)
+            for s in range(y.shape[0])]
+    for m in ("ratio", "latency", "error"):
+        ref = np.concatenate([getattr(s.metrics, m) for s in seqs])
+        got = stats[m]["mean"]
+        assert abs(got - ref.mean()) <= 0.02 * (abs(ref.mean()) + 1e-2), \
+            (key, m, got, ref.mean())
+    ref_overall = np.mean([s.overall_ratio for s in seqs])
+    assert abs(np.mean(r.overall_ratio) - ref_overall) \
+        <= 0.02 * ref_overall, key
+    ref_records = sum(s.n_records for s in seqs)
+    assert abs(int(r.n_records.sum()) - ref_records) \
+        <= max(2, 0.02 * ref_records), key
+
+
+def test_per_stream_eps_vector():
+    y = _walks(seed=7, S=3, T=300)
+    eps = np.asarray([0.2, 1.0, 5.0], np.float32)
+    r = evaluate_batched("continuous", "implicit", y, eps)
+    # per-row guarantee was checked inside (check_eps); sizes ordered
+    assert r.n_records[0] >= r.n_records[1]
+
+
+def test_streaming_adaptive_eps_on_deferred_methods():
+    """StreamingAdaptiveEps drives the new methods' chunked engine: ε
+    retunes across a regime change and errors stay bounded by the largest
+    active ε."""
+    from repro.core.adaptive import StreamingAdaptiveEps
+    rng = np.random.default_rng(11)
+    n = 2048
+    ys = np.concatenate([np.cumsum(rng.normal(0, 0.02, n // 2)),
+                         10 * rng.normal(0, 1.0, n - n // 2)])
+    for method in ("continuous", "mixed"):
+        ctl = StreamingAdaptiveEps(target_ratio=0.3, eps0=0.1,
+                                   method=method)
+        rep = ctl.run(ys, chunk=256)
+        eps_vals = [e for _, e in rep["eps_trace"]]
+        assert max(eps_vals) / min(eps_vals) > 3, method
+        assert 0 < rep["overall_ratio"] < 1.2, method
+        assert rep["errors"].max() <= max(eps_vals) * (1 + 1e-4) + 1e-4, \
+            method
+
+
+def test_reconstruct_records_tpu_on_connected_knot_records():
+    """Continuous (connected-knot) segmentations survive the fixed-slot
+    record round trip and the device reconstruction kernel."""
+    from repro.kernels.ops import reconstruct_records_tpu
+    y = jnp.asarray(_walks(seed=13, S=4, T=160)[:, :160])
+    seg = jax_pla.continuous_segment(y, 1.0, max_run=24)
+    rec = jax_pla.to_records(seg, 160)
+    assert int(rec.overflow.sum()) == 0
+    ref = np.asarray(jax_pla.propagate_lines(seg))
+    out = np.asarray(reconstruct_records_tpu(rec, 160, block_s=8,
+                                             block_t=32))
+    np.testing.assert_array_equal(out, ref)
+    assert np.abs(ref - np.asarray(y)).max() <= 1.0 * (1 + 1e-4) + 1e-4
+
+
+def test_paper_eval_smoke_all_13_combinations(tmp_path, monkeypatch):
+    """The BENCH_SMOKE paper evaluation produces Table-3 numbers for all
+    13 combinations through evaluate_batched."""
+    import benchmarks.paper_eval as pe
+    monkeypatch.setattr(pe, "BENCH_PATH", str(tmp_path / "BENCH_paper.json"))
+    rep = pe.paper_smoke(n=256, files=2)
+    assert (tmp_path / "BENCH_paper.json").exists()
+    for eps, combos in rep["results"].items():
+        assert sorted(combos) == sorted(COMBINATIONS)
+        for k, stats in combos.items():
+            assert np.isfinite(stats["overall_ratio"])
+            for m in ("ratio", "latency", "error"):
+                assert np.isfinite(stats[m]["mean"]), (eps, k, m)

@@ -181,6 +181,41 @@ def test_emitter_chunked_equals_offline():
                             (method, protocol, splits, s)
 
 
+def test_emitter_vectorized_bookkeeping_bit_identical_at_s256():
+    """The vectorized (array-state, O(events)) emitter stays bit-identical
+    to encode_batch on a 256-stream fleet for every protocol (ISSUE 4:
+    the per-stream Python row-codec walk was hoisted into numpy)."""
+    S, T = 256, 96
+    rng = np.random.default_rng(21)
+    y = np.cumsum(rng.normal(0, 0.6, (S, T)), axis=1).astype(np.float32)
+    y[::5] = rng.normal(0, 25, (len(range(0, S, 5)), T))  # singleton rows
+    for protocol in ENGINE_PROTOCOLS:
+        cap = PROTOCOL_CAPS[protocol] or 256
+        seg = jax_pla.disjoint_segment(y, 1.0, max_run=cap)
+        offline = encode_batch(seg, y, protocol)
+        st = jax_pla.init_state("disjoint", S, 1.0, max_run=cap)
+        em = ProtocolEmitter(protocol, S)
+        got = [[] for _ in range(S)]
+        pos = 0
+        for w in (40, 31, 25):
+            st, out = jax_pla.step_chunk(st, y[:, pos:pos + w])
+            for s, b in enumerate(em.step_chunk(out, y[:, pos:pos + w])):
+                got[s].append(b)
+            pos += w
+        st, out_f = jax_pla.flush(st)
+        for s, b in enumerate(em.step_chunk(out_f)):
+            got[s].append(b)
+        for s, b in enumerate(em.flush()):
+            got[s].append(b)
+        for s in range(S):
+            if protocol == "twostreams":
+                merged = (b"".join(p[0] for p in got[s]),
+                          b"".join(p[1] for p in got[s]))
+                assert merged == tuple(offline[s]), (protocol, s)
+            else:
+                assert b"".join(got[s]) == offline[s], (protocol, s)
+
+
 def test_records_to_events_roundtrip_and_kernel_reconstruct():
     from repro.kernels.ops import (reconstruct_error_tpu,
                                    reconstruct_records_tpu)

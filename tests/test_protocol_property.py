@@ -1,33 +1,47 @@
-"""Hypothesis property tests for the protocol engine (ISSUE 3).
+"""Property tests for the protocol engine (ISSUE 3, extended in ISSUE 4).
 
 Round-trips for all four protocol codecs — engine-encoded bytes decoded
 by the *legacy* decoders (wire-format compatibility) must reconstruct
 within eps — plus SingleStreamV bursts straddling the 127 counter cap and
-chunked-vs-offline ProtocolEmitter byte equality under random splits.
+chunked-vs-offline ProtocolEmitter byte equality under random splits,
+over all six batched methods (the deferred continuous/mixed included).
+
+Every hypothesis test has a **deterministic fixed-draw twin** running the
+same check body on handpicked draws, so the suite exercises these paths
+even when hypothesis is absent (dev dep; requirements-dev.txt / CI
+install it) instead of silently skipping.
 """
 
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip(
-    "hypothesis", reason="property tests need hypothesis "
-    "(pip install -r requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # fixed-draw twins below still run
+    HAVE_HYPOTHESIS = False
 
-from repro.core import jax_pla  # noqa: E402
-from repro.core.protocol_engine import (ENGINE_PROTOCOLS,  # noqa: E402
-                                        ProtocolEmitter, encode_batch)
-from repro.core.protocols import (PROTOCOL_CAPS,  # noqa: E402
-                                  decode_implicit, decode_singlestream,
-                                  decode_singlestreamv, decode_twostreams)
+from repro.core import jax_pla
+from repro.core.protocol_engine import (ENGINE_PROTOCOLS, ProtocolEmitter,
+                                        encode_batch)
+from repro.core.protocols import (PROTOCOL_CAPS, decode_implicit,
+                                  decode_singlestream, decode_singlestreamv,
+                                  decode_twostreams)
 
 SEGMENTERS = {"angle": jax_pla.angle_segment,
               "swing": jax_pla.swing_segment,
               "disjoint": jax_pla.disjoint_segment,
-              "linear": jax_pla.linear_segment}
+              "linear": jax_pla.linear_segment,
+              "continuous": jax_pla.continuous_segment,
+              "mixed": jax_pla.mixed_segment}
+KNOT_KIND = {"swing": "joint", "continuous": "continuous", "mixed": "mixed"}
 
 # Fixed stream lengths so hypothesis sweeps data/eps, not trace cache.
 T_CHOICES = (8, 64, 127, 254, 300)
+
+
+def _kk(method):
+    return KNOT_KIND.get(method, "disjoint")
 
 
 def _walk(seed, n, scale=1.0):
@@ -46,20 +60,17 @@ def _decode(protocol, blob, ts):
     return decode_singlestreamv(blob, ts)
 
 
-@pytest.mark.parametrize("protocol", ENGINE_PROTOCOLS)
-@settings(max_examples=25, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1),
-       n=st.sampled_from(T_CHOICES),
-       eps=st.floats(min_value=1e-2, max_value=20.0),
-       method=st.sampled_from(sorted(SEGMENTERS)))
-def test_property_codec_roundtrip(protocol, seed, n, eps, method):
+# ---------------------------------------------------------------------------
+# Check bodies (shared by the hypothesis sweeps and the fixed-draw twins)
+# ---------------------------------------------------------------------------
+
+def check_codec_roundtrip(protocol, seed, n, eps, method):
     """encode -> legacy decode -> reconstruct within eps, any stream."""
     y = _walk(seed, n)
     ts = np.arange(n, dtype=float)
     cap = PROTOCOL_CAPS[protocol] or 256
-    kk = "joint" if method == "swing" else "disjoint"
     seg = SEGMENTERS[method](y, eps, max_run=cap)
-    blob = encode_batch(seg, y, protocol, knot_kind=kk)[0]
+    blob = encode_batch(seg, y, protocol, knot_kind=_kk(method))[0]
     dec = np.asarray(_decode(protocol, blob, ts))
     assert len(dec) == n
     scale = float(np.abs(y).max()) + 1.0
@@ -67,11 +78,7 @@ def test_property_codec_roundtrip(protocol, seed, n, eps, method):
         (method, protocol)
 
 
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1),
-       n=st.integers(130, 400),
-       n_long=st.integers(0, 2))
-def test_property_bursts_straddle_counter_cap(seed, n, n_long):
+def check_bursts_straddle_counter_cap(seed, n, n_long):
     """Singleton runs longer than 127 split into full bursts + remainder,
     and every burst value decodes exactly."""
     rng = np.random.default_rng(seed)
@@ -100,27 +107,17 @@ def test_property_bursts_straddle_counter_cap(seed, n, n_long):
     assert singles.mean() > 0.9
 
 
-@settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1),
-       data=st.data(),
-       method=st.sampled_from(sorted(SEGMENTERS)),
-       protocol=st.sampled_from(ENGINE_PROTOCOLS))
-def test_property_emitter_equals_offline(seed, data, method, protocol):
-    """Random chunk splits: emitter bytes == offline encoder bytes."""
-    T = 96
+def check_emitter_equals_offline(seed, splits, method, protocol):
+    """Arbitrary chunk splits: emitter bytes == offline encoder bytes."""
+    T = sum(splits)
     y = _walk(seed, T, scale=0.7)
     y = np.concatenate([y, _walk(seed + 1, T, scale=20.0)])  # + noisy row
     cap = PROTOCOL_CAPS[protocol] or 256
-    kk = "joint" if method == "swing" else "disjoint"
+    kk = _kk(method)
     eps = 0.8
     seg = SEGMENTERS[method](y, eps, max_run=cap)
     offline = encode_batch(seg, y, protocol, knot_kind=kk)
 
-    splits, left = [], T
-    while left > 0:
-        w = data.draw(st.integers(1, left), label="chunk")
-        splits.append(w)
-        left -= w
     stt = jax_pla.init_state(method, 2, eps, max_run=cap)
     em = ProtocolEmitter(protocol, 2, knot_kind=kk)
     got = [[] for _ in range(2)]
@@ -142,3 +139,64 @@ def test_property_emitter_equals_offline(seed, data, method, protocol):
         else:
             merged = b"".join(got[s])
         assert merged == offline[s], (method, protocol, splits, s)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps — skipped without hypothesis
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.parametrize("protocol", ENGINE_PROTOCOLS)
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           n=st.sampled_from(T_CHOICES),
+           eps=st.floats(min_value=1e-2, max_value=20.0),
+           method=st.sampled_from(sorted(SEGMENTERS)))
+    def test_property_codec_roundtrip(protocol, seed, n, eps, method):
+        check_codec_roundtrip(protocol, seed, n, eps, method)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           n=st.integers(130, 400),
+           n_long=st.integers(0, 2))
+    def test_property_bursts_straddle_counter_cap(seed, n, n_long):
+        check_bursts_straddle_counter_cap(seed, n, n_long)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           data=st.data(),
+           method=st.sampled_from(sorted(SEGMENTERS)),
+           protocol=st.sampled_from(ENGINE_PROTOCOLS))
+    def test_property_emitter_equals_offline(seed, data, method, protocol):
+        T = 96
+        splits, left = [], T
+        while left > 0:
+            w = data.draw(st.integers(1, left), label="chunk")
+            splits.append(w)
+            left -= w
+        check_emitter_equals_offline(seed, tuple(splits), method, protocol)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic fixed-draw twins — always run
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("protocol", ENGINE_PROTOCOLS)
+@pytest.mark.parametrize("method", sorted(SEGMENTERS))
+def test_fixed_codec_roundtrip(protocol, method):
+    for seed, n, eps in ((7, 64, 0.05), (11, 254, 1.5), (13, 300, 8.0)):
+        check_codec_roundtrip(protocol, seed, n, eps, method)
+
+
+def test_fixed_bursts_straddle_counter_cap():
+    for seed, n, n_long in ((0, 300, 0), (1, 130, 2), (2, 399, 1)):
+        check_bursts_straddle_counter_cap(seed, n, n_long)
+
+
+@pytest.mark.parametrize("method", sorted(SEGMENTERS))
+def test_fixed_emitter_equals_offline(method):
+    for protocol in ENGINE_PROTOCOLS:
+        for seed, splits in ((3, (1, 30, 31, 33, 1)),
+                             (5, (96,)),
+                             (8, (50, 46))):
+            check_emitter_equals_offline(seed, splits, method, protocol)

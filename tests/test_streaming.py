@@ -25,7 +25,9 @@ from repro.kernels.reconstruct import reconstruct_pallas
 
 REF_FNS = {"angle": jax_pla.angle_segment, "swing": jax_pla.swing_segment,
            "disjoint": jax_pla.disjoint_segment,
-           "linear": jax_pla.linear_segment}
+           "linear": jax_pla.linear_segment,
+           "continuous": jax_pla.continuous_segment,
+           "mixed": jax_pla.mixed_segment}
 
 # Small kernel tiles keep interpret mode fast; chunk splits deliberately
 # include size 1, non-divisors of block_t, and a final partial chunk.
@@ -256,5 +258,6 @@ def test_telemetry_streaming_matches_guarantee_and_fallback():
         TelemetryCompressor(method="nope")
 
 
-# The hypothesis property sweep over random chunk splits lives in
-# tests/test_streaming_property.py (importorskip'd: requirements-dev).
+# The property sweep over random chunk splits lives in
+# tests/test_streaming_property.py; its deterministic fixed-draw twins run
+# even without hypothesis (requirements-dev installs the real sweep).

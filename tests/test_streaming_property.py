@@ -1,34 +1,54 @@
 """Property test: chunked == offline bit-equality under *random* splits.
 
-Covers all four Pallas kernel segmenters and the jnp reference segmenters;
-hypothesis draws arbitrary chunk partitions (sizes down to 1, non-divisors
-of the time block, final partial chunks arise naturally).  Skips when
-hypothesis is absent (dev dep; requirements-dev.txt / CI install it) — the
-deterministic split coverage in tests/test_streaming.py always runs.
+Covers all six Pallas kernel segmenters and the jnp reference segmenters
+(including the deferred continuous/mixed methods, whose chunked output
+has data-dependent widths); hypothesis draws arbitrary chunk partitions
+(sizes down to 1, non-divisors of the time block, final partial chunks
+arise naturally).
+
+Every hypothesis test has a **deterministic fixed-draw twin** that runs
+the same check body on a handpicked set of draws, so the suite still
+exercises these code paths when hypothesis is absent (dev dep;
+requirements-dev.txt / CI install it) instead of silently skipping.
 
 The small helpers below intentionally mirror tests/test_streaming.py
 rather than importing from it: this module must stay importable on its
-own under ``importorskip`` regardless of pytest's import mode (test
-modules are not reliably importable from each other without a package).
+own regardless of pytest's import mode (test modules are not reliably
+importable from each other without a package).
 """
 
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # fixed-draw twins below still run
+    HAVE_HYPOTHESIS = False
 
-from repro.core import jax_pla  # noqa: E402
-from repro.core.jax_pla import (STREAMING_METHODS, flush,  # noqa: E402
-                                init_state, step_chunk)
-from repro.kernels.ops import (KERNEL_SEGMENTERS,  # noqa: E402
-                               StreamingSegmenter)
+from repro.core import jax_pla
+from repro.core.jax_pla import (STREAMING_METHODS, flush, init_state,
+                                step_chunk)
+from repro.kernels.ops import KERNEL_SEGMENTERS, StreamingSegmenter
 
 REF_FNS = {"angle": jax_pla.angle_segment, "swing": jax_pla.swing_segment,
            "disjoint": jax_pla.disjoint_segment,
-           "linear": jax_pla.linear_segment}
+           "linear": jax_pla.linear_segment,
+           "continuous": jax_pla.continuous_segment,
+           "mixed": jax_pla.mixed_segment}
 KBLOCK_T = 32  # small tiles keep interpret mode fast
+
+# Fixed draws for the deterministic twins: (T, splits, seed) covering
+# chunk width 1, non-divisors of the kernel time block, single-chunk, and
+# final partial chunks.
+FIXED_SPLITS = (
+    (105, (1, 31, 32, 40, 1), 0),
+    (97, (50, 47), 1),
+    (64, (64,), 2),
+    (41, (3, 7, 1, 13, 17), 3),
+    (9, tuple([1] * 9), 4),
+)
 
 
 def _make(seed, S, T):
@@ -48,23 +68,11 @@ def _assert_bit_equal(chunks, offline, label):
     np.testing.assert_array_equal(v, np.asarray(offline.v), err_msg=label)
 
 
-@st.composite
-def _splits(draw, t_min=2, t_max=140):
-    T = draw(st.integers(t_min, t_max))
-    widths = []
-    left = T
-    while left:
-        w = draw(st.integers(1, left))
-        widths.append(w)
-        left -= w
-    return T, tuple(widths)
+# ---------------------------------------------------------------------------
+# Check bodies (shared by the hypothesis sweeps and the fixed-draw twins)
+# ---------------------------------------------------------------------------
 
-
-@settings(max_examples=10, deadline=None)
-@given(data=st.data(), method=st.sampled_from(sorted(STREAMING_METHODS)),
-       seed=st.integers(0, 2**16))
-def test_property_core_chunked_equals_offline(data, method, seed):
-    T, splits = data.draw(_splits())
+def check_core_chunked_equals_offline(method, T, splits, seed):
     y = _make(seed, 3, T)
     offline = REF_FNS[method](y, 1.0, max_run=24)
     state = init_state(method, 3, 1.0, max_run=24)
@@ -79,11 +87,7 @@ def test_property_core_chunked_equals_offline(data, method, seed):
     _assert_bit_equal(outs, offline, f"{method}/T={T}/splits={splits}")
 
 
-@settings(max_examples=6, deadline=None)
-@given(data=st.data(), method=st.sampled_from(sorted(KERNEL_SEGMENTERS)),
-       seed=st.integers(0, 2**16))
-def test_property_kernel_chunked_equals_offline(data, method, seed):
-    T, splits = data.draw(_splits(t_max=100))
+def check_kernel_chunked_equals_offline(method, T, splits, seed):
     y = _make(seed, 3, T)
     offline = KERNEL_SEGMENTERS[method](y, 1.0, max_run=24,
                                         block_t=KBLOCK_T)
@@ -95,3 +99,52 @@ def test_property_kernel_chunked_equals_offline(data, method, seed):
         pos += w
     outs.append(ss.finish())
     _assert_bit_equal(outs, offline, f"{method}/T={T}/splits={splits}")
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps (random splits) — skipped without hypothesis
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def _splits(draw, t_min=2, t_max=140):
+        T = draw(st.integers(t_min, t_max))
+        widths = []
+        left = T
+        while left:
+            w = draw(st.integers(1, left))
+            widths.append(w)
+            left -= w
+        return T, tuple(widths)
+
+    @settings(max_examples=10, deadline=None)
+    @given(data=st.data(),
+           method=st.sampled_from(sorted(STREAMING_METHODS)),
+           seed=st.integers(0, 2**16))
+    def test_property_core_chunked_equals_offline(data, method, seed):
+        T, splits = data.draw(_splits())
+        check_core_chunked_equals_offline(method, T, splits, seed)
+
+    @settings(max_examples=6, deadline=None)
+    @given(data=st.data(),
+           method=st.sampled_from(sorted(KERNEL_SEGMENTERS)),
+           seed=st.integers(0, 2**16))
+    def test_property_kernel_chunked_equals_offline(data, method, seed):
+        T, splits = data.draw(_splits(t_max=100))
+        check_kernel_chunked_equals_offline(method, T, splits, seed)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic fixed-draw twins — always run
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", sorted(STREAMING_METHODS))
+def test_fixed_core_chunked_equals_offline(method):
+    for T, splits, seed in FIXED_SPLITS:
+        check_core_chunked_equals_offline(method, T, splits, seed)
+
+
+@pytest.mark.parametrize("method", sorted(KERNEL_SEGMENTERS))
+def test_fixed_kernel_chunked_equals_offline(method):
+    for T, splits, seed in FIXED_SPLITS[:3]:
+        check_kernel_chunked_equals_offline(method, T, splits, seed)
