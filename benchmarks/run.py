@@ -9,7 +9,8 @@ import time
 
 def main() -> None:
     t0 = time.time()
-    from . import figures, framework_bench, protocol_bench, streaming_bench
+    from . import (figures, fleet_bench, framework_bench, protocol_bench,
+                   streaming_bench)
 
     csv_rows = []
 
@@ -34,6 +35,10 @@ def main() -> None:
     csv_rows.extend(framework_bench.grad_compression_bench())
     csv_rows.extend(framework_bench.kv_cache_bench())
     csv_rows.extend(framework_bench.adaptive_eps_bench())
+    # Under this aggregator jax initialized long ago, so the fleet bench's
+    # 8-fake-device XLA flag can't apply — the scaling sweep degrades to
+    # the ambient device count; run it standalone for the full curve.
+    csv_rows.extend(fleet_bench.fleet_bench())          # -> BENCH_fleet.json
 
     print("\nname,us_per_call,derived")
     for name, us, derived in csv_rows:

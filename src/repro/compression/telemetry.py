@@ -17,6 +17,15 @@ work is O(new points) and the blob is bit-identical to the offline
 codec.  Channels need uniformly spaced steps for the index-grid engine;
 irregular channels transparently fall back to the exact sequential
 methods + record codec (as does ``streaming=False``).
+
+The deferred methods (``continuous`` / ``mixed``) stream too: their
+``step_chunk`` releases a *data-dependent* number of columns (a segment
+resolves only at the next break — the paper's extra segment of latency),
+so the sender is **lag-aware** — it tracks each channel's released-column
+watermark (:meth:`TelemetryCompressor.lag` = appended minus wire-ready
+points) and lets the emitter buffer values ahead of their events; the
+periodic flush closes the run, which releases the lagging tail.  The
+window blob stays bit-identical to the offline batched codec.
 """
 
 from __future__ import annotations
@@ -51,13 +60,13 @@ class TelemetryCompressor:
         self.eps = eps
         self.method = method
         self.flush_every = flush_every
-        # Only the uniform-width streaming methods feed the per-flush wire
-        # path; the deferred-output methods (continuous/mixed) release
-        # event columns one segment late, which would starve the periodic
-        # sender, so they keep the batch flush path.
-        from repro.core.jax_pla import DEFERRED_METHODS, STREAMING_METHODS
-        self.streaming = streaming and method in STREAMING_METHODS \
-            and method not in DEFERRED_METHODS
+        # Every streaming method feeds the per-flush wire path; the
+        # deferred-output methods (continuous/mixed) release event columns
+        # one segment late, which the lag-aware plumbing absorbs: the
+        # emitter buffers values ahead of their events and the watermark
+        # (self._released) tracks how much of each channel is wire-ready.
+        from repro.core.jax_pla import STREAMING_METHODS
+        self.streaming = streaming and method in STREAMING_METHODS
         self.step_every = max(1, step_every)
         self.buffers: Dict[str, List[float]] = {}
         self.steps: Dict[str, List[int]] = {}
@@ -65,6 +74,7 @@ class TelemetryCompressor:
         self._emitters: Dict[str, ProtocolEmitter] = {}
         self._wire: Dict[str, bytearray] = {}
         self._stepped: Dict[str, int] = {}
+        self._released: Dict[str, int] = {}   # wire-ready watermark
         self._irregular: Dict[str, bool] = {}
         self.sent_bytes = 0
         self.raw_bytes = 0
@@ -101,6 +111,7 @@ class TelemetryCompressor:
         self._emitters.pop(name, None)
         self._wire.pop(name, None)
         self._stepped[name] = 0
+        self._released[name] = 0
 
     def _emitter(self, name: str) -> ProtocolEmitter:
         em = self._emitters.get(name)
@@ -134,6 +145,10 @@ class TelemetryCompressor:
         st, out = jax_pla.step_chunk(st, y)
         self._states[name] = st
         self._stepped[name] = len(self.buffers[name])
+        # Wire-ready watermark: for the deferred methods (continuous /
+        # mixed) this lags the consumed count by the unresolved tail; the
+        # emitter buffers the early values until their events release.
+        self._released[name] = int(st.emitted)
         em = self._emitter(name)
         self._wire[name] += em.step_chunk(
             out, np.asarray(vals, np.float64)[None])[0]
@@ -152,7 +167,15 @@ class TelemetryCompressor:
         st, out_f = jax_pla.flush(st)
         wire += em.step_chunk(out_f)[0]
         wire += em.flush()[0]
+        self._released[name] = int(st.emitted)
         return bytes(wire)
+
+    def lag(self, name: str) -> int:
+        """Points of channel ``name`` not yet wire-ready (appended minus
+        the released-column watermark).  For the deferred methods this
+        includes the paper's extra segment of latency; the periodic flush
+        always drains it to the window boundary."""
+        return len(self.buffers.get(name, ())) - self._released.get(name, 0)
 
     # ---- flush -----------------------------------------------------------
 
@@ -163,6 +186,7 @@ class TelemetryCompressor:
         self.buffers[name] = []
         self.steps[name] = []
         self._stepped[name] = 0
+        self._released[name] = 0
         if blob is None:
             cap = PROTOCOL_CAPS["singlestreamv"]
             out = METHODS[self.method](ts, ys, self.eps, max_run=cap)

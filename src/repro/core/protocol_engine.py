@@ -28,7 +28,17 @@ by the byte encoders for wire compatibility with the sequential methods.
 :mod:`repro.core.jax_pla`) that consumes finalized event columns plus the
 raw value columns and emits wire-ready bytes incrementally, bit-identical
 to the offline encoders — the concatenation of every ``step_chunk`` output
-plus the ``flush`` output equals the one-shot encoding.
+plus the ``flush`` output equals the one-shot encoding.  Its byte
+assembly is a **fused cumsum-offset packer**: one flat buffer per chunk,
+vectorized sizes/offsets/field scatters, no per-event Python (the same
+technique as :func:`_encode_row`, made stateful across chunks).
+
+For device-sharded fleets (:mod:`repro.sharding.fleet`) the metrics
+pipeline splits at the descriptor level: :func:`protocol_descriptors` /
+:func:`metrics_from_descriptors` run per shard on device, and the exact
+float64 host finish (:func:`descriptors_point_metrics`) is shared with
+:func:`batched_point_metrics` — descriptor math is per-stream
+independent, so sharding is invisible in the numbers.
 
 The legacy Python codecs remain the golden references:
 :func:`to_method_outputs` translates a ``SegmentOutput`` row back into the
@@ -55,6 +65,7 @@ __all__ = [
     "ENGINE_PROTOCOLS", "KNOT_KINDS", "PROTOCOL_MIN_SEG",
     "ProtocolPointDescriptors",
     "protocol_descriptors", "protocol_point_metrics", "protocol_nbytes",
+    "metrics_from_descriptors", "descriptors_point_metrics",
     "batched_point_metrics", "encode_batch", "to_method_outputs",
     "ProtocolEmitter",
 ]
@@ -270,6 +281,15 @@ def protocol_point_metrics(seg: SegmentOutput, y: jax.Array, protocol: str,
     ``v + a * (t - seg_end)`` — no scan, no per-record host work.
     """
     d = protocol_descriptors(seg, protocol, knot_kind, burst_cap)
+    return metrics_from_descriptors(d, y)
+
+
+def metrics_from_descriptors(d: ProtocolPointDescriptors, y: jax.Array
+                             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """The device (float32) §4.2 metric expressions over precomputed
+    descriptors — shared by :func:`protocol_point_metrics` and the
+    sharded fleet pipeline (:mod:`repro.sharding.fleet`), where the
+    descriptors already live on each device shard."""
     pos = jnp.arange(y.shape[1], dtype=jnp.int32)[None, :]
     ratio = (d.rec_bytes.astype(jnp.float32) / VALUE_BYTES) \
         / d.rec_len.astype(jnp.float32)
@@ -322,6 +342,23 @@ def batched_point_metrics(seg: SegmentOutput, ys, protocol: str,
     that path's float32 rounding.
     """
     d = protocol_descriptors(seg, protocol, knot_kind, burst_cap)
+    return descriptors_point_metrics(d, ys, eps=eps, y_hat=y_hat,
+                                     abs_err=abs_err)
+
+
+def descriptors_point_metrics(d: ProtocolPointDescriptors, ys, *,
+                              eps: Optional[float] = None,
+                              y_hat=None, abs_err=None
+                              ) -> BatchedPointMetrics:
+    """The float64 host finish of :func:`batched_point_metrics` over
+    already-computed (possibly device-sharded) descriptors.
+
+    Descriptor math is per-stream independent, so descriptors computed
+    shard-by-shard (:mod:`repro.sharding.fleet`) equal the full-batch
+    descriptors row for row — finishing them here keeps the fleet
+    pipeline bit-equal per stream to the single-device
+    :func:`batched_point_metrics`.
+    """
     ys = np.asarray(ys, np.float64)
     S, T = ys.shape
     pos = np.arange(T, dtype=np.float64)[None, :]
@@ -598,10 +635,15 @@ class ProtocolEmitter:
 
     The per-stream row-codec bookkeeping (segment counter, previous break
     and line, burst window, pending disjoint y'') lives in flat ``(S,)``
-    numpy arrays, and per chunk the event coordinates and line conversions
-    are computed for all streams in one vectorized pass — ``step_chunk``
-    then walks only the actual events (``np.nonzero``), not all ``S``
-    streams, so fleets of mostly-quiet channels cost O(events), not O(S).
+    numpy arrays, and the whole chunk packs in one fused vectorized pass:
+    event extraction (``np.nonzero``), line conversion, per-record byte
+    sizes, ``cumsum`` byte offsets into a single flat buffer, and
+    ``_put_f64``-style scatters for every field — the same technique as
+    the offline :func:`_encode_row`, with the cross-event codec state
+    (previous break/line, burst fill, pending y'') resolved by grouped
+    shifts and segmented cumulative sums instead of a Python walk.  No
+    per-event Python runs even in the dense-event worst case (every point
+    a singleton); quiet fleets cost O(events), not O(S).
 
     ``knot_kind`` extends to the deferred methods: ``"continuous"``
     (joint knots on the connected polyline, opening knot on the first
@@ -642,17 +684,9 @@ class ProtocolEmitter:
 
     # -- plumbing -----------------------------------------------------------
 
-    def _t(self, i: int) -> float:
-        return self.t0 + self.dt * float(i)
-
-    def _y(self, s: int, lo: int, hi: int) -> np.ndarray:
-        """Values for absolute positions [lo, hi)."""
-        if lo < self._ybase or hi > self._ybase + self._ybuf.shape[1]:
-            raise ValueError(
-                f"record needs values [{lo}, {hi}) but only "
-                f"[{self._ybase}, {self._ybase + self._ybuf.shape[1]}) "
-                f"were pushed — pass y_chunk no later than its events")
-        return self._ybuf[s, lo - self._ybase:hi - self._ybase]
+    def _t(self, i):
+        """Wall-clock time of absolute position(s) ``i`` (vectorized)."""
+        return self.t0 + self.dt * np.asarray(i, np.float64)
 
     def _trim(self) -> None:
         """Drop value columns no future record can reference."""
@@ -668,101 +702,266 @@ class ProtocolEmitter:
             self._ybuf = self._ybuf[:, drop:]
             self._ybase = keep_from
 
-    def _flush_burst(self, s: int, out: bytearray) -> None:
-        n = int(self._pend_len[s])
-        if not n:
-            return
-        start = int(self._pend_start[s])
-        vals = self._y(s, start, start + n)
-        out += np.int8(-n).tobytes()
-        out += np.ascontiguousarray(vals, "<f8").tobytes()
-        self._pend_start[s] = start + n
-        self._pend_len[s] = 0
+    def _gather_runs(self, rows, lo, lens):
+        """Buffered values of contiguous runs ``[lo, lo + lens)``, flat.
 
-    def _implicit_knot(self, s: int, e: int, A: float, B: float,
-                       out: bytearray) -> None:
-        """Implicit-protocol knot emission at the break of segment k."""
+        Returns ``(vals, within)``: the concatenated run values and each
+        value's index inside its own run — exactly what the packers need
+        to scatter variable-length payloads at ``repeat(offs) + k*within``
+        byte positions in one shot.
+        """
+        lens = np.asarray(lens, np.int64)
+        total = int(lens.sum())
+        if total == 0:
+            return np.empty(0, np.float64), np.empty(0, np.int64)
+        lo = np.asarray(lo, np.int64)
+        have_lo = self._ybase
+        have_hi = self._ybase + self._ybuf.shape[1]
+        bad = (lo < have_lo) | (lo + lens > have_hi)
+        if bad.any():
+            b = int(np.flatnonzero(bad)[0])
+            raise ValueError(
+                f"record needs values [{int(lo[b])}, {int(lo[b] + lens[b])})"
+                f" but only [{have_lo}, {have_hi}) were pushed — pass "
+                f"y_chunk no later than its events")
+        within = np.arange(total, dtype=np.int64) \
+            - np.repeat(np.cumsum(lens) - lens, lens)
+        vals = self._ybuf[np.repeat(rows, lens),
+                          np.repeat(lo - have_lo, lens) + within]
+        return vals, within
+
+    def _per_stream(self, buf: np.ndarray, sizes: np.ndarray, ss) -> List:
+        """Slice the flat event-major buffer into one bytes per stream.
+
+        Event order is stream-major (``np.nonzero`` row-major), so each
+        stream's records are contiguous in ``buf``.
+        """
+        out = [b""] * self.n_streams
+        per = np.zeros(self.n_streams, np.int64)
+        np.add.at(per, ss, sizes.astype(np.int64))
+        ends = np.cumsum(per)
+        for s in np.flatnonzero(per):
+            out[s] = buf[ends[s] - per[s]:ends[s]].tobytes()
+        return out
+
+    def _check_cap(self, n, long) -> None:
+        n_cap = 127 if self.protocol == "singlestreamv" else 256
+        bad = long & (n > n_cap)
+        if bad.any():
+            raise ValueError(
+                f"{self.protocol}: segment of {int(n[bad][0])} points "
+                f"exceeds the {n_cap}-point counter range — segment with "
+                f"max_run=PROTOCOL_CAPS[{self.protocol!r}]")
+
+    def _event_geometry(self, ss, jj, a, v) -> "_ChunkEvents":
+        """Per-event codec geometry, resolved without a Python walk.
+
+        Cross-event state (previous break position / line, segment
+        ordinal) comes from the carried ``(S,)`` arrays for each stream's
+        first event of the chunk and from a one-element shift for the
+        rest — events are stream-major so a stream's events are adjacent.
+        """
+        es = self._epos + jj.astype(np.int64)
+        As = a / self.dt
+        Bs = v - a * es - As * self.t0
+        N = len(ss)
+        first = np.empty(N, bool)
+        first[0] = True
+        np.not_equal(ss[1:], ss[:-1], out=first[1:])
+        gstart = np.flatnonzero(first)
+        glast = np.r_[gstart[1:] - 1, N - 1]
+        counts = np.diff(np.r_[gstart, N])
+        prev = np.empty(N, np.int64)
+        prev[1:] = es[:-1]
+        prev[gstart] = self._prev_end[ss[gstart]]
+        pA = np.empty(N)
+        pA[1:] = As[:-1]
+        pA[gstart] = self._prev_A[ss[gstart]]
+        pB = np.empty(N)
+        pB[1:] = Bs[:-1]
+        pB[gstart] = self._prev_B[ss[gstart]]
+        k_ev = self._k[ss] + np.arange(N) - np.repeat(gstart, counts)
+        return _ChunkEvents(ss=ss, es=es, prev=prev, n=es - prev, As=As,
+                            Bs=Bs, pA=pA, pB=pB, k_ev=k_ev, gstart=gstart,
+                            glast=glast, counts=counts)
+
+    # -- fused packers (one flat buffer + cumsum offsets per chunk) ---------
+
+    def _pack_implicit(self, ev: "_ChunkEvents"):
         kk = self.knot_kind
-        if self._k[s] == 0:
-            if kk == "joint":
-                y0 = float(self._y(s, 0, 1)[0])
-            else:
-                y0 = A * self._t(0) + B
-            out += np.array([self._t(0), y0], "<f8").tobytes()
-        elif kk == "disjoint":
-            tb = self._t(self._prev_end[s] + 1)
-            out += np.array([-tb, self._prev_A[s] * tb + self._prev_B[s],
-                             A * tb + B], "<f8").tobytes()
-        elif kk == "mixed":
-            # The knot between the previous segment and this one: joint
-            # when the two lines agree at the shared point (continuity),
-            # else disjoint with the y'' deferred one knot (sign trick).
-            tb = self._t(self._prev_end[s] + 1)
-            y1 = self._prev_A[s] * tb + self._prev_B[s]
-            y2 = A * tb + B
-            if self._has_y2[s]:
-                out += np.array([self._pend_y2[s]], "<f8").tobytes()
-                self._has_y2[s] = False
-            if abs(y1 - y2) <= _JOINT_RTOL * (1 + abs(y1) + abs(y2)):
-                out += np.array([tb, y1], "<f8").tobytes()
-            else:
-                out += np.array([-tb, y1], "<f8").tobytes()
-                self._pend_y2[s] = y2
-                self._has_y2[s] = True
+        o = ev.k_ev == 0                      # stream's first-ever event
+        no = int(o.sum())
+        te = self._t(ev.es)
+        ye = ev.As * te + ev.Bs
+        t0_ = self._t(0)
         if kk in ("joint", "continuous"):
-            te = self._t(e)
-            out += np.array([te, A * te + B], "<f8").tobytes()
+            sizes = np.where(o, 32, 16)
+            offs, total = _excl_offsets(sizes)
+            buf = np.zeros(total, np.uint8)
+            if no:
+                if kk == "joint":   # wedge origin: the raw first value
+                    y_open, _ = self._gather_runs(
+                        ev.ss[o], np.zeros(no, np.int64),
+                        np.ones(no, np.int64))
+                else:               # polyline: the first line at t0
+                    y_open = ev.As[o] * t0_ + ev.Bs[o]
+                _put_f64(buf, offs[o], np.full(no, t0_))
+                _put_f64(buf, offs[o] + 8, y_open)
+            coff = offs + 16 * o
+            _put_f64(buf, coff, te)
+            _put_f64(buf, coff + 8, ye)
+            return buf, sizes
+        # Disjoint-family kinds: the knot lives at the previous segment's
+        # break; y1/y2 are the two lines evaluated at the shared point.
+        m = ~o
+        tb = self._t(ev.prev + 1)
+        y1 = ev.pA * tb + ev.pB
+        y2 = ev.As * tb + ev.Bs
+        if kk == "disjoint":
+            sizes = np.where(o, 16, 24)
+            offs, total = _excl_offsets(sizes)
+            buf = np.zeros(total, np.uint8)
+            if no:
+                _put_f64(buf, offs[o], np.full(no, t0_))
+                _put_f64(buf, offs[o] + 8, ev.As[o] * t0_ + ev.Bs[o])
+            _put_f64(buf, offs[m], -tb[m])
+            _put_f64(buf, offs[m] + 8, y1[m])
+            _put_f64(buf, offs[m] + 16, y2[m])
+            return buf, sizes
+        # mixed: joint knots by line continuity; a disjoint knot defers
+        # its y'' one knot (Luo et al.'s sign trick).  The pending y''
+        # chains event-to-event: a one-element shift of the disjoint
+        # flags/values, seeded from the carried per-stream state.
+        joint = np.abs(y1 - y2) <= _JOINT_RTOL * (1 + np.abs(y1)
+                                                  + np.abs(y2))
+        dj = m & ~joint
+        N = len(ev.ss)
+        pw = np.empty(N, bool)
+        pv = np.empty(N, np.float64)
+        pw[1:] = dj[:-1]
+        pv[1:] = y2[:-1]
+        pw[ev.gstart] = self._has_y2[ev.ss[ev.gstart]]
+        pv[ev.gstart] = self._pend_y2[ev.ss[ev.gstart]]
+        pw &= m                       # a first-ever event has no knot yet
+        sizes = np.where(o, 16, 16 + 8 * pw)
+        offs, total = _excl_offsets(sizes)
+        buf = np.zeros(total, np.uint8)
+        if no:
+            _put_f64(buf, offs[o], np.full(no, t0_))
+            _put_f64(buf, offs[o] + 8, ev.As[o] * t0_ + ev.Bs[o])
+        _put_f64(buf, offs[pw], pv[pw])
+        koff = offs + 8 * pw
+        _put_f64(buf, koff[m], np.where(joint[m], tb[m], -tb[m]))
+        _put_f64(buf, koff[m] + 8, y1[m])
+        gs = ev.ss[ev.gstart]
+        self._has_y2[gs] = dj[ev.glast]
+        self._pend_y2[gs] = np.where(dj[ev.glast], y2[ev.glast],
+                                     self._pend_y2[gs])
+        return buf, sizes
 
-    def _on_break(self, s: int, e: int, A: float, B: float,
-                  seg_out: bytearray, single_out: bytearray) -> None:
-        """One finalized segment [prev_end+1, e] with line A*t + B."""
-        start = int(self._prev_end[s]) + 1
-        n = e - int(self._prev_end[s])
-        p = self.protocol
-        if p == "implicit":
-            self._implicit_knot(s, e, A, B, seg_out)
-        elif n >= PROTOCOL_MIN_SEG[p]:
-            n_cap = 127 if p == "singlestreamv" else 256
-            if n > n_cap:
-                raise ValueError(
-                    f"{p}: segment of {n} points exceeds the {n_cap}-point "
-                    f"counter range — segment with "
-                    f"max_run=PROTOCOL_CAPS[{p!r}]")
-            if p == "singlestreamv":
-                self._flush_burst(s, seg_out)
-                seg_out += np.int8(n).tobytes()
-                seg_out += np.array([A, B], "<f8").tobytes()
-            elif p == "singlestream":
-                seg_out += np.uint8(n - 1).tobytes()
-                seg_out += np.array([A, B], "<f8").tobytes()
-            else:  # twostreams
-                seg_out += np.array([self._t(start)], "<f8").tobytes()
-                seg_out += np.uint8(n - 1).tobytes()
-                seg_out += np.array([A, B], "<f8").tobytes()
-        else:
-            vals = self._y(s, start, e + 1)
-            if p == "twostreams":
-                single_out += np.ascontiguousarray(vals, "<f8").tobytes()
-            elif p == "singlestream":
-                rec = np.zeros((n, 9), np.uint8)
-                rec[:, 1:] = np.ascontiguousarray(vals, "<f8") \
-                    .view(np.uint8).reshape(n, 8)
-                seg_out += rec.tobytes()
-            else:  # singlestreamv: buffer, splitting at the counter cap
-                self._pend_len[s] += n
-                while self._pend_len[s] >= self.burst_cap:
-                    save = int(self._pend_len[s])
-                    self._pend_len[s] = self.burst_cap
-                    self._flush_burst(s, seg_out)
-                    self._pend_len[s] = save - self.burst_cap
-        self._k[s] += 1
-        self._prev_end[s] = e
-        self._prev_A[s] = A
-        self._prev_B[s] = B
-        # Advance past the segment unless singlestreamv just buffered it
-        # into the pending burst window.
-        if p != "singlestreamv" or n >= PROTOCOL_MIN_SEG[p]:
-            self._pend_start[s] = e + 1
+    def _pack_twostreams(self, ev: "_ChunkEvents"):
+        long = ev.n >= PROTOCOL_MIN_SEG["twostreams"]
+        self._check_cap(ev.n, long)
+        sizes = np.where(long, 25, 0)
+        offs, total = _excl_offsets(sizes)
+        seg = np.zeros(total, np.uint8)
+        kl = np.flatnonzero(long)
+        _put_f64(seg, offs[kl], self._t(ev.prev[kl] + 1))
+        seg[offs[kl] + 8] = (ev.n[kl] - 1).astype(np.uint8)
+        _put_f64(seg, offs[kl] + 9, ev.As[kl])
+        _put_f64(seg, offs[kl] + 17, ev.Bs[kl])
+        sh = ~long
+        ssizes = np.where(sh, 8 * ev.n, 0)
+        soffs, stotal = _excl_offsets(ssizes)
+        single = np.zeros(stotal, np.uint8)
+        vals, within = self._gather_runs(ev.ss[sh], ev.prev[sh] + 1,
+                                         ev.n[sh])
+        _put_f64(single, np.repeat(soffs[sh], ev.n[sh]) + 8 * within, vals)
+        return (seg, sizes), (single, ssizes)
+
+    def _pack_singlestream(self, ev: "_ChunkEvents"):
+        long = ev.n >= PROTOCOL_MIN_SEG["singlestream"]
+        self._check_cap(ev.n, long)
+        sizes = np.where(long, 17, 9 * ev.n)
+        offs, total = _excl_offsets(sizes)
+        buf = np.zeros(total, np.uint8)
+        kl = np.flatnonzero(long)
+        buf[offs[kl]] = (ev.n[kl] - 1).astype(np.uint8)
+        _put_f64(buf, offs[kl] + 1, ev.As[kl])
+        _put_f64(buf, offs[kl] + 9, ev.Bs[kl])
+        sh = ~long                    # n x (0x00, value) 9-byte records
+        vals, within = self._gather_runs(ev.ss[sh], ev.prev[sh] + 1,
+                                         ev.n[sh])
+        _put_f64(buf, np.repeat(offs[sh], ev.n[sh]) + 9 * within + 1, vals)
+        return buf, sizes
+
+    def _pack_singlestreamv(self, ev: "_ChunkEvents"):
+        """Bursts as a segmented cumulative sum over the chunk's events.
+
+        The pending-burst fill is a per-stream running count of short-
+        segment points that resets at long segments (which flush the
+        remainder) and wraps at ``burst_cap`` (full bursts flush eagerly)
+        — i.e. ``pending_before = raw % cap`` where ``raw`` counts
+        singletons since the last long segment (seeded with the carried
+        fill).  Full bursts emitted by an event are the ``cap`` floor
+        crossings between its before/after raw counts; burst payloads are
+        contiguous positions, so one :meth:`_gather_runs` fetches them
+        all.
+        """
+        cap = self.burst_cap
+        long = ev.n >= PROTOCOL_MIN_SEG["singlestreamv"]
+        self._check_cap(ev.n, long)
+        N = len(ev.ss)
+        idx = np.arange(N)
+        gfirst = np.repeat(ev.gstart, ev.counts)
+        addn = np.where(long, 0, ev.n).astype(np.int64)
+        cs = np.cumsum(addn)
+        cs0 = cs - addn
+        lastlong = np.empty(N, np.int64)   # last long event STRICTLY before
+        lastlong[0] = -1
+        lastlong[1:] = np.maximum.accumulate(np.where(long, idx, -1))[:-1]
+        valid = lastlong >= gfirst    # a long event earlier in this group
+        ll = np.clip(lastlong, 0, None)
+        reset_cs = np.where(valid, cs[ll], np.repeat(cs0[ev.gstart],
+                                                     ev.counts))
+        raw0 = cs0 - reset_cs + np.where(valid, 0, self._pend_len[ev.ss])
+        raw1 = raw0 + addn
+        origin = np.where(valid, ev.es[ll] + 1, self._pend_start[ev.ss])
+        nfull = np.where(long, 0, raw1 // cap - raw0 // cap)
+        plen = np.where(long, raw0 % cap, 0)
+        sizes = np.where(long,
+                         np.where(plen > 0, 1 + 8 * plen, 0) + 17,
+                         nfull * (1 + 8 * cap))
+        offs, total = _excl_offsets(sizes)
+        buf = np.zeros(total, np.uint8)
+        kl = np.flatnonzero(long)     # segment records (after the partial)
+        roffs = offs[kl] + np.where(plen[kl] > 0, 1 + 8 * plen[kl], 0)
+        buf[roffs] = ev.n[kl].astype(np.int8).view(np.uint8)
+        _put_f64(buf, roffs + 1, ev.As[kl])
+        _put_f64(buf, roffs + 9, ev.Bs[kl])
+        # Enumerate emitted bursts: cap-filled ones at short events plus
+        # the flushed partial at each long event.
+        src = np.flatnonzero((nfull > 0) | (long & (plen > 0)))
+        bcount = np.where(long, (plen > 0).astype(np.int64), nfull)[src]
+        b_ev = np.repeat(src, bcount)
+        b_j = np.arange(len(b_ev)) - np.repeat(np.cumsum(bcount) - bcount,
+                                               bcount)
+        partial = long[b_ev]
+        b_len = np.where(partial, plen[b_ev], cap)
+        b_start = origin[b_ev] \
+            + (raw0[b_ev] // cap + np.where(partial, 0, b_j)) * cap
+        b_off = offs[b_ev] + np.where(partial, 0, b_j * (1 + 8 * cap))
+        buf[b_off] = (-b_len).astype(np.int8).view(np.uint8)
+        vals, within = self._gather_runs(ev.ss[b_ev], b_start, b_len)
+        _put_f64(buf, np.repeat(b_off + 1, b_len) + 8 * within, vals)
+        # Pending window after the chunk, per stream with events.
+        gl, gs = ev.glast, ev.ss[ev.gstart]
+        last_long = long[gl]
+        self._pend_len[gs] = np.where(last_long, 0, raw1[gl] % cap)
+        self._pend_start[gs] = np.where(
+            last_long, ev.es[gl] + 1,
+            origin[gl] + (raw1[gl] // cap) * cap)
+        return buf, sizes
 
     # -- public API ---------------------------------------------------------
 
@@ -777,52 +976,113 @@ class ProtocolEmitter:
                 raise ValueError(f"y_chunk must be ({self.n_streams}, n); "
                                  f"got {y.shape}")
             self._ybuf = np.concatenate([self._ybuf, y], axis=1)
-        seg_bufs = [bytearray() for _ in range(self.n_streams)]
-        single_bufs = [bytearray() for _ in range(self.n_streams)]
         if events is not None and events.breaks.shape[0] != self.n_streams:
             raise ValueError(f"events must cover ({self.n_streams}, w) "
                              f"streams; got {events.breaks.shape}")
-        if events is not None and events.breaks.shape[1]:
-            brk = np.asarray(events.breaks, bool)
-            w = brk.shape[1]
-            # Vectorized event extraction + anchored-to-global line
-            # conversion for every event of the chunk at once; row-major
-            # nonzero keeps each stream's events in time order.
-            ss, jj = np.nonzero(brk)
-            if len(ss):
-                a = np.asarray(events.a, np.float64)[ss, jj]
-                v = np.asarray(events.v, np.float64)[ss, jj]
-                es = self._epos + jj
-                As = a / self.dt
-                Bs = v - a * es - As * self.t0
-                for s, e, A, B in zip(ss.tolist(), es.tolist(),
-                                      As.tolist(), Bs.tolist()):
-                    self._on_break(s, e, A, B, seg_bufs[s], single_bufs[s])
-            self._epos += w
+        p = self.protocol
+        if events is None or not events.breaks.shape[1]:
+            empty = [b""] * self.n_streams
+            return [(b, b"") for b in empty] if p == "twostreams" else empty
+        brk = np.asarray(events.breaks, bool)
+        ss, jj = np.nonzero(brk)      # row-major: stream-major, time-sorted
+        if not len(ss):
+            self._epos += brk.shape[1]
             self._trim()
-        if self.protocol == "twostreams":
-            return [(bytes(sb), bytes(gb))
-                    for sb, gb in zip(seg_bufs, single_bufs)]
-        return [bytes(sb) for sb in seg_bufs]
+            empty = [b""] * self.n_streams
+            return [(b, b"") for b in empty] if p == "twostreams" else empty
+        ev = self._event_geometry(ss, jj,
+                                  np.asarray(events.a, np.float64)[ss, jj],
+                                  np.asarray(events.v, np.float64)[ss, jj])
+        if p == "implicit":
+            packed = self._pack_implicit(ev)
+        elif p == "twostreams":
+            packed = self._pack_twostreams(ev)
+        elif p == "singlestream":
+            packed = self._pack_singlestream(ev)
+        else:
+            packed = self._pack_singlestreamv(ev)
+        # Carry the per-stream codec state past the chunk.
+        gs = ev.ss[ev.gstart]
+        self._k[gs] += ev.counts
+        self._prev_end[gs] = ev.es[ev.glast]
+        self._prev_A[gs] = ev.As[ev.glast]
+        self._prev_B[gs] = ev.Bs[ev.glast]
+        if p != "singlestreamv":      # its packer manages the burst window
+            self._pend_start[gs] = ev.es[ev.glast] + 1
+        self._epos += brk.shape[1]
+        self._trim()
+        if p == "twostreams":
+            (seg, sizes), (single, ssizes) = packed
+            return list(zip(self._per_stream(seg, sizes, ss),
+                            self._per_stream(single, ssizes, ss)))
+        buf, sizes = packed
+        return self._per_stream(buf, sizes, ss)
 
     def flush(self) -> List:
         """Close the stream: trailing bursts and the closing knot."""
         if self._finished:
             raise RuntimeError("flush() called twice")
         self._finished = True
-        outs = [bytearray() for _ in range(self.n_streams)]
-        for s in range(self.n_streams):
-            if self.protocol == "singlestreamv":
-                self._flush_burst(s, outs[s])
-            elif self.protocol == "implicit" and self._k[s]:
-                if self.knot_kind == "mixed" and self._has_y2[s]:
-                    outs[s] += np.array([self._pend_y2[s]], "<f8").tobytes()
-                    self._has_y2[s] = False
-                if self.knot_kind in ("disjoint", "mixed"):
-                    te = self._t(self._prev_end[s])
-                    outs[s] += np.array(
-                        [te, self._prev_A[s] * te + self._prev_B[s]],
-                        "<f8").tobytes()
+        outs = [b""] * self.n_streams
+        if self.protocol == "singlestreamv":
+            act = np.flatnonzero(self._pend_len > 0)
+            if len(act):
+                lens = self._pend_len[act]
+                sizes = 1 + 8 * lens
+                offs, total = _excl_offsets(sizes)
+                buf = np.zeros(total, np.uint8)
+                buf[offs] = (-lens).astype(np.int8).view(np.uint8)
+                vals, within = self._gather_runs(act, self._pend_start[act],
+                                                 lens)
+                _put_f64(buf, np.repeat(offs + 1, lens) + 8 * within, vals)
+                ends = np.cumsum(sizes)
+                for i, s in enumerate(act.tolist()):
+                    outs[s] = buf[ends[i] - sizes[i]:ends[i]].tobytes()
+                self._pend_start[act] += lens
+                self._pend_len[act] = 0
+        elif self.protocol == "implicit" \
+                and self.knot_kind in ("disjoint", "mixed"):
+            act = np.flatnonzero(self._k > 0)
+            if len(act):
+                pw = self._has_y2[act] if self.knot_kind == "mixed" \
+                    else np.zeros(len(act), bool)
+                sizes = np.where(pw, 24, 16)
+                offs, total = _excl_offsets(sizes)
+                buf = np.zeros(total, np.uint8)
+                _put_f64(buf, offs[pw], self._pend_y2[act][pw])
+                te = self._t(self._prev_end[act])
+                _put_f64(buf, offs + 8 * pw, te)
+                _put_f64(buf, offs + 8 * pw + 8,
+                         self._prev_A[act] * te + self._prev_B[act])
+                ends = np.cumsum(sizes)
+                for i, s in enumerate(act.tolist()):
+                    outs[s] = buf[ends[i] - sizes[i]:ends[i]].tobytes()
+                self._has_y2[act] = False
         if self.protocol == "twostreams":
-            return [(bytes(o), b"") for o in outs]
-        return [bytes(o) for o in outs]
+            return [(o, b"") for o in outs]
+        return outs
+
+
+class _ChunkEvents(NamedTuple):
+    """One chunk's finalized events, flat and stream-major, with the
+    cross-event codec geometry already resolved (see
+    :meth:`ProtocolEmitter._event_geometry`)."""
+
+    ss: np.ndarray      # (N,) stream index per event
+    es: np.ndarray      # (N,) absolute break position
+    prev: np.ndarray    # (N,) previous break position (-1 for none)
+    n: np.ndarray       # (N,) segment length es - prev
+    As: np.ndarray      # (N,) global-line slope
+    Bs: np.ndarray      # (N,) global-line intercept
+    pA: np.ndarray      # (N,) previous segment's line
+    pB: np.ndarray      # (N,)
+    k_ev: np.ndarray    # (N,) segment ordinal within the stream
+    gstart: np.ndarray  # (G,) index of each stream's first event
+    glast: np.ndarray   # (G,) index of each stream's last event
+    counts: np.ndarray  # (G,) events per stream
+
+
+def _excl_offsets(sizes: np.ndarray):
+    """Exclusive cumsum byte offsets for variable-size records."""
+    sizes = sizes.astype(np.int64)
+    return np.cumsum(sizes) - sizes, int(sizes.sum())

@@ -17,7 +17,10 @@ so the kernel takes a static ``t_stop`` (steps at ``t >= t_stop`` are
 inert; offline wrappers pass the real length, streaming pushes pass the
 feed width) and the host closes the stream from the carry with
 :func:`continuous_flush_carry` — the same jitted math for the offline and
-chunked paths, which is what keeps them bit-identical.
+chunked paths, which is what keeps them bit-identical: chunked pushes
+through :class:`repro.kernels.ops.StreamingSegmenter` equal the one-shot
+``continuous_segment_tpu`` output bitwise, and both equal the jnp
+reference scan (tests/test_kernels.py, tests/test_streaming.py).
 
 Carry rows (cont_state_rows(W) = 13 + W, all f32; see the carry-state
 contract in kernels/common.py): 0 started, 1 g_pos, 2 glo, 3 ghi,

@@ -11,7 +11,10 @@ land one run in the past: like kernels/continuous.py this is a
 **deferred** kernel — ``(ev, pos, a, v)`` outputs with launch-local
 positions, a static inert-past-``t_stop`` bound instead of an in-kernel
 forced break, and a host-side :func:`mixed_flush_carry` shared by the
-offline and chunked paths.
+offline and chunked paths — which is the bit-identity guarantee: chunked
+pushes through :class:`repro.kernels.ops.StreamingSegmenter` equal the
+one-shot ``mixed_segment_tpu`` output bitwise, and both equal the jnp
+reference scan (tests/test_kernels.py, tests/test_streaming.py).
 
 The ring must retain both the previous and the current run
 (``jax_pla.mixed_ring(window) = 2 * window + 8`` rows).

@@ -216,6 +216,38 @@ def test_emitter_vectorized_bookkeeping_bit_identical_at_s256():
                 assert b"".join(got[s]) == offline[s], (protocol, s)
 
 
+@pytest.mark.parametrize("method", ["continuous", "mixed"])
+def test_emitter_fused_packer_deferred_kinds_at_s64(method):
+    """The fused cumsum-offset packer stays bit-identical for the
+    deferred knot kinds at fleet width — the mixed pending-y'' chain and
+    the grouped first-event seeding are exercised across many streams
+    and chunk boundaries at once (ISSUE 5: the per-event Python byte
+    assembly was replaced by vectorized packing)."""
+    S, T = 64, 120
+    rng = np.random.default_rng(33)
+    y = np.cumsum(rng.normal(0, 0.6, (S, T)), axis=1).astype(np.float32)
+    y[::4] = rng.normal(0, 25, (S // 4, T)).astype(np.float32)
+    seg_fn = {"continuous": jax_pla.continuous_segment,
+              "mixed": jax_pla.mixed_segment}[method]
+    offline = encode_batch(seg_fn(y, 1.0, max_run=256), y, "implicit",
+                           knot_kind=method)
+    st = jax_pla.init_state(method, S, 1.0, max_run=256)
+    em = ProtocolEmitter("implicit", S, knot_kind=method)
+    got = [b""] * S
+    pos = 0
+    for w in (37, 41, 42):
+        st, out = jax_pla.step_chunk(st, y[:, pos:pos + w])
+        for s, b in enumerate(em.step_chunk(out, y[:, pos:pos + w])):
+            got[s] += b
+        pos += w
+    st, out_f = jax_pla.flush(st)
+    for s, b in enumerate(em.step_chunk(out_f)):
+        got[s] += b
+    for s, b in enumerate(em.flush()):
+        got[s] += b
+    assert got == offline
+
+
 def test_records_to_events_roundtrip_and_kernel_reconstruct():
     from repro.kernels.ops import (reconstruct_error_tpu,
                                    reconstruct_records_tpu)

@@ -246,12 +246,14 @@ def test_telemetry_streaming_matches_guarantee_and_fallback():
         tc2.append(step, {"m": float(np.sin(step / 10))})
     tc2.flush_all()
     assert tc2.max_err_seen <= 0.02 * (1 + 1e-6)
-    # methods without a streaming engine (continuous/mixed) keep the
-    # batch flush path instead of crashing mid-append
+    # the deferred methods (continuous/mixed) stream too since the
+    # lag-aware sender (ISSUE 5): their released columns lag one segment
+    # but the flush drains the tail, and the eps guarantee holds off wire
     tc3 = TelemetryCompressor(eps=0.05, method="continuous", flush_every=40)
-    assert tc3.streaming is False
+    assert tc3.streaming is True
     for s in range(90):
         tc3.append(s, {"x": float(np.sin(s / 9))})
+        assert tc3.lag("x") >= 0
     tc3.flush_all()
     assert tc3.max_err_seen <= 0.05 * (1 + 1e-6)
     with pytest.raises(ValueError):

@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Doc link check: every repo path named in the docs must exist.
+
+Scans README.md and docs/ARCHITECTURE.md (plus any extra files given on
+the command line) for repo-relative path references — ``src/.../*.py``,
+``tests/*.py``, ``benchmarks/*.py``, ``*.md``, ``*.json``, ``*.yml`` —
+and fails if a referenced file is missing.  ``path.py:symbol`` references
+additionally require the symbol to appear in the file (a ``def``,
+``class``, or assignment), so renames can't silently strand the docs.
+
+Run from anywhere: ``python tools/check_doc_links.py``.  CI runs it as a
+dedicated step; ``tests/test_docs.py`` runs the same checker under
+pytest so the tier-1 gate catches stale docs locally too.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DEFAULT_DOCS = ("README.md", os.path.join("docs", "ARCHITECTURE.md"))
+
+# Repo-relative path-looking tokens (optionally followed by :symbol).
+_PATH_RE = re.compile(
+    r"(?<![\w/.-])"
+    r"((?:src|tests|benchmarks|examples|tools|docs|experiments|\.github)"
+    r"/[\w./-]+\.(?:py|md|json|yml|yaml)|[A-Za-z][\w.-]*\.(?:md|json|yml))"
+    r"(?::([A-Za-z_][\w.]*))?")
+
+# Module-dotted references like repro.sharding.fleet resolve under src/.
+_MODULE_RE = re.compile(r"(?<![\w/.])(repro(?:\.[a-z_0-9]+)+)(?![\w.])")
+
+
+def _symbol_in_file(path: str, symbol: str) -> bool:
+    sym = symbol.split(".")[0]
+    pat = re.compile(rf"^\s*(?:def|class)\s+{re.escape(sym)}\b"
+                     rf"|^\s*{re.escape(sym)}\s*(?::[^=]+)?=",
+                     re.MULTILINE)
+    with open(path, encoding="utf-8") as f:
+        return bool(pat.search(f.read()))
+
+
+def check(doc_paths) -> list:
+    errors = []
+    for doc in doc_paths:
+        doc_abs = os.path.join(REPO, doc)
+        if not os.path.exists(doc_abs):
+            errors.append(f"{doc}: doc file itself is missing")
+            continue
+        with open(doc_abs, encoding="utf-8") as f:
+            text = f.read()
+        for m in _PATH_RE.finditer(text):
+            rel, symbol = m.group(1), m.group(2)
+            target = os.path.join(REPO, rel)
+            if not os.path.exists(target):
+                errors.append(f"{doc}: referenced path {rel!r} not found")
+            elif symbol and rel.endswith(".py") \
+                    and not _symbol_in_file(target, symbol):
+                errors.append(f"{doc}: {rel}:{symbol} — symbol not found")
+        for m in _MODULE_RE.finditer(text):
+            rel = os.path.join("src", *m.group(1).split("."))
+            if not (os.path.exists(os.path.join(REPO, rel + ".py"))
+                    or os.path.isdir(os.path.join(REPO, rel))):
+                errors.append(f"{doc}: module {m.group(1)} has no file "
+                              f"under src/")
+    return errors
+
+
+def main(argv) -> int:
+    docs = argv[1:] or [d for d in DEFAULT_DOCS
+                        if os.path.exists(os.path.join(REPO, d))]
+    errors = check(docs)
+    for e in errors:
+        print(f"doc-link-check: {e}", file=sys.stderr)
+    if not errors:
+        print(f"doc-link-check: OK ({', '.join(docs)})")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
