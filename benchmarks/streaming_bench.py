@@ -115,6 +115,45 @@ def streaming_bench() -> List[Tuple[str, float, str]]:
                          per_step * 1e6,
                          f"{points / total / 1e6:.1f}Mpts/s "
                          f"{overhead:.2f}x-of-offline"))
+    # Irregular pushes: a seeded schedule of odd widths.  The pow2-piece
+    # launch decomposition (shared by ``jax_pla.step_chunk`` and the
+    # kernel front-end ``kernels.ops.StreamingSegmenter``) bounds the
+    # trace set by log2 of the widest push, so irregular feeds stay near
+    # even-chunk cost instead of recompiling once per distinct width —
+    # ``distinct_launch_widths`` records how few traces the whole
+    # schedule needs.
+    rng = np.random.default_rng(7)
+    widths: List[int] = []
+    done = 0
+    while done < T:
+        w = min(int(rng.integers(1, 513)), T - done)
+        widths.append(w)
+        done += w
+    pieces = sorted({p for w in widths for p in jax_pla._pow2_pieces(w)})
+    report["odd_chunks"] = {"n_pushes": len(widths),
+                            "distinct_launch_widths": len(pieces)}
+    for method in ("angle", "disjoint"):
+        def sweep(method=method):
+            st = jax_pla.init_state(method, S, EPS, max_run=MAX_RUN)
+            t0 = time.perf_counter()
+            lo = 0
+            for w in widths:
+                st, out = jax_pla.step_chunk(st, y[:, lo:lo + w])
+                jax.block_until_ready(out)
+                lo += w
+            st, out = jax_pla.flush(st)
+            jax.block_until_ready(out)
+            return time.perf_counter() - t0
+        sweep()  # warmup: traces every pow2 piece width once
+        total = min(sweep() for _ in range(ITERS))
+        off_s = report["offline"][method]["seconds"]
+        report["odd_chunks"][method] = {
+            "seconds": total, "points_per_s": points / total,
+            "overhead_vs_offline": total / off_s,
+        }
+        rows.append((f"streaming/{method}/odd-chunks", total * 1e6,
+                     f"{points / total / 1e6:.1f}Mpts/s "
+                     f"{total / off_s:.2f}x-of-offline"))
     # Acceptance tracker: chunked step cost within 2x of the amortized
     # offline per-point cost at chunk >= 128.
     ok = {m: all(report["chunked"][m][str(c)]["overhead_vs_offline"] <= 2.0

@@ -105,6 +105,7 @@ import numpy as np
 __all__ = [
     "SegmentOutput", "angle_segment", "disjoint_segment", "linear_segment",
     "swing_segment", "continuous_segment", "mixed_segment",
+    "disjoint_segment_windowed", "linear_segment_windowed",
     "SegmenterState", "init_state", "step_chunk", "flush",
     "STREAMING_METHODS", "DEFERRED_METHODS", "MAX_STREAM_T", "check_window",
     "mixed_ring",
@@ -115,6 +116,27 @@ __all__ = [
 ]
 
 _BIG = jnp.float32(3.4e38)
+
+# Per-method lax.scan unroll for the segmenter scans.  Unrolled group
+# bodies let XLA fuse arithmetic across steps, and that fusion depends on
+# the trace's scan length and the step's position within its group —
+# ulp-level differences that can break the chunked==offline
+# bit-transparency guarantee.  The wedge methods keep the running wedge
+# in carried slots XLA cannot re-associate across steps, so they stay
+# bit-transparent when unrolled (test_streaming verifies at odd splits);
+# continuous does NOT — any unroll > 1 fails test_streaming — so the
+# deferred methods (and anything unlisted) MUST stay 1.  Factors are
+# measured at the bench shape (S=256, T=16k): angle gains ~10% at 2 on
+# one long scan and regresses past that; swing regresses at any unroll.
+# Short scans (chunked pushes) lose up to ~40% to the unrolled body's
+# extra code size, so the factor only kicks in past a length floor —
+# the trace is keyed by scan length anyway, so this costs no retraces.
+_SCAN_UNROLL = {"angle": 2}
+_UNROLL_MIN_T = 4096
+
+
+def _scan_unroll(method: str, n: int) -> int:
+    return _SCAN_UNROLL.get(method, 1) if n >= _UNROLL_MIN_T else 1
 
 # The jnp reference segmenters walk *absolute* time (the windowed methods
 # cast positions to float32 before differencing), so a single
@@ -282,9 +304,112 @@ def _swing_flush(carry, t_last):
     return a_f, v_f
 
 
-# ---- Disjoint (optimal greedy) with exact bounded-window pivot search -----
+# ---- Convex-chain primitives (amortized O(1) hull carries) ----------------
+#
+# The windowed disjoint/linear steps below (``*_windowed``) retighten with
+# an O(W) masked reduction per point.  The default steps replace that with
+# the paper's amortized-O(1) structure (O'Rourke / SlideFilter; see also
+# arXiv 2503.23025): per-stream monotone convex chains stored as (S, W)
+# position/value planes plus an int32 length, popped at the tail with the
+# exact ``hulls._HullChain.add`` cross tests, and queried by a *tangent
+# walk* from a carried contact hint (the slope sequence from an external
+# query point to successive chain vertices is unimodal, so the walk finds
+# the extremum; the hint makes it amortized O(1) because the contact
+# drifts slowly).  Slope/value expressions are kept identical to the
+# windowed reference, so equal pivots give bit-identical lines; pivot
+# choice can differ from the windowed argmin only by fp ulps on the slope
+# comparisons (the documented fp-tolerance pin — break positions are
+# pinned equal in tests/test_streaming_property.py).
 
-def _disjoint_init(y0, eps, max_run, window, t0):
+
+def _chain_slot_dtype(window: int):
+    """Slot-index dtype for chain planes (u8 keeps the carry tiny)."""
+    return jnp.uint8 if window <= 256 else jnp.int32
+
+
+_CHAIN_CAP = 16  # chain capacity: hulls of realistic runs are ~log-sized
+
+
+def _chain_cap(window: int) -> int:
+    return min(_CHAIN_CAP, window)
+
+
+def _chain_planes(ring, idx, t_i, window, value_of):
+    """Vertex coordinate planes of a slot-index chain over a time ring.
+
+    ``ring (S, W)`` holds raw point values keyed by ``t mod W``; ``idx``
+    ``(S, C)`` holds ring slots in chain order (C = ``_chain_cap`` —
+    convex chains of realistic runs are ~log-sized, and a run whose hull
+    outgrows C flips the lane into exact windowed mode, see the step
+    functions).  Returns ``(S, C)`` planes ``(qx, qy)``: the vertex time
+    reconstructed from the slot's age ``(t_i - slot) mod W`` (exact —
+    run length <= W and ``t < 2**24``) and the value put through
+    ``value_of`` (e.g. ``y -+ eps``), reproducing the exact f32
+    coordinates the windowed reference computes from its own value ring.
+    Columns past the chain length hold garbage; callers mask.
+
+    The ring/index split exists for throughput, not elegance: the chains
+    carry *no* f32 payload, so the scan's only scatter-written carried
+    plane is the ring — written once per step *before* any read, which
+    lets XLA update it in place.  (Any pre-update read of a
+    scatter-written carried plane forces a full copy-on-write of the
+    plane per scan step — measured at ~15us per (256, 256) plane, many
+    times the cost of the rest of the step.)
+    """
+    sl = idx.astype(jnp.int32)
+    qx = (t_i - jnp.mod(t_i - sl, window)).astype(ring.dtype)
+    return qx, value_of(jnp.take_along_axis(ring, sl, axis=1))
+
+
+def _chain_append(idx, ln, keep, px, py, qx, qy, slot, upper: bool):
+    """Append the step's vertex ``(px, py)`` to per-stream convex chains.
+
+    Tail pops are evaluated in closed form: popping stops at the first
+    (largest) candidate length ``k`` whose tail cross test keeps the
+    chain convex, so the post-pop length is ``max({1} | {k in [2, ln] :
+    keep_k})`` — one masked integer max over the cross signs of every
+    candidate ``k`` at once, reproducing the sequential pop loop of
+    ``hulls._HullChain.add`` decision-for-decision (upper chains pop
+    while the cross product is ``>= 0``, lower chains while ``<= 0``).
+    The vertex value is already in the ring, so the append just records
+    the ring ``slot`` — a small-plane ``where`` write, which XLA fuses
+    elementwise instead of the copy-on-write a scatter on a carried
+    plane would force.  ``keep=False`` rows reset their chain to the
+    single new vertex (run restart).  An append past capacity C writes
+    nothing and raises the overflow flag (the lane's hull no longer fits
+    — the caller flips it to windowed mode).  Returns the updated
+    ``(idx, len, overflow)``.
+    """
+    C = idx.shape[1]
+    ox, oy = qx[:, :-1], qy[:, :-1]
+    ax, ay = qx[:, 1:], qy[:, 1:]
+    cr = (ax - ox) * (py[:, None] - oy) - (ay - oy) * (px[:, None] - ox)
+    keep_k = (cr < 0) if upper else (cr > 0)
+    karr = jnp.arange(2, C + 1, dtype=jnp.int32)[None, :]
+    ln_kept = jnp.max(jnp.where(keep_k & (karr <= ln[:, None]), karr, 1),
+                      axis=1)
+    wp = jnp.where(keep, ln_kept, 0)
+    overflow = keep & (wp >= C)
+    col = jnp.arange(C, dtype=jnp.int32)[None, :]
+    idx = jnp.where(col == wp[:, None], slot.astype(idx.dtype), idx)
+    return idx, jnp.minimum(wp + 1, C), overflow
+
+
+def _chain_extremum(qx, qy, ln, slope_of, minimize: bool):
+    """Masked extremum of ``slope_of(qx, qy)`` over chain vertices
+    ``[0, ln)`` — the vectorized form of the hull tangent query (the
+    extremum of a linear functional over a convex chain)."""
+    s = slope_of(qx, qy)
+    col = jnp.arange(qx.shape[1], dtype=jnp.int32)[None, :]
+    member = col < ln[:, None]
+    if minimize:
+        return jnp.min(jnp.where(member, s, _BIG), axis=1)
+    return jnp.max(jnp.where(member, s, -_BIG), axis=1)
+
+
+# ---- Disjoint (optimal greedy): windowed reference --------------------------
+
+def _disjoint_init_windowed(y0, eps, max_run, window, t0):
     S = y0.shape[0]
     dtype = y0.dtype
     W = window
@@ -298,7 +423,7 @@ def _disjoint_init(y0, eps, max_run, window, t0):
             y0, y0)                           # prev_y, y0
 
 
-def _disjoint_step(eps, max_run, window, state, inp):
+def _disjoint_step_windowed(eps, max_run, window, state, inp):
     (ybuf, run_start, run_len, a_lo, v_lo, a_hi, v_hi, prev_y, y0) = state
     # lines anchored at run_start: line(t) = v + a * (t - run_start)
     W = window
@@ -373,7 +498,7 @@ def _disjoint_step(eps, max_run, window, state, inp):
     return new_state, (brk, a_out, v_out)
 
 
-def _disjoint_flush(carry, t_last):
+def _disjoint_flush_windowed(carry, t_last):
     (ybuf, run_start, run_len, a_lo, v_lo, a_hi, v_hi, prev_y, y0) = carry
     dtype = prev_y.dtype
     rel = jnp.asarray(t_last).astype(dtype) - run_start.astype(dtype)
@@ -383,9 +508,171 @@ def _disjoint_flush(carry, t_last):
     return a_f, v_f
 
 
-# ---- Linear (best-fit) with window revalidation ---------------------------
+# ---- Disjoint (optimal greedy): amortized hull carry (default) -------------
+#
+# Carry layout (the "hull carry"): the run's raw values live in one
+# (S, W) f32 ring keyed by ``t mod W`` (written at the top of the step,
+# before any read — see ``_chain_verts`` for why that ordering is the
+# whole perf story), and the two convex chains are (S, W) u8 planes of
+# ring-slot indices in chain order — ``hl`` is the *upper* chain of lower
+# endpoints (t, y - eps) (the oracle's ``env_lo``, queried for a_hi),
+# ``hh`` the *lower* chain of upper endpoints (t, y + eps) (``env_hi``,
+# queried for a_lo) — plus int32 lengths and a per-lane windowed-mode
+# flag.  Chains only ever pop at the tail, so the vertex prefix stays
+# compact, and convex hulls of realistic runs are ~log-sized, so C
+# columns suffice; pops and tangent queries are closed-form masked
+# reductions over the small chain planes (no data-dependent loops).  A
+# lane whose hull outgrows C (pathological near-convex data) flips to
+# windowed mode until its next break: its retightening runs the *exact*
+# windowed-reference reduction over the full ring inside a ``lax.cond``
+# that never fires on benign streams.
 
-def _linear_init(y0, eps, max_run, window, t0):
+def _disjoint_init(y0, eps, max_run, window, t0):
+    S = y0.shape[0]
+    dtype = y0.dtype
+    W = window
+    t0 = jnp.asarray(t0, jnp.int32)
+    z = jnp.zeros((S,), dtype)
+    one = jnp.ones((S,), jnp.int32)
+    cdt = _chain_slot_dtype(W)
+    slot0 = jnp.mod(t0, W)
+    ring = jnp.zeros((S, W), dtype).at[:, slot0].set(y0)
+    idx0 = jnp.zeros((S, _chain_cap(W)), cdt).at[:, 0].set(slot0.astype(cdt))
+    return (jnp.full((S,), t0, jnp.int32),    # run_start (absolute pos)
+            one,                              # run_len
+            z, z, z, z,                       # extreme lines (a, v@rs)
+            y0, y0,                           # prev_y, y0
+            ring, idx0, idx0,                 # value ring + hl/hh chains
+            one, one,                         # hl_len, hh_len
+            jnp.zeros((S,), bool))            # windowed-mode flag
+
+
+def _disjoint_step(eps, max_run, window, state, inp):
+    (run_start, run_len, a_lo, v_lo, a_hi, v_hi, prev_y, y0,
+     ring, hl_idx, hh_idx, hl_len, hh_len, wm) = state
+    W = window
+    t_i, yt = inp
+    S = yt.shape[0]
+    dtype = yt.dtype
+    slot = jnp.mod(t_i, W)
+    ring = ring.at[:, slot].set(yt)  # write FIRST: every read is post-update
+    t = jnp.broadcast_to(t_i, (S,)).astype(dtype)
+    rs = run_start.astype(dtype)
+    rel = t - rs
+
+    lo_i, hi_i = yt - eps, yt + eps
+    vmax = a_hi * rel + v_hi
+    vmin = a_lo * rel + v_lo
+    feas2 = (vmax >= lo_i) & (vmin <= hi_i)
+    feasible = jnp.where(run_len >= 2, feas2, True)
+    cap_hit = run_len >= max_run
+    brk = ~feasible | cap_hit
+
+    # Chosen line anchored at the break position (t-1): parameter-space
+    # midpoint of the extreme lines (feasible by convexity).
+    am = 0.5 * (a_lo + a_hi)
+    vm = 0.5 * (v_lo + v_hi) + am * (rel - 1.0)
+    a_out = jnp.where(run_len >= 2, am, 0.0)
+    v_out = jnp.where(run_len >= 2, vm, prev_y)
+
+    second = run_len == 1
+
+    # ---- tangent retightening (amortized O(1)) -------------------------
+    # Slope expressions match the windowed reference bit-for-bit (chain
+    # values store y -+ eps, reconstructed at read time exactly as a
+    # push-time store would have).  Windowed-mode lanes (hull overflowed
+    # chain capacity) get the exact windowed-reference reduction instead,
+    # inside a cond that stays cold on benign data.
+    hl_qx, hl_qy = _chain_planes(ring, hl_idx, t_i, W,
+                                 lambda yv: yv - eps[:, None])
+    hh_qx, hh_qy = _chain_planes(ring, hh_idx, t_i, W,
+                                 lambda yv: yv + eps[:, None])
+
+    a_hi_c = _chain_extremum(
+        hl_qx, hl_qy, hl_len,
+        lambda qx, qy: (hi_i[:, None] - qy) / (t[:, None] - qx),
+        minimize=True)
+    a_lo_c = _chain_extremum(
+        hh_qx, hh_qy, hh_len,
+        lambda qx, qy: (lo_i[:, None] - qy) / (t[:, None] - qx),
+        minimize=False)
+
+    def _windowed_retighten(_):
+        abs_pos = t_i - 1 - jnp.arange(W)
+        pos = (abs_pos % W).astype(jnp.int32)
+        in_run = (abs_pos >= run_start[:, None]) & (abs_pos >= 0)
+        yw = jnp.take_along_axis(ring, jnp.broadcast_to(pos, (S, W)),
+                                 axis=1)
+        dtw = t[:, None] - abs_pos.astype(dtype)[None, :]
+        dtw_safe = jnp.where(in_run, dtw, 1.0)
+        s_hi = jnp.where(in_run,
+                         (hi_i[:, None] - (yw - eps[:, None])) / dtw_safe,
+                         _BIG)
+        s_lo = jnp.where(in_run,
+                         (lo_i[:, None] - (yw + eps[:, None])) / dtw_safe,
+                         -_BIG)
+        return (jnp.where(wm, jnp.min(s_hi, axis=1), a_hi_c),
+                jnp.where(wm, jnp.max(s_lo, axis=1), a_lo_c))
+
+    a_hi_new, a_lo_new = jax.lax.cond(
+        jnp.any(wm), _windowed_retighten, lambda _: (a_hi_c, a_lo_c), None)
+
+    need_hi = vmax > hi_i
+    act_hi = need_hi & ~second & ~brk
+    v_hi_new = hi_i - a_hi_new * rel             # value at run_start
+    a_hi_u = jnp.where(act_hi, a_hi_new, a_hi)
+    v_hi_u = jnp.where(act_hi, v_hi_new, v_hi)
+
+    need_lo = vmin < lo_i
+    act_lo = need_lo & ~second & ~brk
+    v_lo_new = lo_i - a_lo_new * rel
+    a_lo_u = jnp.where(act_lo, a_lo_new, a_lo)
+    v_lo_u = jnp.where(act_lo, v_lo_new, v_lo)
+
+    # Second point of a run initializes the extreme lines.
+    rel_s = jnp.maximum(rel, 1.0)
+    a_hi_2 = (hi_i - (y0 - eps)) / rel_s
+    v_hi_2 = y0 - eps
+    a_lo_2 = (lo_i - (y0 + eps)) / rel_s
+    v_lo_2 = y0 + eps
+
+    a_hi_n = jnp.where(second, a_hi_2, a_hi_u)
+    v_hi_n = jnp.where(second, v_hi_2, v_hi_u)
+    a_lo_n = jnp.where(second, a_lo_2, a_lo_u)
+    v_lo_n = jnp.where(second, v_lo_2, v_lo_u)
+
+    # ---- commit --------------------------------------------------------
+    new_run_start = jnp.where(brk, t_i, run_start)
+    new_run_len = jnp.where(brk, 1, run_len + 1)
+    keep = ~brk & ~wm
+    hl_idx, hl_len, ov_hl = _chain_append(hl_idx, hl_len, keep, t, lo_i,
+                                          hl_qx, hl_qy, slot, upper=True)
+    hh_idx, hh_len, ov_hh = _chain_append(hh_idx, hh_len, keep, t, hi_i,
+                                          hh_qx, hh_qy, slot, upper=False)
+    new_wm = ~brk & (wm | ov_hl | ov_hh)
+    z = jnp.zeros_like(a_lo_n)
+    new_state = (new_run_start, new_run_len,
+                 jnp.where(brk, z, a_lo_n), jnp.where(brk, z, v_lo_n),
+                 jnp.where(brk, z, a_hi_n), jnp.where(brk, z, v_hi_n),
+                 yt, jnp.where(brk, yt, y0),
+                 ring, hl_idx, hh_idx, hl_len, hh_len, new_wm)
+    return new_state, (brk, a_out, v_out)
+
+
+def _disjoint_flush(carry, t_last):
+    (run_start, run_len, a_lo, v_lo, a_hi, v_hi, prev_y, y0,
+     *_rest) = carry
+    dtype = prev_y.dtype
+    rel = jnp.asarray(t_last).astype(dtype) - run_start.astype(dtype)
+    am = 0.5 * (a_lo + a_hi)
+    a_f = jnp.where(run_len >= 2, am, 0.0)
+    v_f = jnp.where(run_len >= 2, 0.5 * (v_lo + v_hi) + am * rel, prev_y)
+    return a_f, v_f
+
+
+# ---- Linear (best-fit): windowed reference --------------------------------
+
+def _linear_init_windowed(y0, eps, max_run, window, t0):
     S = y0.shape[0]
     dtype = y0.dtype
     W = window
@@ -399,7 +686,7 @@ def _linear_init(y0, eps, max_run, window, t0):
             jnp.zeros((S,), dtype), y0)                 # valid fit (0, y0)
 
 
-def _linear_step(eps, max_run, window, state, inp):
+def _linear_step_windowed(eps, max_run, window, state, inp):
     (ybuf, run_start, nn, mt, my, stt, sty, va, vv) = state
     # mt = mean of run-relative t; (va, vv) = last valid fit as
     # (slope, value at the previous point) — the break anchor.
@@ -453,8 +740,127 @@ def _linear_step(eps, max_run, window, state, inp):
     return new_state, (brk, a_out, v_out)
 
 
-def _linear_flush(carry, t_last):
+def _linear_flush_windowed(carry, t_last):
     (_, _, _, _, _, _, _, va, vv) = carry
+    return va, vv
+
+
+# ---- Linear (best-fit): hull-carry revalidation (default) ------------------
+#
+# The Welford accumulators already make the *fit* O(1); only the
+# revalidation (max |residual| over the run) scanned the window.  The max
+# of ``y - (a*rel + b)`` over the run is attained at a vertex of the upper
+# convex chain of the raw points (a linear functional over a convex set),
+# the min at a vertex of the lower chain, so the revalidation reduces
+# over the small chain planes instead of the W-wide window.  Residuals
+# are evaluated with the exact windowed expression
+# ``|yw - (a_fit*relw + b_fit)|`` at the chain vertices, so the validity
+# decision matches the windowed reference up to fp ulps in the extremum
+# choice (same documented pin as disjoint).  Lanes whose hull outgrows
+# the chain capacity run the exact windowed reduction inside a cold
+# ``lax.cond`` until their next break (see the disjoint layout note).
+
+def _linear_init(y0, eps, max_run, window, t0):
+    S = y0.shape[0]
+    dtype = y0.dtype
+    W = window
+    t0 = jnp.asarray(t0, jnp.int32)
+    one = jnp.ones((S,), jnp.int32)
+    cdt = _chain_slot_dtype(W)
+    slot0 = jnp.mod(t0, W)
+    ring = jnp.zeros((S, W), dtype).at[:, slot0].set(y0)
+    idx0 = jnp.zeros((S, _chain_cap(W)), cdt).at[:, 0].set(slot0.astype(cdt))
+    return (jnp.full((S,), t0, jnp.int32),
+            jnp.ones((S,), dtype),                      # n
+            jnp.zeros((S,), dtype), y0,                 # means (rel t, y)
+            jnp.zeros((S,), dtype), jnp.zeros((S,), dtype),  # stt, sty
+            jnp.zeros((S,), dtype), y0,                 # valid fit (0, y0)
+            ring, idx0, idx0,                 # value ring + uh/lh chains
+            one, one,                         # uh_len, lh_len
+            jnp.zeros((S,), bool))            # windowed-mode flag
+
+
+def _linear_step(eps, max_run, window, state, inp):
+    (run_start, nn, mt, my, stt, sty, va, vv,
+     ring, uh_idx, lh_idx, uh_len, lh_len, wm) = state
+    W = window
+    t_i, yt = inp
+    S = yt.shape[0]
+    dtype = yt.dtype
+    slot = jnp.mod(t_i, W)
+    ring = ring.at[:, slot].set(yt)  # write FIRST: every read is post-update
+    t = jnp.broadcast_to(t_i, (S,)).astype(dtype)
+    rs = run_start.astype(dtype)
+    rel = t - rs
+
+    n1 = nn + 1.0
+    d_t = rel - mt
+    d_y = yt - my
+    mt1 = mt + d_t / n1
+    my1 = my + d_y / n1
+    stt1 = stt + d_t * (rel - mt1)
+    sty1 = sty + d_t * (yt - my1)
+    a_fit = jnp.where(stt1 > 0, sty1 / jnp.where(stt1 > 0, stt1, 1.0), 0.0)
+    b_fit = my1 - a_fit * mt1    # value at rel == 0 (run start)
+
+    # Hull revalidation: the signed residual is a linear functional of the
+    # vertex, so its extrema over the run live on the chains; the max
+    # |residual| is the larger magnitude of the two signed extremes.
+    uh_qx, uh_qy = _chain_planes(ring, uh_idx, t_i, W, lambda yv: yv)
+    lh_qx, lh_qy = _chain_planes(ring, lh_idx, t_i, W, lambda yv: yv)
+
+    def res_at(qx, qy):
+        return qy - (a_fit[:, None] * (qx - rs[:, None]) + b_fit[:, None])
+
+    res_u = jnp.abs(_chain_extremum(uh_qx, uh_qy, uh_len, res_at,
+                                    minimize=False))
+    res_l = jnp.abs(_chain_extremum(lh_qx, lh_qy, lh_len, res_at,
+                                    minimize=True))
+    mr_c = jnp.maximum(res_u, res_l)
+
+    def _windowed_reval(_):
+        abs_pos = t_i - 1 - jnp.arange(W)
+        pos = (abs_pos % W).astype(jnp.int32)
+        in_run = (abs_pos >= run_start[:, None]) & (abs_pos >= 0)
+        yw = jnp.take_along_axis(ring, jnp.broadcast_to(pos, (S, W)),
+                                 axis=1)
+        relw = abs_pos.astype(dtype)[None, :] - rs[:, None]
+        res = jnp.abs(yw - (a_fit[:, None] * relw + b_fit[:, None]))
+        res = jnp.where(in_run, res, 0.0)
+        return jnp.where(wm, jnp.max(res, axis=1), mr_c)
+
+    mr = jax.lax.cond(jnp.any(wm), _windowed_reval, lambda _: mr_c, None)
+    max_res = jnp.maximum(mr, jnp.abs(yt - (a_fit * rel + b_fit)))
+    tol = eps * (1 + 1e-6) + 1e-12
+    valid = max_res <= tol
+    cap_hit = nn >= max_run
+    brk = ~valid | cap_hit
+
+    a_out, v_out = va, vv  # last valid fit, anchored at t-1
+
+    new_run_start = jnp.where(brk, t_i, run_start)
+    new_nn = jnp.where(brk, 1.0, n1)
+    new_mt = jnp.where(brk, 0.0, mt1)
+    new_my = jnp.where(brk, yt, my1)
+    new_stt = jnp.where(brk, 0.0, stt1)
+    new_sty = jnp.where(brk, 0.0, sty1)
+    new_va = jnp.where(brk, 0.0, a_fit)
+    # value of the (new) valid fit at the *current* point t.
+    new_vv = jnp.where(brk, yt, a_fit * rel + b_fit)
+    keep = ~brk & ~wm
+    uh_idx, uh_len, ov_uh = _chain_append(uh_idx, uh_len, keep, t, yt,
+                                          uh_qx, uh_qy, slot, upper=True)
+    lh_idx, lh_len, ov_lh = _chain_append(lh_idx, lh_len, keep, t, yt,
+                                          lh_qx, lh_qy, slot, upper=False)
+    new_wm = ~brk & (wm | ov_uh | ov_lh)
+    new_state = (new_run_start, new_nn, new_mt, new_my,
+                 new_stt, new_sty, new_va, new_vv,
+                 ring, uh_idx, lh_idx, uh_len, lh_len, new_wm)
+    return new_state, (brk, a_out, v_out)
+
+
+def _linear_flush(carry, t_last):
+    va, vv = carry[6], carry[7]
     return va, vv
 
 
@@ -870,6 +1276,18 @@ _METHOD_IMPLS = {
                          int_ts=True, windowed=True, deferred=True),
 }
 
+# O(W)-per-point reference steps kept as test oracles for the hull-carry
+# fast path (NOT part of the streaming registry — same method names, same
+# outputs, different carry).  See disjoint_segment_windowed below.
+_WINDOWED_IMPLS = {
+    "disjoint": _MethodImpl(_disjoint_init_windowed, _disjoint_step_windowed,
+                            _disjoint_flush_windowed,
+                            int_ts=True, windowed=True),
+    "linear": _MethodImpl(_linear_init_windowed, _linear_step_windowed,
+                          _linear_flush_windowed,
+                          int_ts=True, windowed=True),
+}
+
 STREAMING_METHODS = tuple(_METHOD_IMPLS)
 
 # Methods whose events resolve one segment late: their chunked output has
@@ -889,8 +1307,8 @@ def _ring_size(method: str, max_run: int, window: Optional[int]) -> int:
 # Offline segmenters: one full-length chunk through the shared triple
 # ---------------------------------------------------------------------------
 
-def _segment_offline(method, y, eps, max_run, window):
-    impl = _METHOD_IMPLS[method]
+def _segment_offline(method, y, eps, max_run, window, impls=None):
+    impl = (impls or _METHOD_IMPLS)[method]
     if impl.deferred:
         return _segment_offline_deferred(method, y, eps, max_run, window)
     S, T = y.shape
@@ -899,8 +1317,8 @@ def _segment_offline(method, y, eps, max_run, window):
     carry = impl.init(y[:, 0], eps, max_run, window, 0)
     ts = jnp.arange(1, T, dtype=jnp.int32 if impl.int_ts else dtype)
     step = functools.partial(impl.step, eps, max_run, window)
-    carry, (brk_seq, a_seq, v_seq) = jax.lax.scan(step, carry,
-                                                  (ts, y[:, 1:].T))
+    carry, (brk_seq, a_seq, v_seq) = jax.lax.scan(
+        step, carry, (ts, y[:, 1:].T), unroll=_scan_unroll(method, T - 1))
     breaks = jnp.zeros((S, T), bool).at[:, :-1].set(brk_seq.T)
     a = jnp.zeros((S, T), dtype).at[:, :-1].set(a_seq.T)
     v = jnp.zeros((S, T), dtype).at[:, :-1].set(v_seq.T)
@@ -956,7 +1374,8 @@ def _segment_offline_deferred(method, y, eps, max_run, window):
     carry = impl.init(y[:, 0], eps, max_run, window, 0)
     ts = jnp.arange(1, T, dtype=jnp.int32)
     step = functools.partial(impl.step, eps, max_run, window)
-    carry, (ev, pos, ea, ev_v) = jax.lax.scan(step, carry, (ts, y[:, 1:].T))
+    carry, (ev, pos, ea, ev_v) = jax.lax.scan(
+        step, carry, (ts, y[:, 1:].T), unroll=_scan_unroll(method, T - 1))
     flush_evs = impl.flush(eps, window, carry, T - 1)
     return assemble_deferred_events(S, T, dtype, ev.T, pos.T, ea.T, ev_v.T,
                                     flush_evs)
@@ -998,11 +1417,12 @@ def disjoint_segment(y: jax.Array, eps: jax.Array, max_run: int = 256,
                      window: Optional[int] = None) -> SegmentOutput:
     """Batched optimal-disjoint method (ConvexHull / SlideFilter).
 
-    The extreme-slope lines are retightened by an exact masked reduction
-    over the current run's window (all run points), which equals the hull
-    pivot search because the binding extremum over the hull equals the
-    extremum over all points (DESIGN.md §3).  Lines are anchored at the
-    run start.  ``window`` defaults to ``max_run``.
+    The extreme-slope lines are retightened by a tangent walk over compact
+    per-stream convex chains carried in the scan state (amortized O(1) per
+    point — the paper's hull algorithm, batched).  Lines are anchored at
+    the run start.  ``window`` defaults to ``max_run`` and bounds the
+    chain capacity.  ``disjoint_segment_windowed`` is the O(W)-per-point
+    reference this is pinned against.
     """
     return _segment_offline("disjoint", y, eps, max_run,
                             check_window(max_run, window))
@@ -1011,14 +1431,42 @@ def disjoint_segment(y: jax.Array, eps: jax.Array, max_run: int = 256,
 @functools.partial(jax.jit, static_argnames=("max_run", "window"))
 def linear_segment(y: jax.Array, eps: jax.Array, max_run: int = 256,
                    window: Optional[int] = None) -> SegmentOutput:
-    """Batched Linear (best-fit) method with exact window revalidation.
+    """Batched Linear (best-fit) method with hull-carry revalidation.
 
     The running least-squares fit is kept in Welford form over
-    *run-relative* time; the hull-based validity check of the paper becomes
-    a masked max-residual reduction over the run window.
+    *run-relative* time; the validity check (max |residual| over the run)
+    is read off the run's convex chains by a tangent walk instead of an
+    O(W) masked reduction.  ``linear_segment_windowed`` is the windowed
+    reference this is pinned against.
     """
     return _segment_offline("linear", y, eps, max_run,
                             check_window(max_run, window))
+
+
+@functools.partial(jax.jit, static_argnames=("max_run", "window"))
+def disjoint_segment_windowed(y: jax.Array, eps: jax.Array,
+                              max_run: int = 256,
+                              window: Optional[int] = None) -> SegmentOutput:
+    """O(W)-per-point windowed reference for :func:`disjoint_segment`.
+
+    Retightens by an exact masked reduction over the current run's window
+    (all run points), which equals the hull pivot search because the
+    binding extremum over the hull equals the extremum over all points
+    (DESIGN.md §3).  Kept as the break-position oracle for the amortized
+    hull carry; not part of the streaming registry.
+    """
+    return _segment_offline("disjoint", y, eps, max_run,
+                            check_window(max_run, window),
+                            impls=_WINDOWED_IMPLS)
+
+
+@functools.partial(jax.jit, static_argnames=("max_run", "window"))
+def linear_segment_windowed(y: jax.Array, eps: jax.Array, max_run: int = 256,
+                            window: Optional[int] = None) -> SegmentOutput:
+    """O(W)-per-point windowed reference for :func:`linear_segment`."""
+    return _segment_offline("linear", y, eps, max_run,
+                            check_window(max_run, window),
+                            impls=_WINDOWED_IMPLS)
 
 
 @functools.partial(jax.jit, static_argnames=("max_run", "window"))
@@ -1105,13 +1553,27 @@ def _chunk_ts(impl, t0, first: int, n: int, dtype):
     return ts if impl.int_ts else ts.astype(dtype)
 
 
+def _pow2_pieces(n: int) -> list[int]:
+    """Decompose a chunk width into descending powers of two.
+
+    step_chunk feeds each piece through its own jitted launch, so the
+    trace set of the streaming scans is bounded by log2 distinct widths
+    instead of one trace per odd chunk size.  Pieces are consecutive time
+    slices threading the same carry, so outputs are bit-identical to a
+    single launch by the carry contract.
+    """
+    return [1 << i for i in range(n.bit_length() - 1, -1, -1) if n >> i & 1]
+
+
 @functools.partial(jax.jit, static_argnames=("method", "max_run", "window"))
 def _stream_start(method, max_run, window, y_chunk, eps, t0):
     impl = _METHOD_IMPLS[method]
     carry = impl.init(y_chunk[:, 0], eps, max_run, window, t0)
     ts = _chunk_ts(impl, t0, 1, y_chunk.shape[1], y_chunk.dtype)
     step = functools.partial(impl.step, eps, max_run, window)
-    carry, (brk, a, v) = jax.lax.scan(step, carry, (ts, y_chunk[:, 1:].T))
+    carry, (brk, a, v) = jax.lax.scan(
+        step, carry, (ts, y_chunk[:, 1:].T),
+        unroll=_scan_unroll(method, y_chunk.shape[1] - 1))
     return carry, SegmentOutput(brk.T, a.T, v.T)
 
 
@@ -1120,7 +1582,9 @@ def _stream_cont(method, max_run, window, carry, y_chunk, eps, t0):
     impl = _METHOD_IMPLS[method]
     ts = _chunk_ts(impl, t0, 0, y_chunk.shape[1], y_chunk.dtype)
     step = functools.partial(impl.step, eps, max_run, window)
-    carry, (brk, a, v) = jax.lax.scan(step, carry, (ts, y_chunk.T))
+    carry, (brk, a, v) = jax.lax.scan(
+        step, carry, (ts, y_chunk.T),
+        unroll=_scan_unroll(method, y_chunk.shape[1]))
     return carry, SegmentOutput(brk.T, a.T, v.T)
 
 
@@ -1137,7 +1601,9 @@ def _dstream_start(method, max_run, window, y_chunk, eps, t0):
     carry = impl.init(y_chunk[:, 0], eps, max_run, window, t0)
     ts = t0 + jnp.arange(1, y_chunk.shape[1], dtype=jnp.int32)
     step = functools.partial(impl.step, eps, max_run, window)
-    carry, evs = jax.lax.scan(step, carry, (ts, y_chunk[:, 1:].T))
+    carry, evs = jax.lax.scan(
+        step, carry, (ts, y_chunk[:, 1:].T),
+        unroll=_scan_unroll(method, y_chunk.shape[1] - 1))
     return carry, tuple(e.T for e in evs)
 
 
@@ -1146,7 +1612,9 @@ def _dstream_cont(method, max_run, window, carry, y_chunk, eps, t0):
     impl = _METHOD_IMPLS[method]
     ts = t0 + jnp.arange(y_chunk.shape[1], dtype=jnp.int32)
     step = functools.partial(impl.step, eps, max_run, window)
-    carry, evs = jax.lax.scan(step, carry, (ts, y_chunk.T))
+    carry, evs = jax.lax.scan(
+        step, carry, (ts, y_chunk.T),
+        unroll=_scan_unroll(method, y_chunk.shape[1]))
     return carry, tuple(e.T for e in evs)
 
 
@@ -1218,9 +1686,7 @@ def _deferred_release(state: SegmenterState, evs, n_consumed: int,
         det = np.full((S,), state.emitted, np.int64)
     else:
         pend, det = state.pend, state.det
-    batches = []
-    if evs is not None:
-        batches.append(evs)  # jnp-engine events: positions are absolute
+    batches = list(evs or [])  # jnp-engine events: positions are absolute
     flush_tail = None
     if flush_evs is not None:
         (ev1, p1, a1, v1), flush_tail = flush_evs
@@ -1260,24 +1726,49 @@ def step_chunk(state: SegmenterState, y_chunk: jax.Array
             f"or use the Pallas kernels "
             f"(repro.kernels.ops.StreamingSegmenter), which renumber "
             f"time per launch and have no such limit.")
-    t0 = jnp.asarray(state.t, jnp.int32)
-    if _METHOD_IMPLS[state.method].deferred:
-        if state.carry is None:
-            carry, evs = _dstream_start(state.method, state.max_run,
-                                        state.window, y, state.eps, t0)
+    # Feed the chunk as consecutive power-of-two pieces threading the same
+    # carry, so odd-sized chunks stop retracing the scans: at most
+    # log2(max chunk) traces per variant, and outputs stay bit-identical
+    # to a single launch by the carry contract.
+    n = y.shape[1]
+    deferred = _METHOD_IMPLS[state.method].deferred
+    carry = state.carry
+    t, lo = state.t, 0
+    outs, ev_batches = [], []
+    for w in _pow2_pieces(n):
+        piece = y[:, lo:lo + w]
+        t0 = jnp.asarray(t, jnp.int32)
+        if deferred:
+            if carry is None:
+                carry, evs = _dstream_start(state.method, state.max_run,
+                                            state.window, piece, state.eps,
+                                            t0)
+            else:
+                carry, evs = _dstream_cont(state.method, state.max_run,
+                                           state.window, carry, piece,
+                                           state.eps, t0)
+            ev_batches.append(evs)
         else:
-            carry, evs = _dstream_cont(state.method, state.max_run,
-                                       state.window, state.carry, y,
-                                       state.eps, t0)
-        new, out = _deferred_release(state, evs, y.shape[1])
+            if carry is None:
+                carry, out = _stream_start(state.method, state.max_run,
+                                           state.window, piece, state.eps,
+                                           t0)
+            else:
+                carry, out = _stream_cont(state.method, state.max_run,
+                                          state.window, carry, piece,
+                                          state.eps, t0)
+            outs.append(out)
+        t += w
+        lo += w
+    if deferred:
+        new, out = _deferred_release(state, ev_batches, n)
         return dataclasses.replace(new, carry=carry), out
-    if state.carry is None:
-        carry, out = _stream_start(state.method, state.max_run, state.window,
-                                   y, state.eps, t0)
+    if len(outs) == 1:
+        out = outs[0]
     else:
-        carry, out = _stream_cont(state.method, state.max_run, state.window,
-                                  state.carry, y, state.eps, t0)
-    new = dataclasses.replace(state, t=state.t + y.shape[1],
+        out = SegmentOutput(*(jnp.concatenate(parts, axis=1)
+                              for parts in zip(*outs)))
+    new = dataclasses.replace(state, t=state.t + n,
                               emitted=state.emitted + out.breaks.shape[1],
                               carry=carry)
     return new, out

@@ -1,0 +1,816 @@
+"""Device-resident wire packing: the §5 codecs as array programs.
+
+:mod:`repro.core.protocol_engine` renders wire bytes on the host — every
+``encode_batch`` / :class:`ProtocolEmitter.step_chunk` call pulls event
+columns into numpy and scatters ``float64`` fields with ``_put_f64``.
+This module builds the same bytes **on device**, so fleet pushes ship
+only finished per-stream blobs device-to-host:
+
+1.  **Compact** (:func:`_wire_plan`): every wire record of every
+    protocol is triggered at a *break point* (segment records at their
+    segment's break, singleton/burst payloads fused onto the break that
+    finalizes their values), so the chunk's breaks compact straight into
+    ``(S, E)`` record slots via a branchless bisect over the break
+    cumsum — ``E`` a half-octave bucket (:func:`_bucket`: 2^k or
+    3·2^(k-1)) of the densest stream, so retraces stay rare and padding
+    overshoot is capped at 1.5x.  Breaks that emit nothing still own a
+    (zero-size) slot; the assembly tolerates them.
+2.  **Plan** (also :func:`_wire_plan`): all codec geometry — float64
+    line fields, cross-record references (previous break/line, burst
+    fill, pending ``y''``), byte sizes — computed **per event** at
+    ``(S, E)``: a record's predecessor is just the neighboring slot
+    (one-column shift, carried ``(S,)`` state as the seed), an order of
+    magnitude fewer lanes than per-point planes.  Offline and chunked
+    enumeration are the *same* program: chunked packing just seeds the
+    shifts from carried state.
+3.  **Render** (:func:`_wire_emit`): each record as a fixed-``K`` row
+    of a ``(S, E, K)`` uint8 tensor — ``float64`` fields become bytes
+    with ``lax.bitcast_convert_type`` (little-endian, matching the
+    ``"<f8"`` host codecs), variable-length payloads gathered at
+    *value* granularity (:func:`_vals64`: one f32 gather + widening
+    cast + bitcast per value, so ``singlestream`` / ``twostreams``
+    never materialize a byte-granular copy of the whole value ring;
+    only ``singlestreamv``'s burst-header-interleaved payload keeps the
+    bitcast-ring byte gather).
+4.  **Assemble** (:func:`_assemble`): exclusive-cumsum byte offsets,
+    then one tiny ``(S, E)`` scatter-max writes each record's flat
+    gather base ``(slot+1)*K - off`` at its byte offset; a running max
+    over the ``(S, MB)`` plane turns that into a per-byte gather index
+    directly (XLA:CPU scatters are ~10 M updates/s — the only scatter
+    here is (S, E), never (S, T)), and one ragged gather
+    ``buf[s, b] = rec[s, ev(b), b - off(ev(b))]``.  On real TPUs the
+    assembly swaps in the Pallas pack kernel
+    (:func:`repro.kernels.pack.pack_records`); off-TPU the jnp gather
+    path *is* the fast path.
+
+Everything runs in two jits (plan, then emit once the byte buckets are
+known) under ``jax.experimental.enable_x64`` so the field math is the
+legacy codecs' float64 bit-for-bit:  ``A = a / dt``,
+``B = v - a*e - A*t0`` on the absolute index grid (see
+``protocol_engine._row_lines``).  :func:`pack_batch_device` is the
+offline one-shot (bit-identical to :func:`protocol_engine.encode_batch`
+for all four protocols x all knot kinds); :class:`DeviceProtocolEmitter`
+is the chunked twin of :class:`protocol_engine.ProtocolEmitter` with the
+codec state carried in device arrays.
+"""
+
+from __future__ import annotations
+
+import functools
+import sys
+from typing import List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from .jax_pla import SegmentOutput
+from .protocol_engine import (ENGINE_PROTOCOLS, KNOT_KINDS, PROTOCOL_MIN_SEG,
+                              _JOINT_RTOL)
+
+__all__ = ["WireState", "wire_init_state", "pack_batch_device",
+           "DeviceProtocolEmitter"]
+
+# Exclusive-scan sentinels on the absolute index grid.
+_NEG = -(2 ** 62)
+_I64 = jnp.int64
+_F64 = jnp.float64
+
+
+def _pow2(n: int, lo: int = 1) -> int:
+    n = max(int(n), lo)
+    return 1 << (n - 1).bit_length()
+
+
+def _bucket(n: int, lo: int = 1) -> int:
+    """Round up to a half-octave bucket (2^k or 3·2^(k-1)).
+
+    The wire launches retrace per static (E, K, MB) triple, so runtime
+    extents are bucketed.  Plain pow2 overshoots by up to 2x, and the
+    emit cost is linear in MB; half-octave steps cap the overshoot at
+    1.5x for one extra trace per octave.
+    """
+    n = max(int(n), lo)
+    p = _pow2(n)
+    h = 3 * (p // 4)
+    return h if h >= n and h >= lo else p
+
+
+def _excl_max(x: jax.Array) -> jax.Array:
+    """Per-row exclusive running max (strictly-before semantics)."""
+    m = jax.lax.associative_scan(jnp.maximum, x, axis=1)
+    seed = jnp.full((x.shape[0], 1), _NEG, x.dtype)
+    return jnp.concatenate([seed, m[:, :-1]], axis=1)
+
+
+def _b8(x: jax.Array) -> jax.Array:
+    """float64 -> trailing-axis little-endian bytes (platform order)."""
+    return jax.lax.bitcast_convert_type(x.astype(_F64), jnp.uint8)
+
+
+def _i8u(x: jax.Array) -> jax.Array:
+    """int -> int8 two's complement, viewed as uint8 (legacy counters)."""
+    return (x % 256).astype(jnp.uint8)
+
+
+class WireState(NamedTuple):
+    """Carried (S,) codec state — the device twin of the legacy
+    ``ProtocolEmitter`` per-stream arrays (same field semantics)."""
+
+    k: jax.Array           # i64 segments finalized
+    prev_end: jax.Array    # i64 last break position (-1 fresh)
+    prev_a: jax.Array      # f64 last segment's line A
+    prev_b: jax.Array      # f64 last segment's line B
+    pend_start: jax.Array  # i64 singlestreamv: first unemitted value
+    pend_len: jax.Array    # i64 singlestreamv: pending burst fill
+    pend_y2: jax.Array     # f64 mixed: deferred y''
+    has_y2: jax.Array      # bool mixed: y'' pending
+    y0: jax.Array          # f64 stream's first value (joint opening knot)
+    seen0: jax.Array       # bool y0 captured
+
+
+def wire_init_state(n_streams: int) -> WireState:
+    S = n_streams
+    z64 = jnp.zeros(S, _F64)
+    zi = jnp.zeros(S, _I64)
+    return WireState(k=zi, prev_end=jnp.full(S, -1, _I64), prev_a=z64,
+                     prev_b=z64, pend_start=zi, pend_len=zi, pend_y2=z64,
+                     has_y2=jnp.zeros(S, bool), y0=z64,
+                     seen0=jnp.zeros(S, bool))
+
+
+# ---------------------------------------------------------------------------
+# Plan: compact break slots, then per-event codec geometry at (S, E)
+# ---------------------------------------------------------------------------
+
+_PLAN_STATIC = ("protocol", "knot_kind", "close", "t0", "dt", "burst_cap")
+
+
+@jax.jit
+def _max_breaks(brk) -> jax.Array:
+    """Densest per-stream break count (sizes the static ``E`` bucket)."""
+    return jnp.max(jnp.sum(brk, axis=1, dtype=jnp.int32))
+
+
+def _lower_bound(ct, q, base, rem: int, hi: int):
+    """Branchless per-row lower bound: first col in ``[base, base+rem)``
+    with ``ct >= q``; gather columns clipped to ``hi``."""
+    while rem > 1:
+        half = rem // 2
+        col = jnp.minimum(base + (half - 1), hi)
+        cmid = jnp.take_along_axis(ct, col, axis=1)
+        base = jnp.where(cmid < q, base + half, base)
+        rem -= half
+    c0 = jnp.take_along_axis(ct, jnp.minimum(base, hi), axis=1)
+    return base + (c0 < q)
+
+
+def _bisect_breaks(ct, E: int):
+    """Position of each stream's k-th break: first column with
+    ``ct >= k + 1``, as a branchless per-row bisect.
+
+    ``jnp.searchsorted`` vmapped over rows lowers poorly on XLA:CPU; the
+    hand-rolled lower bound is ~log2(w) clipped gathers of (S, E) lanes
+    each, an order of magnitude cheaper at chunk scale.  (A two-level
+    block-subsampled variant measures no faster — the gathers are not
+    cache-bound at these shapes — so the flat form stays.)
+    """
+    S, w = ct.shape
+    q = jnp.arange(1, E + 1, dtype=ct.dtype)[None, :]
+    return _lower_bound(ct, q, jnp.zeros((S, E), jnp.int32), w, w - 1)
+
+
+def _carry_state(plan, pos, nev, state: WireState, end_pos, *,
+                 protocol: str, burst_cap: int) -> WireState:
+    """Carry the codec state past the chunk: every carried field is the
+    last break slot's plane value (device twin of the legacy emitter's
+    post-chunk bookkeeping)."""
+    E = pos.shape[1]
+    hasev = nev > 0
+    col = jnp.clip(nev - 1, 0, E - 1).astype(jnp.int32)[:, None]
+    g = lambda x: jnp.take_along_axis(x, col, axis=1)[:, 0]  # noqa: E731
+    sel = lambda new, old: jnp.where(hasev, new, old)        # noqa: E731
+
+    lbpos = g(pos)
+    k = state.k + nev
+    prev_end = sel(lbpos, state.prev_end)
+    prev_a = sel(g(plan["A"]), state.prev_a)
+    prev_b = sel(g(plan["B"]), state.prev_b)
+    pend_start, pend_len = state.pend_start, state.pend_len
+    pend_y2, has_y2 = state.pend_y2, state.has_y2
+    if protocol == "singlestreamv":
+        cap = burst_cap
+        llast = g(plan["long"])
+        raw1 = g(plan["raw1"])
+        org = g(plan["origin"])
+        pend_len = sel(jnp.where(llast, 0, raw1 % cap), state.pend_len)
+        pend_start = sel(jnp.where(llast, lbpos + 1,
+                                   org + (raw1 // cap) * cap),
+                         state.pend_start)
+    else:
+        pend_start = sel(lbpos + 1, state.pend_start)
+    if protocol == "implicit" and "dj" in plan:
+        has_y2 = sel(g(plan["dj"]), state.has_y2)
+        pend_y2 = sel(jnp.where(g(plan["dj"]), g(plan["y2"]),
+                                state.pend_y2), state.pend_y2)
+    seen0 = state.seen0 | (end_pos > 0)
+    return WireState(k=k, prev_end=prev_end, prev_a=prev_a, prev_b=prev_b,
+                     pend_start=pend_start, pend_len=pend_len,
+                     pend_y2=pend_y2, has_y2=has_y2, y0=plan["y0"],
+                     seen0=seen0)
+
+
+@functools.partial(jax.jit, static_argnames=_PLAN_STATIC + ("E",))
+def _wire_plan(brk, a, v, ring, ring0, state: WireState, pos0, *,
+               protocol: str, knot_kind: str, close: bool, t0: float,
+               dt: float, burst_cap: int, E: int):
+    """Compact the chunk's breaks into (S, E) record slots and compute
+    every codec plane per event.
+
+    The only (S, w) work is the break cumsum and the slot->column bisect;
+    all float64 line math, cross-record references and byte sizes run at
+    (S, E).  A slot's predecessor is simply the neighboring slot — a
+    one-column shift seeded from the carried state — because every break
+    owns a slot (some with ``sz == 0``: short breaks of
+    ``twostreams_seg``, burst-less ``singlestreamv`` breaks; the
+    assembly tolerates interior zero-size slots).  Returns
+    ``(plan, sz, nbmax, szmax, new_state)`` — ``plan``/``sz`` feed
+    :func:`_wire_emit` once the host turns the two scalars into static
+    (K, MB) buckets.
+    """
+    S, w = brk.shape
+    ct = jnp.cumsum(brk.astype(jnp.int32), axis=1)
+    nev = ct[:, -1].astype(_I64)
+    pc = jnp.clip(_bisect_breaks(ct, E), 0, w - 1).astype(jnp.int32)
+    sl = jnp.arange(E, dtype=_I64)[None, :]
+    valid = sl < nev[:, None]
+    pos = pos0 + pc.astype(_I64)
+    shift = lambda x, s0: jnp.concatenate(                   # noqa: E731
+        [s0[:, None], x[:, :-1]], axis=1)
+    prevb = shift(pos, state.prev_end)
+    n = pos - prevb
+    first = state.k[:, None] + sl == 0
+    lastb = sl == nev[:, None] - 1
+
+    ge = lambda x: jnp.take_along_axis(x, pc, axis=1)        # noqa: E731
+    posf = pos.astype(_F64)
+    a64 = ge(a).astype(_F64)
+    A = a64 / dt
+    B = ge(v).astype(_F64) - a64 * posf - A * t0
+    te = t0 + dt * posf
+    ye = A * te + B
+    pA = shift(A, state.prev_a)
+    pB = shift(B, state.prev_b)
+    # The stream's first raw value (joint opening knot): carried once
+    # seen, read live from the ring on the chunk that first needs it.
+    col0 = jnp.clip(-ring0, 0, ring.shape[1] - 1)
+    y0 = jnp.where(state.seen0, state.y0, ring[:, col0].astype(_F64))
+    plan = dict(first=first, n=n, prevb=prevb, A=A, B=B, te=te, ye=ye,
+                y0=y0)
+
+    if protocol == "implicit":
+        tb = t0 + dt * (prevb + 1).astype(_F64)
+        y1 = pA * tb + pB
+        y2 = A * tb + B
+        plan.update(tb=tb, y1=y1, y2=y2)
+        if knot_kind in ("joint", "continuous"):
+            sz = jnp.where(first, 32, 16)
+        elif knot_kind == "disjoint":
+            sz = jnp.where(first, 16, 24)
+            if close:
+                sz = sz + jnp.where(lastb, 16, 0)
+        else:  # mixed
+            joint = jnp.abs(y1 - y2) <= _JOINT_RTOL * (1 + jnp.abs(y1)
+                                                       + jnp.abs(y2))
+            dj = ~joint & ~first
+            pw = shift(dj, state.has_y2) & ~first
+            pv = shift(y2, state.pend_y2)
+            sz = jnp.where(first, 16, 16 + 8 * pw)
+            if close:
+                sz = sz + jnp.where(lastb, 16 + 8 * dj, 0)
+            plan.update(joint=joint, dj=dj, pw=pw, pv=pv)
+    else:
+        long = n >= PROTOCOL_MIN_SEG[base_protocol(protocol)]
+        plan["long"] = long
+        if protocol == "twostreams_seg":
+            sz = jnp.where(long, 25, 0)
+        elif protocol == "twostreams_single":
+            sz = jnp.where(long, 0, 8 * n)
+        elif protocol == "singlestream":
+            sz = jnp.where(long, 17, 9 * n)
+        else:  # singlestreamv
+            cap = burst_cap
+            llpos = _excl_max(jnp.where(long & valid, pos, _NEG))
+            inlong = llpos >= pos0
+            origin = jnp.where(inlong, llpos + 1,
+                               state.pend_start[:, None])
+            raw0 = jnp.where(inlong, prevb + 1 - origin,
+                             state.pend_len[:, None]
+                             + (prevb - state.prev_end[:, None]))
+            raw1 = raw0 + jnp.where(long, 0, n)
+            nfull = jnp.where(long, 0, raw1 // cap - raw0 // cap)
+            plen = jnp.where(long, raw0 % cap, 0)
+            sz = jnp.where(long,
+                           17 + jnp.where(plen > 0, 1 + 8 * plen, 0),
+                           nfull * (1 + 8 * cap))
+            if close:
+                pend_close = jnp.where(long, 0, raw1 % cap)
+                sz = sz + jnp.where(lastb & (pend_close > 0),
+                                    1 + 8 * pend_close, 0)
+                plan["pend_close"] = pend_close
+            plan.update(origin=origin, raw0=raw0, raw1=raw1, nfull=nfull,
+                        plen=plen)
+    sz = jnp.where(valid, sz, 0).astype(_I64)
+    new_state = _carry_state(plan, pos, nev, state, pos0 + w,
+                             protocol=base_protocol(protocol),
+                             burst_cap=burst_cap)
+    return plan, sz, jnp.max(jnp.sum(sz, axis=1)), jnp.max(sz), new_state
+
+
+@jax.jit
+def _wire_touch_state(state: WireState, ring, ring0, end_pos) -> WireState:
+    """State advance for a chunk with no breaks at all: only the
+    first-value capture (joint opening knot) can change."""
+    v0 = ring[:, jnp.clip(-ring0, 0, ring.shape[1] - 1)].astype(_F64)
+    y0 = jnp.where(state.seen0, state.y0, v0)
+    return state._replace(y0=y0, seen0=state.seen0 | (end_pos > 0))
+
+
+# ---------------------------------------------------------------------------
+# Render: one (S, E, K) uint8 row per record
+# ---------------------------------------------------------------------------
+
+def _pad_k(parts, K: int) -> jax.Array:
+    """Concatenate byte fields along the last axis, pad/trim to K."""
+    rec = jnp.concatenate(parts, axis=-1)
+    if rec.shape[-1] < K:
+        rec = jnp.pad(rec, [(0, 0)] * (rec.ndim - 1)
+                      + [(0, K - rec.shape[-1])])
+    return rec[..., :K]
+
+
+def _val_bytes(yb8, q, jbyte):
+    """Gather value bytes: ``yb8[s, q*8 + jbyte]`` with clipping.
+
+    ``yb8`` is the bitcast (S, Y*8) value ring; ``q`` the ring column of
+    the wanted float64; ``jbyte`` its byte index.  Out-of-range lanes
+    return garbage that the caller masks via record sizes.
+    """
+    idx = jnp.clip(q * 8 + jbyte, 0, yb8.shape[1] - 1).astype(jnp.int32)
+    flat = idx.reshape(idx.shape[0], -1)
+    return jnp.take_along_axis(yb8, flat, axis=1).reshape(idx.shape)
+
+
+def _vals64(ring, q):
+    """Gather whole ring values at columns ``q`` (clipped) as float64
+    little-endian bytes, shape ``q.shape + (8,)``.
+
+    The value-granular twin of :func:`_val_bytes`: one f32 gather + one
+    widening cast per *value* instead of eight byte gathers from a
+    pre-bitcast full ring — records whose payload is aligned runs of
+    whole values (``singlestream``, ``twostreams_single``) never touch
+    a byte-granular gather, and skip the full-ring f64 cast entirely.
+    Out-of-range lanes clip to an in-range value (garbage the caller
+    masks via record sizes; :func:`_val_bytes` clips at byte rank, so
+    the two paths differ only past a record's size).
+    """
+    qc = jnp.clip(q, 0, ring.shape[1] - 1).astype(jnp.int32)
+    flat = qc.reshape(qc.shape[0], -1)
+    v = jnp.take_along_axis(ring, flat, axis=1).reshape(qc.shape)
+    return _b8(v)
+
+
+def _render(plan_e, ring, ring0, *, protocol: str, knot_kind: str,
+            close: bool, t0: float, dt: float, burst_cap: int, K: int):
+    """(S, E, K) record rows from the compacted per-event planes."""
+    kar = jnp.arange(K, dtype=jnp.int32)
+    first = plan_e["first"][..., None]
+    Ab, Bb = _b8(plan_e["A"]), _b8(plan_e["B"])
+    teb, yeb = _b8(plan_e["te"]), _b8(plan_e["ye"])
+    z8 = jnp.zeros_like(Ab)
+
+    if protocol == "implicit":
+        t0b = jnp.broadcast_to(_b8(jnp.float64(t0)), Ab.shape)
+        if knot_kind in ("joint", "continuous"):
+            if knot_kind == "joint":
+                yob = jnp.broadcast_to(_b8(plan_e["y0"])[:, None, :],
+                                       Ab.shape)
+            else:
+                yob = _b8(plan_e["A"] * t0 + plan_e["B"])
+            rec = jnp.where(first, _pad_k([t0b, yob, teb, yeb], K),
+                            _pad_k([teb, yeb, z8, z8], K))
+            return rec
+        yob = _b8(plan_e["A"] * t0 + plan_e["B"])
+        ntb = _b8(-plan_e["tb"])
+        y1b = _b8(plan_e["y1"])
+        if knot_kind == "disjoint":
+            y2b = _b8(plan_e["y2"])
+            rec = jnp.where(first, _pad_k([t0b, yob, teb, yeb, z8], K),
+                            _pad_k([ntb, y1b, y2b, teb, yeb], K))
+            return rec
+        # mixed: [pend y''?][+-tb, y1][close: y''?, te, ye]
+        stb = _b8(jnp.where(plan_e["joint"], plan_e["tb"], -plan_e["tb"]))
+        pvb = _b8(plan_e["pv"])
+        y2b = _b8(plan_e["y2"])
+        pw = plan_e["pw"][..., None]
+        dj = plan_e["dj"][..., None]
+        body = jnp.where(
+            pw,
+            jnp.where(dj, _pad_k([pvb, stb, y1b, y2b, teb, yeb], K),
+                      _pad_k([pvb, stb, y1b, teb, yeb, z8], K)),
+            jnp.where(dj, _pad_k([stb, y1b, y2b, teb, yeb, z8], K),
+                      _pad_k([stb, y1b, teb, yeb, z8, z8], K)))
+        rec = jnp.where(first, _pad_k([t0b, yob, teb, yeb, z8, z8], K),
+                        body)
+        return rec
+
+    n = plan_e["n"]
+    start = plan_e["prevb"] + 1
+    if protocol == "twostreams_seg":
+        tsb = _b8(t0 + dt * start.astype(_F64))
+        cnt = _i8u(n - 1)[..., None]
+        return _pad_k([tsb, cnt, Ab, Bb], K)
+    if protocol == "twostreams_single":
+        nv = -(-K // 8)
+        vi = jnp.arange(nv, dtype=jnp.int32)
+        q = (start - ring0)[..., None] + vi[None, None, :]
+        vb = _vals64(ring, q)                      # (S, E, nv, 8)
+        return vb.reshape(*vb.shape[:2], nv * 8)[..., :K]
+    if protocol == "singlestream":
+        seg = _pad_k([_i8u(n - 1)[..., None], Ab, Bb], K)
+        # Short record: n x [0x00, value f64] groups — gather the values
+        # whole and prepend each group's marker byte with a reshape.
+        nv = -(-K // 9)
+        vi = jnp.arange(nv, dtype=jnp.int32)
+        q = (start - ring0)[..., None] + vi[None, None, :]
+        vb = _vals64(ring, q)                      # (S, E, nv, 8)
+        z1 = jnp.zeros(vb.shape[:3] + (1,), jnp.uint8)
+        sv = jnp.concatenate([z1, vb], axis=3)
+        sv = sv.reshape(*sv.shape[:2], nv * 9)[..., :K]
+        return jnp.where(plan_e["long"][..., None], seg, sv)
+
+    # singlestreamv: burst headers misalign the value bytes within a
+    # burst, so this branch keeps the byte-granular ring gather.
+    yb8 = _b8(ring).reshape(ring.shape[0], -1)
+    cap = burst_cap
+    origin0 = plan_e["origin"] - ring0    # ring column of raw index 0
+    raw0 = plan_e["raw0"]
+    plen = plan_e["plen"]
+    base = (raw0 // cap) * cap            # raw index of the open burst
+    # Long record: [(-plen), plen values]?  [n, A, B]  [close never here]
+    p1 = jnp.where(plen > 0, 1 + 8 * plen, 0)[..., None]
+    j = kar[None, None, :]
+    vi, r = (j - 1) // 8, (j - 1) % 8
+    burst_b = jnp.where(j == 0, _i8u(-plen)[..., None],
+                        _val_bytes(yb8, (origin0 + base)[..., None] + vi, r))
+    segrow = _pad_k([_i8u(n)[..., None], Ab, Bb], K)
+    j2 = jnp.clip(j - p1, 0, K - 1)
+    seg_b = jnp.take_along_axis(segrow, j2, axis=2)
+    long_rec = jnp.where(j < p1, burst_b, seg_b)
+    # Short record: nfull (<= 1 by min_seg <= cap) full bursts of
+    # [(-cap), cap values], then (close) the trailing partial burst.
+    bsz = 1 + 8 * cap
+    bj = j % bsz
+    fb0 = origin0 + base                  # first emitted burst's start
+    vi2, r2 = (bj - 1) // 8, (bj - 1) % 8
+    full_b = jnp.where(bj == 0, jnp.uint8((-cap) % 256),
+                       _val_bytes(yb8, fb0[..., None]
+                                  + (j // bsz) * cap + vi2, r2))
+    if close:
+        pc = plan_e["pend_close"]
+        nf = plan_e["nfull"]
+        coff = (nf * bsz)[..., None]      # closing burst starts here
+        cstart = origin0 + (plan_e["raw1"] // cap) * cap
+        jc = jnp.clip(j - coff, 0, K - 1)
+        vic, rc = (jc - 1) // 8, (jc - 1) % 8
+        close_b = jnp.where(jc == 0, _i8u(-pc)[..., None],
+                            _val_bytes(yb8, cstart[..., None] + vic, rc))
+        short_rec = jnp.where(j < coff, full_b, close_b)
+    else:
+        short_rec = full_b
+    return jnp.where(plan_e["long"][..., None], long_rec, short_rec)
+
+
+# ---------------------------------------------------------------------------
+# Assemble: byte offsets -> byte->record map -> one ragged gather
+# ---------------------------------------------------------------------------
+
+def _assemble(rec, sz, MB: int):
+    """Pack (S, E, K) records into per-stream (S, MB) wire buffers.
+
+    Zero-size slots are fine *anywhere* — breaks that emit nothing
+    (short ``twostreams_seg`` breaks, burst-less ``singlestreamv``
+    breaks) still own a slot.  Each live record scatter-maxes its slot
+    ordinal at its first byte; a running max then labels every byte with
+    the covering slot (records are contiguous, so byte ``b`` belongs to
+    the last record starting at or before it).  One (S, E) scatter, one
+    (S, MB) running max, one offset gather and one payload gather.  This
+    is the jnp fallback of the Pallas pack kernel
+    (:func:`repro.kernels.pack.pack_records`).
+    """
+    S, E, K = rec.shape
+    sz = sz.astype(jnp.int32)
+    offs = jnp.cumsum(sz, axis=1) - sz
+    nbytes = offs[:, -1] + sz[:, -1]
+    # Byte b of stream s wants payload index ev*K + (b - offs[ev]), ev
+    # the covering slot (last slot starting at or before b).  The
+    # scattered key is val = (slot+1)*K - offs directly: it is positive
+    # and non-decreasing in slot (every sz <= K), so the running max
+    # labels each byte with its covering slot's val and the gather index
+    # is just b + val - K — no separate slot map or offset gather.  val
+    # <= E*K, so the map stays int16 (half the scatter + running-max
+    # traffic) whenever E*K does.
+    mt = jnp.int16 if E * K < (1 << 15) else jnp.int32
+    rows = jnp.arange(S, dtype=jnp.int32)[:, None]
+    slot1 = jnp.arange(1, E + 1, dtype=jnp.int32)[None, :]
+    val = (slot1 * K - offs).astype(mt)
+    amap = jnp.zeros((S, MB + 1), mt)
+    amap = amap.at[rows, jnp.clip(offs, 0, MB)].max(
+        jnp.where(sz > 0, val, mt(0)), mode="drop")
+    run = jax.lax.associative_scan(jnp.maximum, amap[:, :MB], axis=1)
+    b = jnp.arange(MB, dtype=jnp.int32)[None, :]
+    idx = jnp.clip(b + run.astype(jnp.int32) - K, 0, E * K - 1)
+    flat = rec.reshape(S, E * K)
+    buf = jnp.take_along_axis(flat, idx, axis=1)
+    live = b < nbytes[:, None]
+    return jnp.where(live, buf, jnp.uint8(0)), nbytes
+
+
+def _assemble_dispatch(rec, sz, MB: int):
+    """Assembly-path pick at trace time: the Pallas pack kernel on a real
+    TPU backend (lane rotates instead of byte gathers — see
+    :mod:`repro.kernels.pack`), the jnp gather otherwise.  Records wider
+    than one lane row (huge ``singlestreamv`` caps) always take jnp."""
+    from repro.compat.pallas import interpret_mode
+    if rec.shape[2] <= 128 and not interpret_mode():
+        from repro.kernels.pack import pack_records_pallas
+        return pack_records_pallas(rec, sz, MB=MB)
+    return _assemble(rec, sz, MB)
+
+
+# ---------------------------------------------------------------------------
+# Emit: render + assemble a planned chunk once (K, MB) buckets are known
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=_PLAN_STATIC + ("K", "MB"))
+def _wire_emit(plan, sz, ring, ring0, *, protocol, knot_kind, close, t0,
+               dt, burst_cap, K, MB):
+    """Render + assemble one planned chunk: (buf (S, MB) u8, nbytes)."""
+    rec = _render(plan, ring, ring0, protocol=protocol, knot_kind=knot_kind,
+                  close=close, t0=t0, dt=dt, burst_cap=burst_cap, K=K)
+    return _assemble_dispatch(rec, sz, MB)
+
+
+def base_protocol(protocol: str) -> str:
+    return "twostreams" if protocol.startswith("twostreams") else protocol
+
+
+def _sub_protocols(protocol: str):
+    if protocol == "twostreams":
+        return ("twostreams_seg", "twostreams_single")
+    return (protocol,)
+
+
+# ---------------------------------------------------------------------------
+# Public offline one-shot
+# ---------------------------------------------------------------------------
+
+def _slice_bytes(buf: np.ndarray, nbytes: np.ndarray) -> List[bytes]:
+    return [buf[s, :int(nbytes[s])].tobytes() for s in range(buf.shape[0])]
+
+
+def pack_batch_device(seg: SegmentOutput, ys, protocol: str,
+                      knot_kind: str = "disjoint", *, t0: float = 0.0,
+                      dt: float = 1.0, burst_cap: int = 127) -> List:
+    """Device-resident :func:`protocol_engine.encode_batch`.
+
+    Same contract, same bytes: one ``bytes`` per stream
+    (``(segment, singleton)`` pairs for ``twostreams``), built on device
+    and copied to the host as finished blobs.
+    """
+    if protocol not in ENGINE_PROTOCOLS:
+        raise ValueError(f"unknown protocol {protocol!r}")
+    if knot_kind not in KNOT_KINDS:
+        raise ValueError(f"knot_kind must be one of {KNOT_KINDS}; "
+                         f"{knot_kind!r}")
+    if sys.byteorder != "little":
+        raise RuntimeError("device wire packing assumes little-endian "
+                           "host byte order (the '<f8' wire format)")
+    with enable_x64():
+        brk = jnp.asarray(seg.breaks, bool)
+        S, T = brk.shape
+        brk = brk.at[:, -1].set(True)     # legacy _row_lines forces T-1
+        a = jnp.asarray(seg.a)
+        v = jnp.asarray(seg.v)
+        ring = jnp.asarray(ys)            # f32 ok: bitcast casts in-jit
+        state = wire_init_state(S)
+        pos0 = jnp.int64(0)
+        E = _bucket(int(_max_breaks(brk)))
+        outs = []
+        for sub in _sub_protocols(protocol):
+            plan, sz, nbmax, szmax, _ = _wire_plan(
+                brk, a, v, ring, jnp.int64(0), state, pos0, protocol=sub,
+                knot_kind=knot_kind, close=True, t0=t0, dt=dt,
+                burst_cap=burst_cap, E=E)
+            buf, nbytes = _wire_emit(
+                plan, sz, ring, jnp.int64(0), protocol=sub,
+                knot_kind=knot_kind, close=True, t0=t0, dt=dt,
+                burst_cap=burst_cap, K=_bucket(int(szmax), 8),
+                MB=_bucket(int(nbmax), 8))
+            outs.append(_slice_bytes(np.asarray(buf), np.asarray(nbytes)))
+    if protocol == "twostreams":
+        return list(zip(outs[0], outs[1]))
+    return outs[0]
+
+
+# ---------------------------------------------------------------------------
+# Chunked emitter (device twin of ProtocolEmitter)
+# ---------------------------------------------------------------------------
+
+class DeviceProtocolEmitter:
+    """Drop-in :class:`protocol_engine.ProtocolEmitter` with the codec
+    state, value ring and byte assembly resident on device.
+
+    Same API and the same bytes: ``step_chunk(events, y_chunk)`` returns
+    the newly wire-ready per-stream blobs, and concatenating all returns
+    plus ``flush()`` is bit-identical to :func:`encode_batch` on the
+    one-shot segmentation.  Pushes never bounce through host numpy — the
+    only device-to-host traffic is the finished ``(buf, nbytes)`` pair.
+
+    ``max_run`` bounds how far back a record can reference values (the
+    segmenter's run cap); with ``burst_cap`` it sizes the device value
+    ring.
+    """
+
+    def __init__(self, protocol: str, n_streams: int, *,
+                 knot_kind: str = "disjoint", t0: float = 0.0,
+                 dt: float = 1.0, burst_cap: int = 127,
+                 max_run: int = 256):
+        if protocol not in ENGINE_PROTOCOLS:
+            raise ValueError(f"unknown protocol {protocol!r}; "
+                             f"have {sorted(ENGINE_PROTOCOLS)}")
+        if knot_kind not in KNOT_KINDS:
+            raise ValueError(f"knot_kind must be one of {KNOT_KINDS}; "
+                             f"{knot_kind!r}")
+        self.protocol = protocol
+        self.n_streams = n_streams
+        self.knot_kind = knot_kind
+        self.t0 = float(t0)
+        self.dt = float(dt)
+        self.burst_cap = burst_cap
+        self.max_run = max_run
+        with enable_x64():
+            self._state = wire_init_state(n_streams)
+            self._ring = jnp.zeros((n_streams, 0), _F64)
+        self._ring0 = 0          # absolute position of ring column 0
+        self._epos = 0           # absolute position of next event column
+        self._finished = False
+
+    def _grow_ring(self, lead: int) -> None:
+        """Size the ring for the oldest value any future record can still
+        reference: ``max_run + burst_cap`` behind the event frontier,
+        which itself trails the newest value by ``lead`` columns (the
+        deferred segmenters release events up to a full run late)."""
+        need = _pow2(self.max_run + self.burst_cap + max(lead, 1) + 2)
+        if self._ring.shape[1] < need:
+            pad = need - self._ring.shape[1]
+            self._ring = jnp.concatenate(
+                [jnp.zeros((self.n_streams, pad), _F64), self._ring],
+                axis=1)
+            self._ring0 -= pad
+
+    def _push_values(self, y_chunk) -> None:
+        y = jnp.asarray(y_chunk, _F64)
+        if y.ndim != 2 or y.shape[0] != self.n_streams:
+            raise ValueError(f"y_chunk must be ({self.n_streams}, n); "
+                             f"got {y.shape}")
+        n = y.shape[1]
+        if n == 0:
+            return
+        self._grow_ring(self._ring0 + self._ring.shape[1] + n
+                        - self._epos)
+        Y = self._ring.shape[1]
+        if n >= Y:
+            self._ring = y[:, -Y:]
+        else:
+            self._ring = jnp.concatenate([self._ring[:, n:], y], axis=1)
+        self._ring0 += n
+
+    def _empty(self) -> List:
+        empty = [b""] * self.n_streams
+        if self.protocol == "twostreams":
+            return [(b, b"") for b in empty]
+        return empty
+
+    def step_chunk(self, events: Optional[SegmentOutput] = None,
+                   y_chunk=None) -> List:
+        """Consume new event columns / value columns; return new bytes."""
+        if self._finished:
+            raise RuntimeError("step_chunk after flush()")
+        with enable_x64():
+            if y_chunk is not None:
+                self._push_values(y_chunk)
+            if events is None or not events.breaks.shape[1]:
+                return self._empty()
+            brk = jnp.asarray(events.breaks, bool)
+            if brk.shape[0] != self.n_streams:
+                raise ValueError(f"events must cover ({self.n_streams}, w)"
+                                 f" streams; got {brk.shape}")
+            if self._ring.shape[1] == 0:
+                self._grow_ring(1)
+            a = jnp.asarray(events.a)
+            v = jnp.asarray(events.v)
+            pos0 = jnp.int64(self._epos)
+            ring0 = jnp.int64(self._ring0)
+            w = brk.shape[1]
+            mx = int(_max_breaks(brk))
+            if mx == 0:
+                self._state = _wire_touch_state(
+                    self._state, self._ring, ring0,
+                    jnp.int64(self._epos + w))
+                self._epos += w
+                return self._empty()
+            E = _bucket(mx)
+            outs = []
+            state_in = self._state
+            for sub in _sub_protocols(self.protocol):
+                plan, sz, nbmax, szmax, new_state = _wire_plan(
+                    brk, a, v, self._ring, ring0, state_in, pos0,
+                    protocol=sub, knot_kind=self.knot_kind, close=False,
+                    t0=self.t0, dt=self.dt, burst_cap=self.burst_cap,
+                    E=E)
+                nbm = int(nbmax)
+                if nbm == 0:
+                    outs.append(None)
+                    continue
+                buf, nbytes = _wire_emit(
+                    plan, sz, self._ring, ring0, protocol=sub,
+                    knot_kind=self.knot_kind, close=False, t0=self.t0,
+                    dt=self.dt, burst_cap=self.burst_cap,
+                    K=_bucket(int(szmax), 8), MB=_bucket(nbm, 8))
+                outs.append(_slice_bytes(np.asarray(buf),
+                                         np.asarray(nbytes)))
+            self._state = new_state
+            self._epos += w
+        if self.protocol == "twostreams":
+            e = [b""] * self.n_streams
+            return list(zip(outs[0] or e, outs[1] or e))
+        return outs[0] if outs[0] is not None else self._empty()
+
+    def flush(self) -> List:
+        """Close the stream: trailing bursts and the closing knot."""
+        if self._finished:
+            raise RuntimeError("flush() called twice")
+        self._finished = True
+        with enable_x64():
+            buf, nbytes = _wire_flush(
+                self._state, self._ring, jnp.int64(self._ring0),
+                protocol=self.protocol, knot_kind=self.knot_kind,
+                t0=self.t0, dt=self.dt, burst_cap=self.burst_cap)
+            if buf is None:
+                return self._empty()
+            outs = _slice_bytes(np.asarray(buf), np.asarray(nbytes))
+        if self.protocol == "twostreams":
+            return [(o, b"") for o in outs]
+        return outs
+
+
+def _wire_flush(state: WireState, ring, ring0, *, protocol: str,
+                knot_kind: str, t0: float, dt: float, burst_cap: int):
+    """Closing records from carried state (legacy ``flush`` semantics)."""
+    if protocol == "singlestreamv":
+        return _flush_sstv(state, ring, ring0, burst_cap=burst_cap)
+    if protocol == "implicit" and knot_kind in ("disjoint", "mixed"):
+        return _flush_implicit(state, t0=t0, dt=dt,
+                               mixed=(knot_kind == "mixed"))
+    return None, None
+
+
+@functools.partial(jax.jit, static_argnames=("t0", "dt", "mixed"))
+def _flush_implicit(state: WireState, *, t0, dt, mixed):
+    te = t0 + dt * state.prev_end.astype(_F64)
+    ye = state.prev_a * te + state.prev_b
+    pw = (state.has_y2 if mixed
+          else jnp.zeros_like(state.has_y2))[:, None, None]
+    rec = jnp.where(pw,
+                    _pad_k([_b8(state.pend_y2)[:, None, :],
+                            _b8(te)[:, None, :], _b8(ye)[:, None, :]], 24),
+                    _pad_k([_b8(te)[:, None, :], _b8(ye)[:, None, :],
+                            jnp.zeros_like(_b8(te))[:, None, :]], 24))
+    nbytes = jnp.where(state.k > 0, jnp.where(pw[:, 0, 0], 24, 16), 0)
+    return rec[:, 0, :], nbytes
+
+
+@functools.partial(jax.jit, static_argnames=("burst_cap",))
+def _flush_sstv(state: WireState, ring, ring0, *, burst_cap):
+    cap = burst_cap
+    plen = state.pend_len
+    K = 1 + 8 * (cap - 1)
+    j = jnp.arange(K, dtype=jnp.int32)[None, :]
+    yb8 = _b8(ring).reshape(ring.shape[0], -1)
+    q = (state.pend_start - ring0)[:, None] + (j - 1) // 8
+    rec = jnp.where(j == 0, _i8u(-plen)[:, None],
+                    _val_bytes(yb8, q, (j - 1) % 8))
+    nbytes = jnp.where(plen > 0, 1 + 8 * plen, 0)
+    return rec, nbytes

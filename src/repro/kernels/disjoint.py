@@ -1,25 +1,34 @@
 """Pallas TPU kernel: batched optimal-disjoint PLA segmentation (§3.2).
 
-The convex-hull pivot search of the sequential algorithm is replaced by an
-exact masked min/max reduction over the current run's window — valid
-because (a) the protocols cap runs at <= 256 points, so the run always fits
-a VMEM ring buffer, and (b) the binding extremum over all run points equals
-the extremum over the hull (DESIGN.md §3).
+Mirrors the amortized hull carry of ``core.jax_pla._disjoint_step``: the
+convex-hull pivot search runs on two compact per-stream convex chains
+carried in VMEM — ``hl`` the *upper* chain of lower endpoints
+``(t, y - eps)`` (the oracle's ``env_lo``, queried for ``a_hi``), ``hh``
+the *lower* chain of upper endpoints (``env_hi``, queried for ``a_lo``) —
+popped with the exact ``hulls._HullChain.add`` cross tests and queried by
+a hinted tangent walk (amortized O(1) per point).  The jnp engine keeps
+the same chains in capacity-capped ``(S, C)`` planes with closed-form
+pops (``core.jax_pla._chain_append`` / ``_chain_extremum``); here VMEM
+rows are cheap, so the kernel carries the full-window chains and walks
+them sequentially — same hull semantics, different carry shape.
 
 Lines are anchored at the run start (``line(t) = v + a * (t - run_start)``)
 so float32 stays exact for arbitrarily long streams.
 
-Ring-buffer trick: no gathers.  Slot ``r`` of the (W, BS) ring holds the
-value at launch-local position ``p_r = t-1 - ((t-1-r) mod W)``; the in-run
-mask and per-slot timestamps are pure arithmetic on an iota.
+Per-lane chain indexing uses one-hot masked reductions over the (W, BS)
+chain planes (gather) and one-hot selects (scatter) — exact, since adding
+zeros and selecting rows do not round.
 
-Carry rows (disjoint_state_rows(W) = 9 + W, all f32; see the carry-state
+Carry rows (disjoint_state_rows(W) = 13 + 4W, all f32; see the carry-state
 contract in kernels/common.py): 0 started, 1 run_start, 2 run_len, 3 y0,
-4 prev_y, 5 a_lo, 6 v_lo, 7 a_hi, 8 v_hi, then W ring rows.  Time is
-launch-local, so ``run_start`` may be *negative* on resume (run began in
-an earlier chunk — never below ``-W`` since runs are capped);
-``disjoint_shift_carry`` renumbers it and rolls the ring after each
-launch.  All uses are differences, so the renumbering is bit-transparent.
+4 prev_y, 5 a_lo, 6 v_lo, 7 a_hi, 8 v_hi, 9 hl_len, 10 hh_len, 11 hl_c,
+12 hh_c, then four W-row blocks hl_pos, hl_val, hh_pos, hh_val.  Time is
+launch-local, so ``run_start`` and the chain position rows may be
+*negative* on resume (run began in an earlier chunk — never below ``-W``
+since runs are capped); ``disjoint_shift_carry`` renumbers them after
+each launch.  All uses are differences, so the renumbering is
+bit-transparent; lengths and contact hints are counts, not positions, and
+shift untouched.
 """
 
 from __future__ import annotations
@@ -34,13 +43,11 @@ from repro.core.jax_pla import check_window
 
 from .common import BLOCK_S, BLOCK_T, launch_segmenter
 
-_BIG = 3.4e38
-
-_HEAD_ROWS = 9  # scalar state rows before the ring
+_HEAD_ROWS = 13  # scalar state rows before the chain planes
 
 
 def disjoint_state_rows(window: int) -> int:
-    return _HEAD_ROWS + window
+    return _HEAD_ROWS + 4 * window
 
 
 def disjoint_init_carry(sp: int, window: int) -> jax.Array:
@@ -49,14 +56,97 @@ def disjoint_init_carry(sp: int, window: int) -> jax.Array:
 
 def disjoint_shift_carry(carry: jax.Array, m: int) -> jax.Array:
     """Renumber to the next launch's local frame after consuming m cols."""
-    carry = carry.at[1:2].add(-float(m))
-    return carry.at[_HEAD_ROWS:].set(
-        jnp.roll(carry[_HEAD_ROWS:], -m, axis=0))
+    W = (carry.shape[0] - _HEAD_ROWS) // 4
+    carry = carry.at[1:2].add(-float(m))                       # run_start
+    carry = carry.at[_HEAD_ROWS:_HEAD_ROWS + W].add(-float(m))  # hl_pos
+    h2 = _HEAD_ROWS + 2 * W
+    return carry.at[h2:h2 + W].add(-float(m))                   # hh_pos
+
+
+def _gather(buf, idx, slot_iota):
+    """One-hot per-lane gather: ``buf (W, BS)``, ``idx (1, BS) -> (1, BS)``.
+
+    Exact — selects a single row and adds zeros, neither of which rounds.
+    """
+    return jnp.sum(jnp.where(slot_iota == idx, buf, 0.0), axis=0,
+                   keepdims=True)
+
+
+def _chain_pop(pos_ref, val_ref, ln, keep, px, py, slot_iota, upper: bool):
+    """Sequential pop + append with ``hulls._HullChain.add``'s cross tests.
+
+    All operands are (1, BS) rows over (W, BS) chain planes; returns the
+    length after the append.  ``keep=False`` lanes reset to the single new
+    vertex.
+    """
+    pos, val = pos_ref[...], val_ref[...]
+
+    def g(buf, idx):
+        return _gather(buf, idx, slot_iota)
+
+    def flags(ln):
+        can = keep & (ln >= 2)
+        ox, oy = g(pos, jnp.maximum(ln - 2, 0)), g(val, jnp.maximum(ln - 2, 0))
+        ax, ay = g(pos, jnp.maximum(ln - 1, 0)), g(val, jnp.maximum(ln - 1, 0))
+        cr = (ax - ox) * (py - oy) - (ay - oy) * (px - ox)
+        return can & (cr >= 0 if upper else cr <= 0)
+
+    def body(st):
+        ln, f = st
+        ln = jnp.where(f, ln - 1, ln)
+        return ln, flags(ln)
+
+    ln, _ = jax.lax.while_loop(lambda st: jnp.any(st[1]), body,
+                               (ln, flags(ln)))
+    slot = jnp.where(keep, ln, 0)
+    pos_ref[...] = jnp.where(slot_iota == slot, px, pos)
+    val_ref[...] = jnp.where(slot_iota == slot, py, val)
+    return slot + 1
+
+
+def _chain_walk(pos_ref, val_ref, ln, c0, active, slope_of, slot_iota,
+                minimize: bool):
+    """Hinted tangent walk: slide the contact index while the slope improves.
+
+    Finds the same chain extremum as ``core.jax_pla._chain_extremum`` but
+    amortized O(1) via the carried contact hint instead of a masked
+    reduction over the whole chain.
+    """
+    pos, val = pos_ref[...], val_ref[...]
+
+    def g(buf, idx):
+        return _gather(buf, idx, slot_iota)
+
+    better = (lambda a, b: a <= b) if minimize else (lambda a, b: a >= b)
+    last = ln - 1
+    c = jnp.clip(c0, 0, last)
+    s_c = slope_of(g(pos, c), g(val, c))
+    cp = jnp.minimum(c + 1, last)
+    s_p = slope_of(g(pos, cp), g(val, cp))
+    cm = jnp.maximum(c - 1, 0)
+    s_m = slope_of(g(pos, cm), g(val, cm))
+    fwd = active & (cp != c) & better(s_p, s_c)
+    bwd = active & ~fwd & (cm != c) & better(s_m, s_c)
+    dirn = jnp.where(fwd, 1, jnp.where(bwd, -1, 0))
+
+    def body(st):
+        c, s_c, dirn = st
+        cn = jnp.clip(c + dirn, 0, last)
+        s_n = slope_of(g(pos, cn), g(val, cn))
+        ok = (dirn != 0) & (cn != c) & better(s_n, s_c)
+        return (jnp.where(ok, cn, c), jnp.where(ok, s_n, s_c),
+                jnp.where(ok, dirn, 0))
+
+    c, s_c, _ = jax.lax.while_loop(lambda st: jnp.any(st[2] != 0), body,
+                                   (c, s_c, dirn))
+    return c, s_c
 
 
 def _disjoint_kernel(y_ref, cin, brk_ref, a_ref, v_ref, cout,
-                     started, ring, run_start, runl, y0s, prev_y,
+                     started, run_start, runl, y0s, prev_y,
                      a_lo, v_lo, a_hi, v_hi,
+                     hl_len, hh_len, hl_c, hh_c,
+                     hl_pos, hl_val, hh_pos, hh_val,
                      *, eps: float, bt: int, t_real: int, max_run: int,
                      window: int):
     ti = pl.program_id(1)
@@ -73,9 +163,16 @@ def _disjoint_kernel(y_ref, cin, brk_ref, a_ref, v_ref, cout,
         v_lo[...] = cin[6:7, :]
         a_hi[...] = cin[7:8, :]
         v_hi[...] = cin[8:9, :]
-        ring[...] = cin[_HEAD_ROWS:_HEAD_ROWS + W, :]
+        hl_len[...] = cin[9:10, :].astype(jnp.int32)
+        hh_len[...] = cin[10:11, :].astype(jnp.int32)
+        hl_c[...] = cin[11:12, :].astype(jnp.int32)
+        hh_c[...] = cin[12:13, :].astype(jnp.int32)
+        hl_pos[...] = cin[_HEAD_ROWS:_HEAD_ROWS + W, :]
+        hl_val[...] = cin[_HEAD_ROWS + W:_HEAD_ROWS + 2 * W, :]
+        hh_pos[...] = cin[_HEAD_ROWS + 2 * W:_HEAD_ROWS + 3 * W, :]
+        hh_val[...] = cin[_HEAD_ROWS + 3 * W:_HEAD_ROWS + 4 * W, :]
 
-    slot_iota = jax.lax.broadcasted_iota(jnp.float32, (W, 1), 0)
+    slot_iota = jax.lax.broadcasted_iota(jnp.int32, (W, 1), 0)
 
     def step(j, _):
         t_loc = ti * bt + j
@@ -107,40 +204,31 @@ def _disjoint_kernel(y_ref, cin, brk_ref, a_ref, v_ref, cout,
         pl.store(a_ref, (pl.ds(j, 1), slice(None)), jnp.where(brk, a_out, 0.0))
         pl.store(v_ref, (pl.ds(j, 1), slice(None)), jnp.where(brk, v_out, 0.0))
 
-        # --- extreme-line retightening over the run window ----------------
-        # Local positions may be negative for points carried in from an
-        # earlier launch; everything below is difference-based, and the
-        # ``p_r >= rs`` mask alone delimits the run (runs never span more
-        # than W points, so carried slots are never stale).
-        tm1 = t - 1.0
-        p_r = tm1 - jnp.mod(tm1 - slot_iota, float(W))       # (W, 1)
-        in_run = p_r >= rs                                   # (W, BS)
-        dtw = t - p_r
-        dtw_safe = jnp.where(in_run, dtw, 1.0)
-        yw = ring[...]                                       # (W, BS)
-
+        # --- tangent retightening over the run's convex chains -----------
+        second = rl == 1
         need_hi = vmax > hi_i
-        slopes_hi = (hi_i - (yw - eps)) / dtw_safe
-        slopes_hi = jnp.where(in_run, slopes_hi, _BIG)
-        a_hi_new = jnp.min(slopes_hi, axis=0, keepdims=True)
+        act_hi = need_hi & ~second & ~brk & ~is_first
+        c_hi, a_hi_new = _chain_walk(
+            hl_pos, hl_val, hl_len[...], hl_c[...], act_hi,
+            lambda qx, qy: (hi_i - qy) / (t - qx), slot_iota, minimize=True)
         v_hi_new = hi_i - a_hi_new * rel                     # value at rs
-        a_hi_u = jnp.where(need_hi, a_hi_new, ah)
-        v_hi_u = jnp.where(need_hi, v_hi_new, vh)
+        a_hi_u = jnp.where(act_hi, a_hi_new, ah)
+        v_hi_u = jnp.where(act_hi, v_hi_new, vh)
 
         need_lo = vmin < lo_i
-        slopes_lo = (lo_i - (yw + eps)) / dtw_safe
-        slopes_lo = jnp.where(in_run, slopes_lo, -_BIG)
-        a_lo_new = jnp.max(slopes_lo, axis=0, keepdims=True)
+        act_lo = need_lo & ~second & ~brk & ~is_first
+        c_lo, a_lo_new = _chain_walk(
+            hh_pos, hh_val, hh_len[...], hh_c[...], act_lo,
+            lambda qx, qy: (lo_i - qy) / (t - qx), slot_iota, minimize=False)
         v_lo_new = lo_i - a_lo_new * rel
-        a_lo_u = jnp.where(need_lo, a_lo_new, al)
-        v_lo_u = jnp.where(need_lo, v_lo_new, vl)
+        a_lo_u = jnp.where(act_lo, a_lo_new, al)
+        v_lo_u = jnp.where(act_lo, v_lo_new, vl)
 
         # Second point of a run initializes the extreme lines directly.
         rel_s = jnp.maximum(rel, 1.0)
         a_hi_2 = (hi_i - (y0 - eps)) / rel_s
         a_lo_2 = (lo_i - (y0 + eps)) / rel_s
 
-        second = rl == 1
         a_hi_n = jnp.where(second, a_hi_2, a_hi_u)
         v_hi_n = jnp.where(second, y0 - eps, v_hi_u)
         a_lo_n = jnp.where(second, a_lo_2, a_lo_u)
@@ -157,7 +245,15 @@ def _disjoint_kernel(y_ref, cin, brk_ref, a_ref, v_ref, cout,
         a_hi[...] = jnp.where(restart, 0.0, a_hi_n)
         v_hi[...] = jnp.where(restart, 0.0, v_hi_n)
         started[...] = jnp.ones_like(started[...])
-        pl.store(ring, (pl.ds(jnp.mod(t_loc, W), 1), slice(None)), yt)
+        keep = ~restart
+        ln_l = _chain_pop(hl_pos, hl_val, hl_len[...], keep, t, lo_i,
+                          slot_iota, upper=True)
+        ln_h = _chain_pop(hh_pos, hh_val, hh_len[...], keep, t, hi_i,
+                          slot_iota, upper=False)
+        hl_len[...] = ln_l
+        hh_len[...] = ln_h
+        hl_c[...] = jnp.where(restart, 0, jnp.minimum(c_hi, ln_l - 1))
+        hh_c[...] = jnp.where(restart, 0, jnp.minimum(c_lo, ln_h - 1))
         return 0
 
     jax.lax.fori_loop(0, bt, step, 0)
@@ -173,7 +269,14 @@ def _disjoint_kernel(y_ref, cin, brk_ref, a_ref, v_ref, cout,
         cout[6:7, :] = v_lo[...]
         cout[7:8, :] = a_hi[...]
         cout[8:9, :] = v_hi[...]
-        cout[_HEAD_ROWS:_HEAD_ROWS + W, :] = ring[...]
+        cout[9:10, :] = hl_len[...].astype(jnp.float32)
+        cout[10:11, :] = hh_len[...].astype(jnp.float32)
+        cout[11:12, :] = hl_c[...].astype(jnp.float32)
+        cout[12:13, :] = hh_c[...].astype(jnp.float32)
+        cout[_HEAD_ROWS:_HEAD_ROWS + W, :] = hl_pos[...]
+        cout[_HEAD_ROWS + W:_HEAD_ROWS + 2 * W, :] = hl_val[...]
+        cout[_HEAD_ROWS + 2 * W:_HEAD_ROWS + 3 * W, :] = hh_pos[...]
+        cout[_HEAD_ROWS + 3 * W:_HEAD_ROWS + 4 * W, :] = hh_val[...]
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "t_real", "max_run",
@@ -188,15 +291,23 @@ def disjoint_pallas(y_t: jax.Array, *, eps: float, t_real: int,
     kernel = functools.partial(_disjoint_kernel, eps=eps, bt=block_t,
                                t_real=t_real, max_run=max_run, window=W)
     f32 = jnp.float32
-    scratch = [((1, block_s), jnp.int32),  # started
-               ((W, block_s), f32),        # ring
-               ((1, block_s), f32),        # run_start (local f32 t)
-               ((1, block_s), jnp.int32),  # run_len
-               ((1, block_s), f32),        # y0 (run start value)
-               ((1, block_s), f32),        # prev y
-               ((1, block_s), f32),        # a_lo
-               ((1, block_s), f32),        # v_lo
-               ((1, block_s), f32),        # a_hi
-               ((1, block_s), f32)]        # v_hi
+    i32 = jnp.int32
+    scratch = [((1, block_s), i32),  # started
+               ((1, block_s), f32),  # run_start (local f32 t)
+               ((1, block_s), i32),  # run_len
+               ((1, block_s), f32),  # y0 (run start value)
+               ((1, block_s), f32),  # prev y
+               ((1, block_s), f32),  # a_lo
+               ((1, block_s), f32),  # v_lo
+               ((1, block_s), f32),  # a_hi
+               ((1, block_s), f32),  # v_hi
+               ((1, block_s), i32),  # hl_len
+               ((1, block_s), i32),  # hh_len
+               ((1, block_s), i32),  # hl_c
+               ((1, block_s), i32),  # hh_c
+               ((W, block_s), f32),  # hl_pos
+               ((W, block_s), f32),  # hl_val
+               ((W, block_s), f32),  # hh_pos
+               ((W, block_s), f32)]  # hh_val
     return launch_segmenter(kernel, y_t, block_s=block_s, block_t=block_t,
                             scratch=scratch, carry=carry)

@@ -1,8 +1,12 @@
 """Pallas TPU kernel: batched best-fit (Linear) PLA segmentation (§3.5).
 
-The paper's hull-based validity check of the running least-squares line
-becomes an exact masked max-residual reduction over the run's VMEM ring
-window (runs are capped by the protocols, so the window is exact).
+The least-squares fit itself is incremental: Welford running sums
+(rows 2-6) update in O(1) per point, matching the accumulator carry of
+``core.jax_pla._linear_step``.  Only the *validity* check reduces over
+the run's VMEM ring window — one fused (W, BS) max-residual per point,
+already a single op in-kernel (the jnp engine instead revalidates via
+capacity-capped residual-extremum chains to cut XLA-CPU dispatch count;
+both are exact, since runs are capped so the window covers the run).
 
 Carry rows (linear_state_rows(W) = 9 + W, all f32; see the carry-state
 contract in kernels/common.py): 0 started, 1 run_start, 2 n, 3 mt, 4 my,

@@ -29,9 +29,9 @@ import jax.numpy as jnp
 
 import numpy as np
 
-from repro.core.jax_pla import (PLARecords, SegmentOutput, check_window,
-                                records_to_events, release_deferred,
-                                assemble_deferred_events)
+from repro.core.jax_pla import (PLARecords, SegmentOutput, _pow2_pieces,
+                                check_window, records_to_events,
+                                release_deferred, assemble_deferred_events)
 from .angle import angle_init_carry, angle_pallas, angle_shift_carry
 from .swing import swing_init_carry, swing_pallas, swing_shift_carry
 from .common import BLOCK_S, BLOCK_T, assemble_segments, pad_streams
@@ -249,7 +249,9 @@ class StreamingSegmenter:
     The class owns everything chunking needs around the raw kernel: it
     buffers incoming columns until a whole number of ``block_t`` time
     blocks is available (the kernel must not consume padding mid-stream),
-    launches with the packed carry state threaded in and out, renumbers
+    launches pow2-sized pieces with the packed carry state threaded in
+    and out (bounding the kernel trace set by log2 of the widest push
+    instead of one trace per odd chunk size), renumbers
     position-dependent carry rows between launches, and finally pads +
     force-breaks the remainder so the trailing run flushes through the
     regular event path.
@@ -394,17 +396,29 @@ class StreamingSegmenter:
         feed, rest = buf[:, :m], buf[:, m:]
         self._pend = [rest] if rest.shape[1] else []
         self._navail -= m
-        if self._deferred:
-            ev, pos, ea, ev_v, carry_out = self._launch(feed, t_real=m)
-            out = self._deferred_collect((ev, pos, ea, ev_v), m, m)
-            self._carry = self._shift(carry_out, m)
-            self._t += m
-            return out
-        ev_brk, ev_a, ev_b, carry_out = self._launch(feed, t_real=-1)
-        out = self._events_to_out(ev_brk, ev_a, ev_b, m)
-        self._carry = self._shift(carry_out, m)
-        self._t += m
-        return out
+        # Launch widths are pow2 multiples of block_t (descending pieces
+        # threading the carry, like jax_pla's chunked API), so the kernel
+        # trace set stays log-bounded however callers size their pushes.
+        outs = []
+        lo = 0
+        for nb in _pow2_pieces(m // self.block_t):
+            w = nb * self.block_t
+            piece = feed[:, lo:lo + w]
+            lo += w
+            if self._deferred:
+                ev, pos, ea, ev_v, carry_out = self._launch(piece, t_real=w)
+                outs.append(self._deferred_collect((ev, pos, ea, ev_v),
+                                                   w, w))
+            else:
+                ev_brk, ev_a, ev_b, carry_out = self._launch(piece,
+                                                             t_real=-1)
+                outs.append(self._events_to_out(ev_brk, ev_a, ev_b, w))
+            self._carry = self._shift(carry_out, w)
+            self._t += w
+        if len(outs) == 1:
+            return outs[0]
+        return SegmentOutput(*(jnp.concatenate(parts, axis=1)
+                               for parts in zip(*outs)))
 
     def finish(self) -> SegmentOutput:
         """Flush the trailing run; returns the final event columns."""

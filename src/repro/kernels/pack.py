@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: ragged wire-record assembly (device byte packing).
+
+The device wire path (:mod:`repro.core.wire_device`) renders every
+protocol record as a fixed-``K`` uint8 row of an ``(S, E, K)`` tensor and
+then needs the ragged concatenation ``buf[s] = rec[s, 0, :sz0] ++
+rec[s, 1, :sz1] ++ ...``.  The jnp fallback (``wire_device._assemble``)
+does this with a per-record scatter-max + running max + one big gather
+— fine on CPU/interpret, but on a real TPU a byte-granular gather across
+lanes is
+exactly what the VPU is worst at.  This kernel does the placement the
+TPU-native way instead: one grid step per stream, a ``fori_loop`` over
+record slots, and each record row *rotated* into lane position with
+``pltpu.roll`` (a dynamic lane rotate, one VPU op) and merged into the
+packed buffer rows with a masked select — no gathers, no scatters, no
+byte addressing.
+
+A record of ``K <= LANE`` bytes placed at byte offset ``off`` touches at
+most two ``(1, LANE)`` buffer rows (``off // LANE`` and the next); both
+merges are unconditional masked selects so the loop body stays a straight
+line.  Records wider than one lane row (``K > LANE`` — e.g. huge
+``singlestreamv`` burst caps) fall back to the jnp assembly, as does any
+non-TPU backend where interpret-mode ``fori_loop`` over events would be
+Python-speed: :func:`pack_records` picks the path, callers just call it.
+
+Offsets and sizes ride in SMEM (scalars steer the dynamic row stores);
+the record tensor and the packed buffer live in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat.pallas import interpret_mode, tpu_compiler_params
+
+__all__ = ["LANE", "pack_records", "pack_records_pallas"]
+
+LANE = 128  # TPU lane width: one packed buffer row
+
+
+def _pack_kernel(offs_ref, sz_ref, rec_ref, buf_ref):
+    """One stream: merge E rotated record rows into (MBR, LANE) u8."""
+    buf_ref[...] = jnp.zeros_like(buf_ref)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (1, LANE), 1)
+    E = rec_ref.shape[0]
+
+    def body(e, _):
+        off = offs_ref[e]
+        size = sz_ref[e]
+        lo = jax.lax.rem(off, LANE)
+        r0 = jax.lax.div(off, LANE)
+        row = pl.load(rec_ref, (pl.ds(e, 1), slice(None)))     # (1, LANE)
+        rolled = pltpu.roll(row, lo, 1)
+        # Byte j of the record sits at lane (lo + j) % LANE; row r0 keeps
+        # the unwrapped lanes, row r0 + 1 the wrap-around (mask empty when
+        # the record fits one row, and everything when size == 0).
+        m0 = (lanes >= lo) & (lanes < lo + size)
+        m1 = lanes < lo + size - LANE
+        cur0 = pl.load(buf_ref, (pl.ds(r0, 1), slice(None)))
+        pl.store(buf_ref, (pl.ds(r0, 1), slice(None)),
+                 jnp.where(m0, rolled, cur0))
+        cur1 = pl.load(buf_ref, (pl.ds(r0 + 1, 1), slice(None)))
+        pl.store(buf_ref, (pl.ds(r0 + 1, 1), slice(None)),
+                 jnp.where(m1, rolled, cur1))
+        return 0
+
+    jax.lax.fori_loop(0, E, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("MB", "interpret"))
+def pack_records_pallas(rec: jax.Array, sz: jax.Array, *, MB: int,
+                        interpret: bool = False):
+    """Pack ``(S, E, K)`` records (``K <= LANE``) into ``(S, MB)`` wire
+    buffers + per-stream byte counts via the Pallas kernel.
+
+    Bit-compatible with ``wire_device._assemble``: slot ``k`` of stream
+    ``s`` contributes its first ``sz[s, k]`` bytes at the running offset;
+    ``sz == 0`` slots are skipped; bytes past the stream's total are 0.
+    """
+    S, E, K = rec.shape
+    if K > LANE:
+        raise ValueError(f"record rows must fit one lane row "
+                         f"(K={K} > {LANE}); use the jnp assembly")
+    if K < LANE:
+        rec = jnp.pad(rec, ((0, 0), (0, 0), (0, LANE - K)))
+    sz = sz.astype(jnp.int32)
+    offs = jnp.cumsum(sz, axis=1) - sz
+    nbytes = offs[:, -1] + sz[:, -1]
+    mbr = MB // LANE + 1  # +1: spare row soaks up the wrap merge
+    buf = pl.pallas_call(
+        _pack_kernel,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((None, E), lambda s: (s, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((None, E), lambda s: (s, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((None, E, LANE), lambda s: (s, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, mbr, LANE), lambda s: (s, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, mbr, LANE), jnp.uint8),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(offs, sz, rec)
+    return buf.reshape(S, mbr * LANE)[:, :MB], nbytes
+
+
+def pack_records(rec: jax.Array, sz: jax.Array, *, MB: int):
+    """Ragged record assembly: Pallas on TPU, jnp everywhere else.
+
+    The two paths produce identical bytes; the jnp path also covers
+    records wider than a lane row (``K > LANE``).
+    """
+    from repro.core.wire_device import _assemble
+    if rec.shape[2] <= LANE and not interpret_mode():
+        return pack_records_pallas(rec, sz, MB=MB)
+    return _assemble(rec, sz, MB)

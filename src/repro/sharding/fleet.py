@@ -60,17 +60,18 @@ from repro.compat import sharding as cs
 from repro.core.evaluate import BATCHED_SEGMENTERS, METHOD_KNOT_KINDS
 from repro.core.metrics import BatchedPointMetrics
 from repro.core.protocol_engine import (ENGINE_PROTOCOLS,
-                                        ProtocolEmitter,
                                         ProtocolPointDescriptors,
                                         descriptors_point_metrics,
                                         encode_batch,
                                         metrics_from_descriptors,
                                         protocol_descriptors)
+from repro.core.wire_device import DeviceProtocolEmitter
 from repro.core.protocols import PROTOCOL_CAPS
 from repro.core.jax_pla import SegmentOutput
 
-__all__ = ["FLEET_AXIS", "FleetPointMetrics", "FleetStream", "fleet_mesh",
-           "fleet_shard", "fleet_point_metrics", "fleet_encode"]
+__all__ = ["FLEET_AXIS", "FleetPointMetrics", "FleetStream", "FleetWire",
+           "fleet_mesh", "fleet_shard", "fleet_point_metrics",
+           "fleet_encode", "fleet_wire"]
 
 FLEET_AXIS = "streams"
 
@@ -236,12 +237,273 @@ def fleet_point_metrics(y, eps, method: str, protocol: str, *,
 
 
 def fleet_encode(fm: FleetPointMetrics, y, *, t0: float = 0.0,
-                 dt: float = 1.0, burst_cap: int = 127) -> List:
-    """Wire-encode every stream of a fleet result (host, vectorized;
-    bit-identical to the legacy codecs — see
-    :func:`repro.core.protocol_engine.encode_batch`)."""
+                 dt: float = 1.0, burst_cap: int = 127,
+                 device: bool = False) -> List:
+    """Wire-encode every stream of a fleet result, bit-identical to the
+    legacy codecs.  ``device=True`` packs the bytes on device
+    (:func:`repro.core.wire_device.pack_batch_device`) and copies only
+    finished blobs to the host; the default is the vectorized host packer
+    (:func:`repro.core.protocol_engine.encode_batch`)."""
+    if device:
+        from repro.core.wire_device import pack_batch_device
+        return pack_batch_device(fm.seg, y, fm.protocol, fm.knot_kind,
+                                 t0=t0, dt=dt, burst_cap=burst_cap)
     return encode_batch(fm.seg, y, fm.protocol, fm.knot_kind, t0=t0, dt=dt,
                         burst_cap=burst_cap)
+
+
+# ---------------------------------------------------------------------------
+# Lean ingest: segment -> device wire pack, no descriptor materialization
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FleetWire:
+    """A fleet batch segmented and wire-packed entirely on device.
+
+    The production transmit path: no §4.2 metric surfaces, no
+    ``(S, T)`` descriptor materialization — just the segmentation and the
+    finished per-stream wire blobs (bit-identical to
+    :func:`~repro.core.protocol_engine.encode_batch`), with the per-shard
+    and ``psum``'d fleet byte totals computed on device.
+    """
+
+    method: str
+    protocol: str
+    knot_kind: str
+    n_devices: int
+    seg: SegmentOutput            # (S, T); device-sharded when sharded
+    blobs: List                   # per-stream bytes (pairs: twostreams)
+    nbytes: np.ndarray            # (S,) per-stream wire totals
+    shard_nbytes: np.ndarray      # (D,) per-shard totals, gather-free
+    fleet_nbytes: int             # psum over shards
+
+
+@functools.lru_cache(maxsize=None)
+def _fleet_segment(mesh: jax.sharding.Mesh, method: str, max_run: int):
+    """Segmentation-only shard_map launch (f32, identical to the batched
+    engine — the wire launches below run under x64 and must not perturb
+    the segmenter's arithmetic).  Also returns the shard's densest
+    break count (sizes the wire launches' static ``E`` bucket)."""
+    axis_names, _ = _mesh_axes(mesh)
+    segment = BATCHED_SEGMENTERS[method]
+
+    def body(y_blk, eps_blk):
+        seg = segment(y_blk, eps_blk, max_run=max_run)
+        brk = seg.breaks.at[:, -1].set(True)
+        nev = jnp.max(jnp.sum(brk.astype(jnp.int32), axis=1))
+        return seg, nev[None]
+
+    sharded = cs.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(FLEET_AXIS, None), P(FLEET_AXIS)),
+        out_specs=(SegmentOutput(*([P(FLEET_AXIS, None)] * 3)),
+                   P(FLEET_AXIS)),
+        axis_names=axis_names)
+    return jax.jit(sharded)
+
+
+@functools.lru_cache(maxsize=None)
+def _fleet_wire_stats(mesh: jax.sharding.Mesh, protocol: str,
+                      knot_kind: str, burst_cap: int, t0: float,
+                      dt: float, E: int):
+    """Bucket-sizing launch: per-shard (max stream bytes, max record
+    size) per sub-protocol — two scalars per shard, nothing gathered."""
+    from repro.core import wire_device as wd
+    axis_names, _ = _mesh_axes(mesh)
+    subs = wd._sub_protocols(protocol)
+
+    def body(brk, a, v, y_blk):
+        S = brk.shape[0]
+        brk = brk.at[:, -1].set(True)
+        state = wd.wire_init_state(S)
+        outs = []
+        for sub in subs:
+            _, _, nbmax, szmax, _ = wd._wire_plan(
+                brk, a, v, y_blk, jnp.int64(0), state, jnp.int64(0),
+                protocol=sub, knot_kind=knot_kind, close=True, t0=t0,
+                dt=dt, burst_cap=burst_cap, E=E)
+            outs.append(jnp.stack([nbmax.astype(jnp.int64),
+                                   szmax.astype(jnp.int64)])[None])
+        return tuple(outs)
+
+    sharded = cs.shard_map(
+        body, mesh=mesh, in_specs=(P(FLEET_AXIS, None),) * 4,
+        out_specs=tuple(P(FLEET_AXIS) for _ in subs),
+        axis_names=axis_names)
+    return jax.jit(sharded)
+
+
+@functools.lru_cache(maxsize=None)
+def _fleet_wire_pack(mesh: jax.sharding.Mesh, protocol: str, knot_kind: str,
+                     burst_cap: int, t0: float, dt: float, E: int,
+                     buckets):
+    """Pack launch: every shard plans, renders and assembles its streams'
+    wire bytes on device (``wire_device._wire_plan`` + ``_wire_emit``);
+    the only cross-device traffic is the scalar ``psum`` of the byte
+    totals."""
+    from repro.core import wire_device as wd
+    axis_names, _ = _mesh_axes(mesh)
+    subs = wd._sub_protocols(protocol)
+
+    def body(brk, a, v, y_blk):
+        S = brk.shape[0]
+        brk = brk.at[:, -1].set(True)
+        state = wd.wire_init_state(S)
+        outs = []
+        shard_nb = jnp.zeros((), jnp.int64)
+        for sub, (K, MB) in zip(subs, buckets):
+            plan, sz, _, _, _ = wd._wire_plan(
+                brk, a, v, y_blk, jnp.int64(0), state, jnp.int64(0),
+                protocol=sub, knot_kind=knot_kind, close=True, t0=t0,
+                dt=dt, burst_cap=burst_cap, E=E)
+            buf, nb = wd._wire_emit(
+                plan, sz, y_blk, jnp.int64(0), protocol=sub,
+                knot_kind=knot_kind, close=True, t0=t0, dt=dt,
+                burst_cap=burst_cap, K=K, MB=MB)
+            outs.extend([buf, nb.astype(jnp.int64)])
+            shard_nb = shard_nb + jnp.sum(nb).astype(jnp.int64)
+        fleet_nb = jax.lax.psum(shard_nb, FLEET_AXIS)
+        return tuple(outs) + (shard_nb[None], fleet_nb)
+
+    row = P(FLEET_AXIS)
+    out_specs = tuple(spec for _ in subs
+                      for spec in (P(FLEET_AXIS, None), row)) \
+        + (P(FLEET_AXIS), P())
+    sharded = cs.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(FLEET_AXIS, None),) * 4,
+        out_specs=out_specs, axis_names=axis_names)
+    return jax.jit(sharded)
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_segment(method: str, max_run: int):
+    """One-launch segment + forced trailing break + densest break count
+    (f32; the count sizes the wire launches' static ``E`` bucket)."""
+    segment = BATCHED_SEGMENTERS[method]
+
+    @jax.jit
+    def run(ys, eps):
+        seg = segment(ys, eps, max_run=max_run)
+        brk = seg.breaks.at[:, -1].set(True)
+        return seg, brk, jnp.max(jnp.sum(brk, axis=1, dtype=jnp.int32))
+    return run
+
+
+def _fused_wire_launches(seg, brk, E, ys, subs, knot_kind: str,
+                         burst_cap: int, t0: float, dt: float):
+    """Full-batch plan + emit (no shard_map) for every sub-protocol;
+    returns ``[(buf, nbytes), ...]`` as host arrays."""
+    from jax.experimental import enable_x64
+    from repro.core import wire_device as wd
+    with enable_x64():
+        state = wd.wire_init_state(brk.shape[0])
+        outs = []
+        for sub in subs:
+            plan, sz, nbmax, szmax, _ = wd._wire_plan(
+                brk, seg.a, seg.v, ys, jnp.int64(0), state, jnp.int64(0),
+                protocol=sub, knot_kind=knot_kind, close=True, t0=t0,
+                dt=dt, burst_cap=burst_cap, E=E)
+            buf, nbytes = wd._wire_emit(
+                plan, sz, ys, jnp.int64(0), protocol=sub,
+                knot_kind=knot_kind, close=True, t0=t0, dt=dt,
+                burst_cap=burst_cap, K=wd._bucket(int(szmax), 8),
+                MB=wd._bucket(int(nbmax), 8))
+            outs.append((np.asarray(buf), np.asarray(nbytes, np.int64)))
+    return outs
+
+
+def fleet_wire(y, eps, method: str, protocol: str, *,
+               mesh: Optional[jax.sharding.Mesh] = None,
+               knot_kind: Optional[str] = None,
+               max_run: Optional[int] = None, burst_cap: int = 127,
+               t0: float = 0.0, dt: float = 1.0,
+               sharded: Optional[bool] = None) -> FleetWire:
+    """Segment + wire-pack a fleet batch entirely on device.
+
+    The lean end-to-end ingest path: one segmentation launch (f32, same
+    breaks as :func:`fleet_point_metrics`), one bucket-sizing launch
+    (two scalars per shard back to the host), one pack launch — the
+    bytes leave the devices only as finished ``(buf, nbytes)`` blobs.
+    Output bytes are bit-identical per stream to
+    :func:`~repro.core.protocol_engine.encode_batch` on the one-shot
+    segmentation.
+
+    ``sharded`` picks the launch granularity.  The default (``None``)
+    shards over the mesh only when it spans real accelerators: on an
+    all-CPU mesh (e.g. ``--xla_force_host_platform_device_count`` fake
+    devices) every "device" is the same host CPU, shard_map partitions
+    execute *serially*, and splitting the batch only multiplies launch
+    overhead — there the identical array program runs full-batch
+    instead (``sharded=False``), still reporting per-shard byte totals.
+    """
+    from repro.core import wire_device as wd
+    if protocol not in ENGINE_PROTOCOLS:
+        raise ValueError(f"unknown protocol {protocol!r}; "
+                         f"have {sorted(ENGINE_PROTOCOLS)}")
+    if method not in BATCHED_SEGMENTERS:
+        raise ValueError(f"no batched segmenter for {method!r}; "
+                         f"have {sorted(BATCHED_SEGMENTERS)}")
+    mesh = mesh if mesh is not None else fleet_mesh()
+    _, d_count = _mesh_axes(mesh)
+    y = np.asarray(y, np.float32)
+    S, T = y.shape
+    _check_shards(S, d_count)
+    knot_kind = knot_kind or METHOD_KNOT_KINDS.get(method, "disjoint")
+    cap = PROTOCOL_CAPS[protocol]
+    max_run = max_run or cap or 256
+    if cap is not None and max_run > cap:
+        raise ValueError(f"max_run={max_run} exceeds the {protocol!r} "
+                         f"counter cap ({cap})")
+    eps_arr = jnp.broadcast_to(jnp.asarray(eps, jnp.float32), (S,))
+    subs = wd._sub_protocols(protocol)
+    if sharded is None:
+        sharded = any(d.platform != "cpu" for d in mesh.devices.flat)
+
+    if not sharded:
+        ys = jnp.asarray(y)
+        seg, brk, nev = _fused_segment(method, int(max_run))(ys, eps_arr)
+        per = _fused_wire_launches(seg, brk, wd._bucket(int(nev)), ys,
+                                   subs, knot_kind, int(burst_cap),
+                                   float(t0), float(dt))
+        per_sub = [wd._slice_bytes(buf, nb) for buf, nb in per]
+        nbytes = sum(nb for _, nb in per)
+        shard_nbytes = nbytes.reshape(d_count, S // d_count).sum(axis=1)
+        blobs = (list(zip(*per_sub)) if protocol == "twostreams"
+                 else per_sub[0])
+        return FleetWire(
+            method=method, protocol=protocol, knot_kind=knot_kind,
+            n_devices=d_count, seg=seg, blobs=blobs, nbytes=nbytes,
+            shard_nbytes=shard_nbytes,
+            fleet_nbytes=int(shard_nbytes.sum()))
+
+    from jax.experimental import enable_x64
+    with cs.use_mesh(mesh):
+        ys = fleet_shard(y, mesh)
+        seg, nev = _fleet_segment(mesh, method, int(max_run))(ys, eps_arr)
+        E = wd._bucket(int(np.max(np.asarray(nev))))
+        with enable_x64():
+            pre = _fleet_wire_stats(
+                mesh, protocol, knot_kind, int(burst_cap), float(t0),
+                float(dt), E)(seg.breaks, seg.a, seg.v, ys)
+            buckets = tuple(
+                (wd._bucket(int(np.max(p[:, 1])), 8),
+                 wd._bucket(int(np.max(p[:, 0])), 8))
+                for p in map(np.asarray, pre))
+            outs = _fleet_wire_pack(
+                mesh, protocol, knot_kind, int(burst_cap), float(t0),
+                float(dt), E, buckets)(seg.breaks, seg.a, seg.v, ys)
+    per_sub = [wd._slice_bytes(np.asarray(outs[2 * i]),
+                               np.asarray(outs[2 * i + 1]))
+               for i in range(len(subs))]
+    blobs = list(zip(*per_sub)) if protocol == "twostreams" else per_sub[0]
+    nbytes = sum(np.asarray(outs[2 * i + 1], np.int64)
+                 for i in range(len(subs)))
+    return FleetWire(
+        method=method, protocol=protocol, knot_kind=knot_kind,
+        n_devices=d_count, seg=seg, blobs=blobs, nbytes=nbytes,
+        shard_nbytes=np.asarray(outs[-2]),
+        fleet_nbytes=int(outs[-1]))
 
 
 # ---------------------------------------------------------------------------
@@ -254,8 +516,11 @@ class FleetStream:
     The stream fleet is partitioned row-wise into one shard per device;
     each shard owns a :class:`~repro.kernels.ops.StreamingSegmenter`
     (kernel carry state pinned to that device via ``jax.device_put`` of
-    its chunks) and a :class:`~repro.core.protocol_engine.ProtocolEmitter`
-    (the fused wire packer).  ``push`` fans the chunk out shard-by-shard
+    its chunks) and a
+    :class:`~repro.core.wire_device.DeviceProtocolEmitter` (the
+    device-resident wire packer: value ring, codec state and byte
+    assembly all stay on device, so pushes never bounce through host
+    numpy).  ``push`` fans the chunk out shard-by-shard
     and returns the newly wire-ready bytes per stream — for the deferred
     methods (continuous/mixed) a shard's emission lags its released
     columns, exactly like the single-device engine.  Concatenating all
@@ -296,9 +561,10 @@ class FleetStream:
                                          max_run=max_run, window=window,
                                          **segmenter_kw)
                       for _ in range(d)]
-        self._ems = [ProtocolEmitter(protocol, self._rows,
-                                     knot_kind=self.knot_kind, t0=t0,
-                                     dt=dt, burst_cap=burst_cap)
+        self._ems = [DeviceProtocolEmitter(protocol, self._rows,
+                                           knot_kind=self.knot_kind, t0=t0,
+                                           dt=dt, burst_cap=burst_cap,
+                                           max_run=max_run)
                      for _ in range(d)]
         self.shard_bytes = np.zeros(d, np.int64)
         self.pushed = 0
@@ -333,11 +599,13 @@ class FleetStream:
         for d, seg in enumerate(self._segs):
             rows = y[d * self._rows:(d + 1) * self._rows]
             shard = jax.device_put(jnp.asarray(rows), self.devices[d])
-            shard_events.append((rows, seg.push(shard)))
+            shard_events.append((shard, seg.push(shard)))
         out: List = []
-        for d, (em, (rows, events)) in enumerate(zip(self._ems,
-                                                     shard_events)):
-            blobs = em.step_chunk(events, np.asarray(rows, np.float64))
+        for d, (em, (shard, events)) in enumerate(zip(self._ems,
+                                                      shard_events)):
+            # The device emitter keeps the value ring + codec state on
+            # device: the chunk never bounces back through host numpy.
+            blobs = em.step_chunk(events, shard)
             self._account(d, blobs)
             out.extend(blobs)
         self.pushed += y.shape[1]

@@ -1,0 +1,336 @@
+"""Device wire path: bit-identity vs the host codecs + hull-carry pins.
+
+Four walls around PR 8's perf work, none of which may move:
+
+- :func:`repro.core.wire_device.pack_batch_device` must be byte-for-byte
+  equal to the host reference codec :func:`encode_batch` across all four
+  wire protocols x all knot kinds, on dense, deferred, and adversarial
+  segmentations, including non-default ``t0``/``dt``/``burst_cap``;
+- the chunked :class:`DeviceProtocolEmitter` must concatenate to the same
+  wire under one-shot / even / odd splits, synthetic worst-case
+  segmentations, and value feeds that run ahead of the event feed;
+- the Pallas pack kernel (interpret mode off-TPU) must equal the jnp
+  ``_assemble`` fallback on record tables with interior zero-size slots;
+- the amortized hull / least-squares carries must reproduce the windowed
+  references' break positions bit-for-bit under arbitrary chunk splits
+  (hypothesis sweep + deterministic fixed-draw twin, per house style).
+"""
+
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # fixed-draw twins below still run
+    HAVE_HYPOTHESIS = False
+
+from repro.core import jax_pla
+from repro.core.jax_pla import SegmentOutput, flush, init_state, step_chunk
+from repro.core.protocol_engine import encode_batch
+from repro.core.wire_device import (DeviceProtocolEmitter, _assemble,
+                                    pack_batch_device)
+from repro.kernels.pack import pack_records_pallas
+
+
+def _make(seed, S, T):
+    """Half smooth / half noisy streams => varied segment lengths."""
+    rng = np.random.default_rng(seed)
+    y = np.cumsum(rng.normal(size=(S, T)), axis=1).astype(np.float32)
+    y[: S // 2] = np.linspace(0, 50, T)[None, :] + 0.01 * y[: S // 2]
+    return y
+
+
+def _np_seg(seg):
+    return SegmentOutput(np.asarray(seg.breaks), np.asarray(seg.a),
+                         np.asarray(seg.v))
+
+
+def _assert_wire_equal(ref, got, label):
+    assert len(ref) == len(got), label
+    for s, (r, g) in enumerate(zip(ref, got)):
+        assert r == g, f"{label}: stream {s} wire bytes differ"
+
+
+# ---------------------------------------------------------------------------
+# Offline batch packer vs host reference codec
+# ---------------------------------------------------------------------------
+
+S, T = 16, 512
+
+
+@functools.lru_cache(maxsize=None)
+def _case(max_run=256):
+    y = _make(0, S, T)
+    sg = jax_pla.angle_segment(jnp.asarray(y), eps=1.0, max_run=max_run)
+    return y, _np_seg(sg)
+
+
+# (protocol, kind, t0, dt, burst_cap) — implicit carries every knot kind;
+# the explicit-timestamp protocols are disjoint-kind by construction.
+OFFLINE_CASES = [
+    ("implicit", "joint", 0.0, 1.0, 127),
+    ("implicit", "disjoint", 0.0, 1.0, 127),
+    ("implicit", "continuous", 0.0, 1.0, 127),
+    ("implicit", "mixed", 0.0, 1.0, 127),
+    ("twostreams", "disjoint", 0.0, 1.0, 127),
+    ("singlestream", "disjoint", 0.0, 1.0, 127),
+    ("singlestreamv", "disjoint", 0.0, 1.0, 127),
+    ("singlestream", "disjoint", 5.0, 0.25, 127),
+    ("singlestreamv", "disjoint", -3.0, 2.0, 5),
+    ("implicit", "mixed", 1.5, 0.5, 127),
+]
+
+
+@pytest.mark.parametrize("protocol,kind,t0,dt,cap", OFFLINE_CASES)
+def test_pack_batch_device_matches_encode_batch(protocol, kind, t0, dt,
+                                                cap):
+    # singlestreamv burst headers count <=127 knots: cap the run length.
+    y, sg = _case(120) if protocol == "singlestreamv" else _case()
+    ref = encode_batch(sg, y, protocol, kind, t0=t0, dt=dt, burst_cap=cap)
+    got = pack_batch_device(sg, y, protocol, kind, t0=t0, dt=dt,
+                            burst_cap=cap)
+    _assert_wire_equal(ref, got, f"{protocol}/{kind}/t0={t0}")
+
+
+@pytest.mark.parametrize("protocol",
+                         ["implicit", "singlestream", "singlestreamv"])
+def test_pack_batch_device_dense_events(protocol):
+    # Dense worst case: every point a singleton record (the fleet bench's
+    # packer configuration), larger batch than the mixed case above.
+    y = np.random.default_rng(1).normal(0, 50, (64, 1024)) \
+        .astype(np.float32)
+    sg = _np_seg(jax_pla.disjoint_segment(jnp.asarray(y), 1e-6,
+                                          max_run=127))
+    ref = encode_batch(sg, y, protocol, "disjoint")
+    got = pack_batch_device(sg, y, protocol, "disjoint")
+    _assert_wire_equal(ref, got, f"dense/{protocol}")
+
+
+@pytest.mark.parametrize("method,kind", [("continuous", "continuous"),
+                                         ("mixed", "mixed")])
+def test_pack_batch_device_deferred_segmentations(method, kind):
+    # Deferred-method segmentations (data-dependent knot placement) through
+    # the matching implicit knot kind.
+    y = _make(2, 64, 384)
+    seg_fn = getattr(jax_pla, f"{method}_segment")
+    sg = _np_seg(seg_fn(jnp.asarray(y), 0.8, max_run=96))
+    ref = encode_batch(sg, y, "implicit", kind)
+    got = pack_batch_device(sg, y, "implicit", kind)
+    _assert_wire_equal(ref, got, f"deferred/{method}")
+
+
+# ---------------------------------------------------------------------------
+# Chunked device emitter vs one-shot host reference
+# ---------------------------------------------------------------------------
+
+def _synth(pattern, S_, T_, seed=9):
+    """Adversarial synthetic segmentations."""
+    rng = np.random.default_rng(seed)
+    brk = np.zeros((S_, T_), bool)
+    if pattern == "allshort":      # every 2nd point a break
+        brk[:, 1::2] = True
+    elif pattern == "alternate":   # stream-varied periods
+        for s in range(S_):
+            brk[s, (s % 7 + 2)::(s % 7 + 2)] = True
+    # "onelong": single segment per stream (just the forced last break)
+    brk[:, -1] = True
+    a = rng.normal(size=(S_, T_)).astype(np.float32)
+    v = rng.normal(size=(S_, T_)).astype(np.float32)
+    return SegmentOutput(brk, a, v)
+
+
+def _run_emitter(sg, y, protocol, kind, splits, cap=127, lag=0):
+    S_, T_ = y.shape
+    em = DeviceProtocolEmitter(protocol, S_, knot_kind=kind,
+                               burst_cap=cap, max_run=256)
+    acc = [(b"", b"")] * S_ if protocol == "twostreams" else [b""] * S_
+
+    def add(outs):
+        nonlocal acc
+        if protocol == "twostreams":
+            acc = [(a0 + o0, a1 + o1) for (a0, a1), (o0, o1)
+                   in zip(acc, outs)]
+        else:
+            acc = [a + o for a, o in zip(acc, outs)]
+
+    lo = pend_y = 0
+    for hi in list(splits) + [T_]:
+        if hi <= lo:
+            continue
+        ev = SegmentOutput(sg.breaks[:, lo:hi], sg.a[:, lo:hi],
+                           sg.v[:, lo:hi])
+        yhi = min(T_, hi + lag)   # values may run ahead of events
+        add(em.step_chunk(ev, y[:, pend_y:yhi]))
+        pend_y, lo = yhi, hi
+    add(em.flush())
+    return acc
+
+
+def _cmp_emitter(sg, y, protocol, kind, splits, cap=127, lag=0, tag=""):
+    ref = encode_batch(sg, y, protocol, kind, burst_cap=cap)
+    got = _run_emitter(sg, y, protocol, kind, splits, cap=cap, lag=lag)
+    _assert_wire_equal(ref, got, f"{protocol}/{kind}{tag}")
+
+
+ES, ET = 12, 384
+SPLITS = {"one": [], "even": list(range(64, ET, 64)),
+          "odd": [1, 2, 5, 13, 100, 101, 250, 383]}
+
+
+@functools.lru_cache(maxsize=None)
+def _emit_case(max_run=256):
+    y = _make(1, ES, ET)
+    sg = jax_pla.angle_segment(jnp.asarray(y), eps=1.0, max_run=max_run)
+    return y, _np_seg(sg)
+
+
+@pytest.mark.parametrize("split", sorted(SPLITS))
+@pytest.mark.parametrize("protocol,kind",
+                         [("implicit", "joint"), ("implicit", "mixed"),
+                          ("twostreams", "disjoint"),
+                          ("singlestream", "disjoint")])
+def test_device_emitter_chunked(protocol, kind, split):
+    y, sg = _emit_case()
+    _cmp_emitter(sg, y, protocol, kind, SPLITS[split], tag=f":{split}")
+
+
+@pytest.mark.parametrize("split", sorted(SPLITS))
+@pytest.mark.parametrize("cap", [127, 5])
+def test_device_emitter_chunked_singlestreamv(cap, split):
+    y, sg = _emit_case(120)
+    _cmp_emitter(sg, y, "singlestreamv", "disjoint", SPLITS[split],
+                 cap=cap, tag=f":{split}/cap{cap}")
+
+
+@pytest.mark.parametrize("pattern", ["allshort", "alternate", "onelong"])
+def test_device_emitter_adversarial_segmentations(pattern):
+    y = _make(1, ES, ET)
+    sg = _synth(pattern, ES, ET)
+    sp = [7, 130]
+    _cmp_emitter(sg, y, "implicit", "mixed", sp, tag=f":{pattern}")
+    if pattern == "onelong":
+        # a single ET-point segment exceeds the explicit protocols'
+        # run-length counters — implicit kinds only
+        _cmp_emitter(sg, y, "implicit", "joint", sp, tag=f":{pattern}")
+        return
+    _cmp_emitter(sg, y, "singlestream", "disjoint", sp, tag=f":{pattern}")
+    _cmp_emitter(sg, y, "twostreams", "disjoint", sp, tag=f":{pattern}")
+    _cmp_emitter(sg, y, "singlestreamv", "disjoint", sp, cap=5,
+                 tag=f":{pattern}/cap5")
+
+
+def test_device_emitter_values_ahead_of_events():
+    y, sg = _emit_case()
+    _cmp_emitter(sg, y, "singlestream", "disjoint", [50, 200], lag=30,
+                 tag=":lag")
+    yv, sgv = _emit_case(120)
+    _cmp_emitter(sgv, yv, "singlestreamv", "disjoint", [50, 200], lag=30,
+                 tag=":lag")
+
+
+# ---------------------------------------------------------------------------
+# Pallas pack kernel (interpret mode) vs jnp _assemble fallback
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S_,E,K,MB", [(4, 8, 16, 64), (3, 5, 24, 128),
+                                       (2, 4, 128, 256), (5, 7, 17, 256)])
+def test_pack_kernel_matches_assemble(S_, E, K, MB):
+    rng = np.random.default_rng(0)
+    rec = rng.integers(1, 255, (S_, E, K)).astype(np.uint8)
+    # interior zero-size slots are legal (breaks that emit nothing)
+    sz = rng.integers(0, K + 1, (S_, E)).astype(np.int32)
+    for s in range(S_):
+        while sz[s].sum() > MB:
+            nz = np.flatnonzero(sz[s])
+            sz[s, rng.choice(nz)] = 0
+    ref, nb_ref = _assemble(jnp.asarray(rec), jnp.asarray(sz), MB)
+    got, nb = pack_records_pallas(jnp.asarray(rec), jnp.asarray(sz),
+                                  MB=MB, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+    np.testing.assert_array_equal(np.asarray(nb_ref), np.asarray(nb))
+
+
+# ---------------------------------------------------------------------------
+# Amortized hull / LSQ carries vs the windowed references
+# ---------------------------------------------------------------------------
+
+WINDOWED_REFS = {"disjoint": jax_pla.disjoint_segment_windowed,
+                 "linear": jax_pla.linear_segment_windowed}
+HULL_EPS, HULL_RUN = 0.8, 24
+
+# (T, splits, seed) — chunk width 1, non-divisor widths, single-chunk,
+# final partial chunks (mirrors tests/test_streaming_property.py).
+FIXED_SPLITS = (
+    (105, (1, 31, 32, 40, 1), 0),
+    (97, (50, 47), 1),
+    (64, (64,), 2),
+    (41, (3, 7, 1, 13, 17), 3),
+    (9, tuple([1] * 9), 4),
+)
+
+
+def check_hull_carry_matches_windowed(method, T_, splits, seed):
+    """Chunked amortized-carry breaks == windowed-reference breaks."""
+    rng = np.random.default_rng(seed)
+    y = jnp.asarray(np.cumsum(rng.normal(0, 0.7, (8, T_)), axis=1),
+                    jnp.float32)
+    ref = WINDOWED_REFS[method](y, HULL_EPS, max_run=HULL_RUN)
+    state = init_state(method, 8, HULL_EPS, max_run=HULL_RUN)
+    outs, pos = [], 0
+    for w in splits:
+        state, out = step_chunk(state, y[:, pos:pos + w])
+        outs.append(out)
+        pos += w
+    state, out = flush(state)
+    outs.append(out)
+    brk = np.concatenate([np.asarray(o.breaks) for o in outs], axis=1)
+    label = f"{method}/T={T_}/splits={splits}"
+    assert brk.shape == np.asarray(ref.breaks).shape, label
+    np.testing.assert_array_equal(brk, np.asarray(ref.breaks),
+                                  err_msg=label)
+
+
+@pytest.mark.parametrize("method", sorted(WINDOWED_REFS))
+def test_hull_offline_matches_windowed(method):
+    # The one-shot amortized segmenters agree with the windowed references
+    # on the full output (breaks, slopes, values), not just positions.
+    rng = np.random.default_rng(3)
+    y = jnp.asarray(np.cumsum(rng.normal(0, 0.7, (32, 600)), axis=1),
+                    jnp.float32)
+    fast = {"disjoint": jax_pla.disjoint_segment,
+            "linear": jax_pla.linear_segment}[method](y, HULL_EPS,
+                                                      max_run=64)
+    ref = WINDOWED_REFS[method](y, HULL_EPS, max_run=64)
+    np.testing.assert_array_equal(np.asarray(fast.breaks),
+                                  np.asarray(ref.breaks))
+    np.testing.assert_array_equal(np.asarray(fast.a), np.asarray(ref.a))
+    np.testing.assert_array_equal(np.asarray(fast.v), np.asarray(ref.v))
+
+
+@pytest.mark.parametrize("method", sorted(WINDOWED_REFS))
+def test_fixed_hull_carry_matches_windowed(method):
+    for T_, splits, seed in FIXED_SPLITS:
+        check_hull_carry_matches_windowed(method, T_, splits, seed)
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def _splits_strategy(draw, t_min=2, t_max=140):
+        T_ = draw(st.integers(t_min, t_max))
+        widths, left = [], T_
+        while left:
+            w = draw(st.integers(1, left))
+            widths.append(w)
+            left -= w
+        return T_, tuple(widths)
+
+    @settings(max_examples=8, deadline=None)
+    @given(data=st.data(), method=st.sampled_from(sorted(WINDOWED_REFS)),
+           seed=st.integers(0, 2**16))
+    def test_property_hull_carry_matches_windowed(data, method, seed):
+        T_, splits = data.draw(_splits_strategy())
+        check_hull_carry_matches_windowed(method, T_, splits, seed)

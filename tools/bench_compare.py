@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""Benchmark regression gate: fail on >25% throughput drops.
+
+Compares freshly generated ``BENCH_*.json`` artifacts (working tree)
+against the committed baselines (``git show <ref>:<file>``) over every
+*shared* throughput leaf — any numeric key named ``points_per_s`` or
+``bytes_per_s``, wherever it sits in the report tree.  Paths present in
+only one side (new metrics, shrunk smoke sweeps) are ignored, so the
+gate survives report-schema growth.
+
+Two modes:
+
+- ``relative`` (default): normalize by the **median** new/baseline ratio
+  across all shared metrics of a file before applying the threshold.  A
+  uniform machine-speed difference (CI runner vs the box that committed
+  the baselines, smoke-sized vs full-sized sweeps) shifts every ratio
+  equally and cancels; a *specific* regression shows up as an outlier
+  more than ``--threshold`` below the median and fails the build.
+- ``absolute``: plain ``new < baseline * (1 - threshold)`` — for
+  same-machine, same-config comparisons (e.g. local perf work).
+
+Run from anywhere: ``python tools/bench_compare.py``.  CI runs it right
+after the benchmark smoke step, against the ``HEAD`` baselines.  Exits
+non-zero if any shared metric regresses past the threshold.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import subprocess
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+ARTIFACTS = ("BENCH_streaming.json", "BENCH_protocols.json",
+             "BENCH_paper.json", "BENCH_fleet.json")
+RATE_KEYS = ("points_per_s", "bytes_per_s")
+
+
+def _rate_leaves(node, path=()):
+    """Yield (path, value) for every throughput leaf in a report tree."""
+    if isinstance(node, dict):
+        for k, v in node.items():
+            yield from _rate_leaves(v, path + (k,))
+    elif isinstance(node, (int, float)) and path and path[-1] in RATE_KEYS:
+        yield path, float(node)
+
+
+def _baseline(name: str, ref: str):
+    proc = subprocess.run(["git", "show", f"{ref}:{name}"], cwd=REPO,
+                          capture_output=True)
+    if proc.returncode != 0:
+        return None
+    return json.loads(proc.stdout)
+
+
+def compare_file(base: dict, new: dict, threshold: float, mode: str):
+    """Returns (failures, n_shared, median_ratio)."""
+    b = dict(_rate_leaves(base))
+    n = dict(_rate_leaves(new))
+    ratios = {p: n[p] / b[p] for p in set(b) & set(n) if b[p] > 0}
+    if not ratios:
+        return [], 0, 1.0
+    norm = statistics.median(ratios.values()) if mode == "relative" else 1.0
+    floor = norm * (1.0 - threshold)
+    failures = [(p, ratios[p], floor)
+                for p in sorted(ratios) if ratios[p] < floor]
+    return failures, len(ratios), norm
+
+
+def main(argv) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*", default=None,
+                    help="artifacts to check (default: every committed "
+                         "BENCH_*.json present in the working tree)")
+    ap.add_argument("--baseline-ref", default="HEAD",
+                    help="git ref holding the baseline JSONs (default "
+                         "HEAD)")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated fractional drop (default 0.25)")
+    ap.add_argument("--mode", choices=("relative", "absolute"),
+                    default="relative")
+    args = ap.parse_args(argv[1:])
+
+    files = args.files or [f for f in ARTIFACTS
+                           if os.path.exists(os.path.join(REPO, f))]
+    failed = False
+    for name in files:
+        new_path = os.path.join(REPO, name)
+        if not os.path.exists(new_path):
+            print(f"bench-compare: {name}: missing from working tree",
+                  file=sys.stderr)
+            failed = True
+            continue
+        base = _baseline(name, args.baseline_ref)
+        if base is None:
+            print(f"bench-compare: {name}: no baseline at "
+                  f"{args.baseline_ref} — skipped (new artifact)")
+            continue
+        with open(new_path, encoding="utf-8") as f:
+            new = json.load(f)
+        fails, n_shared, norm = compare_file(base, new, args.threshold,
+                                             args.mode)
+        tag = (f"median ratio x{norm:.2f}" if args.mode == "relative"
+               else "absolute")
+        if fails:
+            failed = True
+            print(f"bench-compare: {name}: {len(fails)}/{n_shared} "
+                  f"metrics regressed >{args.threshold:.0%} ({tag}):",
+                  file=sys.stderr)
+            for path, ratio, floor in fails:
+                print(f"  {'.'.join(path)}: x{ratio:.2f} "
+                      f"(floor x{floor:.2f})", file=sys.stderr)
+        else:
+            print(f"bench-compare: {name}: OK — {n_shared} metrics "
+                  f"within {args.threshold:.0%} ({tag})")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
