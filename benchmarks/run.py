@@ -10,7 +10,7 @@ import time
 def main() -> None:
     t0 = time.time()
     from . import (figures, fleet_bench, framework_bench, protocol_bench,
-                   streaming_bench)
+                   serve_bench, streaming_bench)
 
     csv_rows = []
 
@@ -39,6 +39,7 @@ def main() -> None:
     # 8-fake-device XLA flag can't apply — the scaling sweep degrades to
     # the ambient device count; run it standalone for the full curve.
     csv_rows.extend(fleet_bench.fleet_bench())          # -> BENCH_fleet.json
+    csv_rows.extend(serve_bench.serve_bench())          # -> BENCH_serve.json
 
     print("\nname,us_per_call,derived")
     for name, us, derived in csv_rows:

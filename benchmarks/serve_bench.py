@@ -1,0 +1,166 @@
+"""Serving front-end benchmark: sustained churny throughput + budget hold.
+
+Drives :class:`repro.serving.ServeLoop` over a faked 8-device host
+platform (``xla_force_host_platform_device_count``, set below *before*
+jax imports) with the workload the layer exists for:
+
+- **churn**: 10% of the live fleet is evicted and replaced every tick —
+  admission and eviction must be cheap enough to disappear into the
+  tick rate (no recompiles: the padded slot plane keeps the jit shape
+  fixed);
+- **budget**: a fleet-wide egress budget in bytes/s; the report records
+  the mean absolute deviation of post-warm-up tick egress from the
+  target, which the acceptance bar pins at ±15%.
+
+Results land in the top-level ``BENCH_serve.json``.  ``BENCH_SMOKE=1``
+shrinks the run for CI smoke.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+# Must precede any jax import: fake a multi-device host platform so slot
+# padding and per-device sharding are exercised on single-CPU runners.
+if "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
+import jax                                              # noqa: E402
+import numpy as np                                      # noqa: E402
+
+from repro.serving import (GlobalEpsBudget, ServeLoop,  # noqa: E402
+                           SlotManager)
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+STREAMS, TICKS, TICK_W = (16, 30, 64) if SMOKE else (48, 120, 256)
+CHURN = 0.10                 # fraction of the fleet replaced per tick
+WARMUP_FRAC = 0.4            # ticks ignored by the budget-hold metric
+BUDGET_PER_STREAM = 40.0     # bytes/s of stream time per live stream
+METHOD, PROTOCOL = "linear", "singlestream"
+EPS0 = 0.5
+
+
+def _drive(loop, rng, ticks, budget_target):
+    """Run the churny workload; returns (per-tick egress, points, wall s)."""
+    live = []
+    n_admitted = 0
+
+    def fresh():
+        nonlocal n_admitted
+        sid = f"s{n_admitted}"
+        # Warm-start admission: under a budget, a fresh stream starts at
+        # the live fleet's median ε instead of ε0, so churn does not
+        # re-blast bytes through an untuned row every tick.
+        eps = EPS0
+        if budget_target is not None:
+            live_eps = loop.slots.eps[loop.slots.live_mask()]
+            if live_eps.size:
+                eps = float(np.median(live_eps))
+        loop.admit(sid, eps=eps)
+        live.append(sid)
+        n_admitted += 1
+
+    for _ in range(STREAMS):
+        fresh()
+    egress, points = [], 0
+    t0 = time.perf_counter()
+    for _ in range(ticks):
+        nbytes = 0
+        for _ in range(int(len(live) * CHURN)):
+            gone = live.pop(int(rng.integers(len(live))))
+            nbytes += len(loop.evict(gone).tail)
+            fresh()
+        for sid in live:
+            loop.offer(sid, np.cumsum(
+                rng.normal(0, 0.6, TICK_W)).astype(np.float32))
+        rep = loop.tick()
+        egress.append(nbytes + rep.nbytes)
+        points += rep.consumed
+    wall = time.perf_counter() - t0
+    return np.asarray(egress, float), points, wall, n_admitted
+
+
+def serve_bench():
+    """CSV rows for benchmarks.run + the BENCH_serve.json artifact."""
+    rng = np.random.default_rng(0)
+    report = {
+        "config": {"streams": STREAMS, "ticks": TICKS,
+                   "tick_width": TICK_W, "churn_per_tick": CHURN,
+                   "method": METHOD, "protocol": PROTOCOL, "eps0": EPS0,
+                   "smoke": SMOKE, "backend": jax.default_backend(),
+                   "devices": jax.device_count()},
+    }
+    rows = []
+
+    # jit warmup: the masked engine's trace set (pow2 pieces, flush,
+    # eps swap) compiles once per shape — keep that out of the timings.
+    warm_loop = ServeLoop(
+        SlotManager(METHOD, PROTOCOL, capacity=STREAMS, eps0=EPS0),
+        tick_width=TICK_W, queue_cap=8 * TICK_W,
+        budget=GlobalEpsBudget(1.0, sample_hz=float(TICK_W)))
+    _drive(warm_loop, np.random.default_rng(1), 3, 1.0)
+
+    # -- unbudgeted: raw churny throughput --------------------------------
+    loop = ServeLoop(SlotManager(METHOD, PROTOCOL, capacity=STREAMS,
+                                 eps0=EPS0),
+                     tick_width=TICK_W, queue_cap=8 * TICK_W)
+    egress, points, wall, admitted = _drive(loop, rng, TICKS, None)
+    report["churn"] = {
+        "points": points, "seconds": wall,
+        "points_per_s": points / wall,
+        "bytes_per_s": float(egress.sum()) / wall,
+        "wire_bytes": float(egress.sum()),
+        "stream_admissions": admitted,
+    }
+    rows.append((f"serve/churn@{CHURN:.0%}", wall * 1e6,
+                 f"{points / wall / 1e6:.2f}Mpts/s "
+                 f"{admitted} admissions"))
+
+    # -- budgeted: the global ε controller holding the pipe ---------------
+    # sample_hz = TICK_W -> each full tick spans one second of stream
+    # time, so the per-tick pool is directly comparable to tick egress.
+    target = BUDGET_PER_STREAM * STREAMS
+    # Gentle gains: α < 1 and a longer EMA trade convergence speed for a
+    # smaller steady-state bias (the byte response to ε is convex, so
+    # aggressive steps overshoot high on average).
+    budget = GlobalEpsBudget(target, sample_hz=float(TICK_W),
+                             smoothing=0.5, alpha=0.5, deadband=0.02)
+    loop = ServeLoop(SlotManager(METHOD, PROTOCOL, capacity=STREAMS,
+                                 eps0=EPS0),
+                     tick_width=TICK_W, queue_cap=8 * TICK_W,
+                     budget=budget)
+    egress, points, wall, admitted = _drive(loop, rng, TICKS, target)
+    warm = egress[int(TICKS * WARMUP_FRAC):]
+    hold = float(np.mean(np.abs(warm - target)) / target)
+    report["budget"] = {
+        "target_bytes_per_s": target,
+        "points": points, "seconds": wall,
+        "points_per_s": points / wall,
+        "mean_tick_bytes_warm": float(warm.mean()),
+        "mean_abs_deviation_frac": hold,
+        "held_within_15pct": bool(abs(warm.mean() - target)
+                                  / target <= 0.15),
+    }
+    rows.append((f"serve/budget@{target:.0f}B/s", wall * 1e6,
+                 f"{points / wall / 1e6:.2f}Mpts/s "
+                 f"dev {hold:.1%} "
+                 f"{'OK' if report['budget']['held_within_15pct'] else 'MISS'}"))
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    # Run as a module: PYTHONPATH=src python -m benchmarks.serve_bench
+    # (BENCH_SMOKE=1 shrinks the sweep).
+    for name, us, derived in serve_bench():
+        print(f"{name},{us:.1f},{derived}")
+    print(f"[wrote {os.path.abspath(OUT_PATH)}]")

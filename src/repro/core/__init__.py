@@ -21,7 +21,7 @@ from .protocol_engine import (ENGINE_PROTOCOLS, ProtocolEmitter,
                               protocol_nbytes, protocol_point_metrics,
                               to_method_outputs)
 from .adaptive import (AdaptiveEps, StreamingAdaptiveEps,
-                       compare_fixed_vs_adaptive)
+                       allocate_eps_budget, compare_fixed_vs_adaptive)
 
 __all__ = [
     "CompressionRecord", "DisjointKnot", "JointKnot", "Line", "MethodOutput",
@@ -35,5 +35,6 @@ __all__ = [
     "ENGINE_PROTOCOLS", "ProtocolEmitter", "batched_point_metrics",
     "encode_batch", "protocol_nbytes", "protocol_point_metrics",
     "to_method_outputs",
-    "AdaptiveEps", "StreamingAdaptiveEps", "compare_fixed_vs_adaptive",
+    "AdaptiveEps", "StreamingAdaptiveEps", "allocate_eps_budget",
+    "compare_fixed_vs_adaptive",
 ]

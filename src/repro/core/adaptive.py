@@ -127,12 +127,32 @@ class StreamingAdaptiveEps:
     deadband: float = 0.1
     method: str = "linear"
     max_run: int = 256
+    # Budget API: set a wire budget in bytes per input point instead of a
+    # ratio; ``target_ratio`` is then derived (raw points cost VALUE_BYTES
+    # each).  This is the per-stream form of the fleet-wide allocator
+    # (:func:`allocate_eps_budget`), which spends one egress budget over
+    # many streams.
+    target_bytes_per_point: Optional[float] = None
 
     def __post_init__(self):
+        if self.target_bytes_per_point is not None:
+            self.target_ratio = self.target_bytes_per_point / VALUE_BYTES
         self._state = None
         self._prev_end = None          # (S,) last finalized position
         self._eps = None               # (S,) current ε
+        self._stream_bytes = None      # (S,) accumulated wire bytes
+        self._stream_points = None     # (S,) accumulated finalized points
         self.eps_trace: List[Tuple[int, float]] = []
+
+    @property
+    def stream_bytes(self) -> np.ndarray:
+        """Per-stream accumulated SingleStream bytes (finalized only)."""
+        return self._stream_bytes
+
+    @property
+    def stream_points(self) -> np.ndarray:
+        """Per-stream count of points covered by finalized segments."""
+        return self._stream_points
 
     @staticmethod
     def _segment_bytes(brk_rows: np.ndarray, prev: int,
@@ -153,6 +173,43 @@ class StreamingAdaptiveEps:
             prev = e
         return total, covered, int(prev)
 
+    @staticmethod
+    def _segment_bytes_batch(brk: np.ndarray, prev: np.ndarray,
+                             offset: int = 0
+                             ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Vectorized :meth:`_segment_bytes` over an ``(S, w)`` break plane.
+
+        One ``np.nonzero`` + segmented diffs replace the per-stream /
+        per-event Python loops (exact byte totals: segment lengths are
+        small integers, so the float64 bincount sums are exact).  Returns
+        per-stream ``(nbytes, covered, prev')`` arrays.
+        """
+        S = brk.shape[0]
+        prev = np.asarray(prev, np.int64).copy()
+        nbytes = np.zeros((S,), np.float64)
+        covered = np.zeros((S,), np.int64)
+        ss, jj = np.nonzero(brk)
+        if ss.size:
+            ends = jj.astype(np.int64) + offset
+            first = np.ones(ss.size, bool)
+            first[1:] = ss[1:] != ss[:-1]
+            # Segment start = previous break in the same row, or the
+            # carried-in ``prev`` for the row's first break this chunk.
+            before = np.empty_like(ends)
+            before[0] = 0
+            before[1:] = ends[:-1]
+            lengths = ends - np.where(first, prev[ss], before)
+            per = np.where(lengths >= 3, COUNTER_BYTES + 2 * VALUE_BYTES,
+                           lengths * (COUNTER_BYTES + VALUE_BYTES))
+            nbytes = np.bincount(ss, weights=per.astype(np.float64),
+                                 minlength=S)
+            covered = np.bincount(ss, weights=lengths.astype(np.float64),
+                                  minlength=S).astype(np.int64)
+            last = np.ones(ss.size, bool)
+            last[:-1] = first[1:]
+            prev[ss[last]] = ends[last]
+        return nbytes, covered, prev
+
     def push(self, y_chunk) -> "jax_pla.SegmentOutput":
         """Consume an (S, n) chunk; returns its finalized events and
         retunes ε for the next chunk."""
@@ -164,6 +221,8 @@ class StreamingAdaptiveEps:
             self._state = jax_pla.init_state(
                 self.method, S, self._eps, max_run=self.max_run)
             self._prev_end = np.full((S,), -1, np.int64)
+            self._stream_bytes = np.zeros((S,), np.float64)
+            self._stream_points = np.zeros((S,), np.int64)
         self._state = dataclasses.replace(
             self._state, eps=np.asarray(self._eps, np.float32))
         self.eps_trace.append((self._state.t, float(self._eps.max())))
@@ -173,37 +232,52 @@ class StreamingAdaptiveEps:
         return out
 
     def finish(self) -> "jax_pla.SegmentOutput":
-        """Close the trailing runs (one forced break per row)."""
+        """Close the trailing runs (one forced break per row).
+
+        The flushed segments go through the same byte accounting as
+        pushed chunks (previously every stream's final segment was simply
+        missing from ``stream_bytes`` and the trace), so the accumulated
+        totals match an offline recount exactly.  No retune happens —
+        there is no next chunk on this stream.
+        """
         from . import jax_pla
         if self._state is None:
             raise ValueError("finish with no data pushed")
+        pos0 = self._state.emitted
         self._state, out = jax_pla.flush(self._state)
+        nbytes, covered, prev = self._segment_bytes_batch(
+            np.asarray(out.breaks), self._prev_end, pos0)
+        self._prev_end = prev
+        self._stream_bytes += nbytes
+        self._stream_points += covered
+        self.eps_trace.append((self._state.t, float(self._eps.max())))
         return out
 
     def _retune(self, brk: np.ndarray, y: np.ndarray, pos0: int) -> None:
+        nbytes, covered, prev = self._segment_bytes_batch(
+            brk, self._prev_end, pos0)
+        self._prev_end = prev
+        self._stream_bytes += nbytes
+        self._stream_points += covered
+        act = covered > 0
+        if not act.any():
+            return
+        ratio = nbytes / (VALUE_BYTES * np.where(act, covered, 1))
         new_eps = self._eps.copy()
-        for s in range(brk.shape[0]):
-            nbytes, covered, prev = self._segment_bytes(
-                brk[s], int(self._prev_end[s]), pos0)
-            self._prev_end[s] = prev
-            if covered == 0:
-                continue
-            ratio = nbytes / (VALUE_BYTES * covered)
-            eps = self._eps[s]
-            if ratio >= 1.0:
-                # Saturated at the singleton ceiling: no gradient in the
-                # ratio — jump ε to the chunk's own scale.
-                eps = float(np.clip(max(eps * self.max_step,
-                                        0.5 * np.std(y[s]) + 1e-12),
-                                    self.eps_min, self.eps_max))
-            else:
-                err = ratio / self.target_ratio
-                if abs(err - 1.0) > self.deadband:
-                    step = float(np.clip(err ** self.alpha,
-                                         1.0 / self.max_step, self.max_step))
-                    eps = float(np.clip(eps * step, self.eps_min,
-                                        self.eps_max))
-            new_eps[s] = eps
+        sat = act & (ratio >= 1.0)
+        if sat.any():
+            # Saturated at the singleton ceiling: no gradient in the
+            # ratio — jump ε to the chunk's own scale.
+            jump = np.maximum(self._eps * self.max_step,
+                              0.5 * np.std(y, axis=1) + 1e-12)
+            new_eps[sat] = np.clip(jump, self.eps_min, self.eps_max)[sat]
+        err = ratio / self.target_ratio
+        corr = act & ~sat & (np.abs(err - 1.0) > self.deadband)
+        if corr.any():
+            step = np.clip(err ** self.alpha,
+                           1.0 / self.max_step, self.max_step)
+            new_eps[corr] = np.clip(self._eps * step, self.eps_min,
+                                    self.eps_max)[corr]
         self._eps = new_eps
 
     def run(self, ys, chunk: int = 512) -> Dict:
@@ -220,14 +294,72 @@ class StreamingAdaptiveEps:
         v = np.concatenate([np.asarray(o.v) for o in outs], axis=1)
         seg = jax_pla.SegmentOutput(breaks, a, v)
         recon = np.asarray(jax_pla.propagate_lines(seg))[0]
-        # Whole-stream byte accounting (includes the trailing flush).
-        total, _, _ = self._segment_bytes(breaks[0], -1)
+        # Accumulated accounting now includes the trailing flush, so it
+        # equals the offline recount ``_segment_bytes(breaks[0], -1)``
+        # (pinned in tests/test_adaptive.py).
+        total = float(self._stream_bytes[0])
         return {
             "overall_ratio": total / (VALUE_BYTES * n),
             "eps_trace": list(self.eps_trace),
             "errors": np.abs(recon - ys),
             "segments": int(breaks.sum()),
         }
+
+
+def allocate_eps_budget(eps, nbytes, npoints, budget_bytes: float, *,
+                        eps_min: float = 1e-6, eps_max: float = 1e6,
+                        alpha: float = 1.0, max_step: float = 8.0,
+                        deadband: float = 0.1, rounds: int = 3
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Fleet-wide ε allocation: water-filling in log-ε space.
+
+    The operator sets one egress budget (``budget_bytes``, per accounting
+    interval); measured per-stream wire bytes and point counts over the
+    same interval drive one allocation round.  Each live stream gets a
+    target share of the budget proportional to its point rate, and its ε
+    moves by the same log-proportional rule :class:`AdaptiveEps` uses
+    per window: ``eps <- eps * clip((bytes/target)^alpha, 1/max_step,
+    max_step)`` outside the deadband.
+
+    Water-filling: a stream clamped at an ε bound cannot trade bytes any
+    further, so its *measured* bytes are charged against the pool and the
+    remainder is redistributed over the still-free streams — repeated up
+    to ``rounds`` times or until no new stream pins.  Streams with
+    ``npoints == 0`` (empty slots, just-admitted streams) keep their ε
+    and receive no share.
+
+    Returns ``(new_eps, targets)`` — both ``(S,)`` float64; ``targets``
+    holds the byte share each live stream was allocated this round.
+    """
+    eps0 = np.asarray(eps, np.float64)
+    nbytes = np.asarray(nbytes, np.float64)
+    npoints = np.asarray(npoints, np.float64)
+    live = npoints > 0
+    new_eps = eps0.copy()
+    target = np.zeros_like(eps0)
+    if not live.any() or budget_bytes <= 0:
+        return new_eps, target
+    pinned = np.zeros(eps0.shape, bool)
+    for _ in range(max(int(rounds), 1)):
+        free = live & ~pinned
+        if not free.any():
+            break
+        pool = max(float(budget_bytes) - float(nbytes[live & pinned].sum()),
+                   0.0)
+        target = np.zeros_like(eps0)
+        target[free] = pool * npoints[free] / npoints[free].sum()
+        err = np.where(free, nbytes / np.maximum(target, 1e-300), 1.0)
+        step = np.clip(err ** alpha, 1.0 / max_step, max_step)
+        new_eps = np.where(free & (np.abs(err - 1.0) > deadband),
+                           np.clip(eps0 * step, eps_min, eps_max), eps0)
+        # A stream pushed into a bound can't close its share gap — pin
+        # it, charge its measured bytes, redistribute what's left.
+        hit = free & (((new_eps >= eps_max) & (err > 1.0)) |
+                      ((new_eps <= eps_min) & (err < 1.0)))
+        if not hit.any():
+            break
+        pinned |= hit
+    return new_eps, target
 
 
 def compare_fixed_vs_adaptive(ts, ys, fixed_eps: float,

@@ -109,6 +109,8 @@ __all__ = [
     "SegmenterState", "init_state", "step_chunk", "flush",
     "STREAMING_METHODS", "DEFERRED_METHODS", "MAX_STREAM_T", "check_window",
     "mixed_ring",
+    "MaskedEvents", "MaskedSegmenterState", "masked_init_state",
+    "masked_step_chunk", "masked_flush_rows", "masked_set_eps",
     "propagate_lines", "to_records", "decode_records", "records_to_events",
     "records_init", "records_append", "records_finalize",
     "scatter_events", "release_deferred", "assemble_deferred_events",
@@ -357,8 +359,27 @@ def _chain_planes(ring, idx, t_i, window, value_of):
     times the cost of the rest of the step.)
     """
     sl = idx.astype(jnp.int32)
-    qx = (t_i - jnp.mod(t_i - sl, window)).astype(ring.dtype)
+    tc = t_i[:, None] if jnp.ndim(t_i) else t_i  # per-row time: (S, 1)
+    qx = (tc - jnp.mod(tc - sl, window)).astype(ring.dtype)
     return qx, value_of(jnp.take_along_axis(ring, sl, axis=1))
+
+
+def _ring_write(ring, slot, yt):
+    """Scatter ``yt`` into per-stream ring ``slot`` — scalar slot (lockstep
+    time) or ``(S,)`` slots (per-row time, the masked serving engine)."""
+    if jnp.ndim(slot):
+        return ring.at[jnp.arange(ring.shape[0]), slot].set(yt)
+    return ring.at[:, slot].set(yt)
+
+
+def _window_positions(t_i, window):
+    """Absolute positions of the ``window`` ring entries ending at
+    ``t_i - 1``, as a 2-D plane: ``(1, W)`` for scalar ``t_i`` (lockstep)
+    or ``(S, W)`` for per-row time."""
+    ar = jnp.arange(window)
+    if jnp.ndim(t_i):
+        return t_i[:, None] - 1 - ar[None, :]
+    return (t_i - 1 - ar)[None, :]
 
 
 def _chain_append(idx, ln, keep, px, py, qx, qy, slot, upper: bool):
@@ -391,7 +412,8 @@ def _chain_append(idx, ln, keep, px, py, qx, qy, slot, upper: bool):
     wp = jnp.where(keep, ln_kept, 0)
     overflow = keep & (wp >= C)
     col = jnp.arange(C, dtype=jnp.int32)[None, :]
-    idx = jnp.where(col == wp[:, None], slot.astype(idx.dtype), idx)
+    sc = slot[:, None] if jnp.ndim(slot) else slot  # per-row slot: (S, 1)
+    idx = jnp.where(col == wp[:, None], sc.astype(idx.dtype), idx)
     return idx, jnp.minimum(wp + 1, C), overflow
 
 
@@ -555,7 +577,7 @@ def _disjoint_step(eps, max_run, window, state, inp):
     S = yt.shape[0]
     dtype = yt.dtype
     slot = jnp.mod(t_i, W)
-    ring = ring.at[:, slot].set(yt)  # write FIRST: every read is post-update
+    ring = _ring_write(ring, slot, yt)  # write FIRST: reads are post-update
     t = jnp.broadcast_to(t_i, (S,)).astype(dtype)
     rs = run_start.astype(dtype)
     rel = t - rs
@@ -598,12 +620,12 @@ def _disjoint_step(eps, max_run, window, state, inp):
         minimize=False)
 
     def _windowed_retighten(_):
-        abs_pos = t_i - 1 - jnp.arange(W)
+        abs_pos = _window_positions(t_i, W)
         pos = (abs_pos % W).astype(jnp.int32)
         in_run = (abs_pos >= run_start[:, None]) & (abs_pos >= 0)
         yw = jnp.take_along_axis(ring, jnp.broadcast_to(pos, (S, W)),
                                  axis=1)
-        dtw = t[:, None] - abs_pos.astype(dtype)[None, :]
+        dtw = t[:, None] - abs_pos.astype(dtype)
         dtw_safe = jnp.where(in_run, dtw, 1.0)
         s_hi = jnp.where(in_run,
                          (hi_i[:, None] - (yw - eps[:, None])) / dtw_safe,
@@ -788,7 +810,7 @@ def _linear_step(eps, max_run, window, state, inp):
     S = yt.shape[0]
     dtype = yt.dtype
     slot = jnp.mod(t_i, W)
-    ring = ring.at[:, slot].set(yt)  # write FIRST: every read is post-update
+    ring = _ring_write(ring, slot, yt)  # write FIRST: reads are post-update
     t = jnp.broadcast_to(t_i, (S,)).astype(dtype)
     rs = run_start.astype(dtype)
     rel = t - rs
@@ -819,12 +841,12 @@ def _linear_step(eps, max_run, window, state, inp):
     mr_c = jnp.maximum(res_u, res_l)
 
     def _windowed_reval(_):
-        abs_pos = t_i - 1 - jnp.arange(W)
+        abs_pos = _window_positions(t_i, W)
         pos = (abs_pos % W).astype(jnp.int32)
         in_run = (abs_pos >= run_start[:, None]) & (abs_pos >= 0)
         yw = jnp.take_along_axis(ring, jnp.broadcast_to(pos, (S, W)),
                                  axis=1)
-        relw = abs_pos.astype(dtype)[None, :] - rs[:, None]
+        relw = abs_pos.astype(dtype) - rs[:, None]
         res = jnp.abs(yw - (a_fit[:, None] * relw + b_fit[:, None]))
         res = jnp.where(in_run, res, 0.0)
         return jnp.where(wm, jnp.max(res, axis=1), mr_c)
@@ -1794,6 +1816,236 @@ def flush(state: SegmenterState) -> tuple[SegmenterState, SegmentOutput]:
                         state.carry, jnp.asarray(state.t - 1, jnp.int32))
     new = dataclasses.replace(state, carry=None, emitted=state.emitted + 1)
     return new, out
+
+
+# ---------------------------------------------------------------------------
+# Masked streaming: per-row local time over a fixed slot plane
+#
+# The serving front-end (repro.serving) multiplexes short-lived streams
+# onto a fixed (S_pad,) slot batch: every tick pushes one (S, n) plane in
+# which row s only has ``lengths[s] <= n`` fresh points, and rows are
+# admitted/evicted out of phase.  The lockstep API above cannot express
+# that — its scan walks one shared absolute clock.  The masked API gives
+# every row its own local clock (``pos``, starting at 0 at admission):
+#
+# - a column j is a no-op for row s when ``j >= lengths[s]`` (the carry
+#   row passes through unchanged, no event, no clock tick);
+# - the first valid point of a not-yet-started row routes through
+#   ``impl.init`` — a fresh carry row is written over whatever the slot
+#   held before, which is what makes slot recycling structurally
+#   leak-proof (there is no reset-then-hope: every admission rebuilds the
+#   row from its own first point);
+# - ``masked_flush_rows`` closes selected rows (eviction) and resets them
+#   to zeroed never-started rows.
+#
+# Bit-identity contract: the per-method steps only consume time through
+# differences bounded by the run cap (see the anchored-time note in the
+# module docstring), and the masked scan runs at ``unroll=1``, so a row
+# admitted mid-flight and fed its points over any tick partition emits
+# exactly the events of a fresh lockstep run of that row's own data —
+# verified per method in tests/test_serving.py.  Positions in
+# ``MaskedEvents.pos`` are row-local (0 = the row's first point since
+# admission).  The deferred methods (continuous/mixed) are rejected:
+# their release frontier is a global min over rows, which a half-masked
+# batch would stall indefinitely.
+# ---------------------------------------------------------------------------
+
+
+class MaskedEvents(NamedTuple):
+    ev: jax.Array    # (S, n) bool — finalized event in this column
+    pos: jax.Array   # (S, n) int32 — row-local event position (where ev)
+    a: jax.Array     # (S, n) — slope, valid where ev
+    v: jax.Array     # (S, n) — line value at the event position, where ev
+
+
+@dataclasses.dataclass
+class MaskedSegmenterState:
+    """Host-side handle for a masked (per-row-clock) segmentation.
+
+    Unlike :class:`SegmenterState`, ``carry`` is always materialized
+    (zero rows before first data) so that admission/eviction never
+    changes the jit shape; ``started`` marks rows with >= 1 consumed
+    point and ``pos`` counts each row's consumed points since its last
+    reset."""
+
+    method: str
+    n_streams: int
+    max_run: int
+    window: Optional[int]
+    dtype: Any
+    eps: jax.Array            # (S,) in ``dtype``
+    carry: Any
+    started: jax.Array        # (S,) bool
+    pos: jax.Array            # (S,) int32
+
+
+def _row_mask(mask, leaf):
+    """Broadcast an (S,) row mask against an (S, ...) carry leaf."""
+    return mask.reshape(mask.shape + (1,) * (leaf.ndim - 1))
+
+
+def masked_init_state(method: str, n_streams: int, eps, *,
+                      max_run: int = 256, window: Optional[int] = None,
+                      dtype=jnp.float32) -> MaskedSegmenterState:
+    """Fresh masked streaming state: all rows empty, carry materialized."""
+    if method not in _METHOD_IMPLS:
+        raise ValueError(f"unknown method {method!r}; "
+                         f"have {sorted(_METHOD_IMPLS)}")
+    impl = _METHOD_IMPLS[method]
+    if impl.deferred:
+        raise ValueError(
+            f"method {method!r} emits deferred events whose release "
+            f"frontier is a min over all rows — a masked batch would "
+            f"stall it; serve deferred methods on dedicated lockstep "
+            f"fleets (SegmenterState) instead")
+    if impl.windowed:
+        W = _ring_size(method, max_run, window)
+    elif window is not None:
+        raise ValueError(f"method {method!r} takes no window")
+    else:
+        W = None
+    eps = jnp.broadcast_to(jnp.asarray(eps, dtype), (n_streams,))
+    carry = impl.init(jnp.zeros((n_streams,), dtype), eps, max_run, W, 0)
+    return MaskedSegmenterState(
+        method=method, n_streams=n_streams, max_run=max_run, window=W,
+        dtype=dtype, eps=eps, carry=carry,
+        started=jnp.zeros((n_streams,), bool),
+        pos=jnp.zeros((n_streams,), jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("method", "max_run", "window"))
+def _masked_scan(method, max_run, window, carry, started, pos, eps,
+                 y_chunk, lengths):
+    impl = _METHOD_IMPLS[method]
+    dtype = y_chunk.dtype
+
+    def body(st, inp):
+        carry, started, pos = st
+        j, y_j = inp
+        valid = j < lengths
+        t_in = pos if impl.int_ts else pos.astype(dtype)
+        stepped, (brk, a, v) = impl.step(eps, max_run, window, carry,
+                                         (t_in, y_j))
+        use_step = valid & started
+        carry = jax.tree_util.tree_map(
+            lambda s_, c_: jnp.where(_row_mask(use_step, s_), s_, c_),
+            stepped, carry)
+        use_init = valid & ~started
+
+        def do_init(c):
+            fresh = impl.init(y_j, eps, max_run, window, 0)
+            return jax.tree_util.tree_map(
+                lambda f_, c_: jnp.where(_row_mask(use_init, f_), f_, c_),
+                fresh, c)
+
+        # Admissions are rare (one column per admitted row), so the
+        # (S, W)-materializing init stays behind a cond.
+        carry = jax.lax.cond(jnp.any(use_init), do_init, lambda c: c, carry)
+        ev = use_step & brk
+        out = (ev, jnp.where(ev, pos - 1, 0), a, v)
+        return (carry, started | valid, pos + valid.astype(pos.dtype)), out
+
+    # unroll=1 unconditionally: cross-step fusion of an unrolled body may
+    # shift ulps with the scan length, and masked serving relies on
+    # tick-partition bit-transparency (see _SCAN_UNROLL).
+    n = y_chunk.shape[1]
+    (carry, started, pos), (ev, epos, a, v) = jax.lax.scan(
+        body, (carry, started, pos),
+        (jnp.arange(n, dtype=jnp.int32), y_chunk.T), unroll=1)
+    return carry, started, pos, MaskedEvents(ev.T, epos.T, a.T, v.T)
+
+
+@functools.partial(jax.jit, static_argnames=("method", "max_run", "window"))
+def _masked_flush_rows(method, max_run, window, carry, started, pos, eps,
+                       mask):
+    impl = _METHOD_IMPLS[method]
+    dtype = eps.dtype
+    t_last = pos - 1
+    a_f, v_f = impl.flush(carry, t_last if impl.int_ts
+                          else t_last.astype(dtype))
+    ev = mask & started
+    epos = jnp.where(ev, pos - 1, 0)
+    # Evicted rows reset to zeroed never-started rows — stale geometry is
+    # structurally unreachable anyway (the next admission re-inits from
+    # its own first point), but zeroing keeps slot dumps inspectable.
+    fresh = impl.init(jnp.zeros_like(eps), eps, max_run, window, 0)
+    carry = jax.tree_util.tree_map(
+        lambda f_, c_: jnp.where(_row_mask(mask, f_), f_, c_), fresh, carry)
+    return (carry, started & ~mask, jnp.where(mask, 0, pos),
+            (ev, epos, a_f, v_f))
+
+
+def masked_step_chunk(state: MaskedSegmenterState, y_chunk, lengths
+                      ) -> tuple[MaskedSegmenterState, MaskedEvents]:
+    """Consume an ``(S, n)`` tick plane with per-row valid prefixes.
+
+    Row ``s`` consumes ``y_chunk[s, :lengths[s]]``; its events come back
+    tagged with row-local positions.  Like :func:`step_chunk`, wide
+    planes are fed as power-of-two pieces threading one carry, so the
+    trace set stays logarithmic in the tick width."""
+    y = jnp.asarray(y_chunk, state.dtype)
+    if y.ndim != 2 or y.shape[0] != state.n_streams:
+        raise ValueError(f"tick plane must be ({state.n_streams}, n); "
+                         f"got {y.shape}")
+    lengths_np = np.asarray(lengths, np.int64)
+    if lengths_np.shape != (state.n_streams,):
+        raise ValueError(f"lengths must be ({state.n_streams},); "
+                         f"got {lengths_np.shape}")
+    n = y.shape[1]
+    if lengths_np.min() < 0 or lengths_np.max() > n:
+        raise ValueError(f"lengths must lie in [0, {n}]")
+    pos_np = np.asarray(state.pos, np.int64)
+    if (pos_np + lengths_np).max() > MAX_STREAM_T:
+        raise ValueError(
+            f"a row would reach {(pos_np + lengths_np).max()} points "
+            f"since its admission, past the 2^24 local-time limit of the "
+            f"jnp segmenters; evict and re-admit the stream to rebase "
+            f"its clock")
+    if n == 0 or lengths_np.max() == 0:
+        z = jnp.zeros((state.n_streams, 0))
+        return state, MaskedEvents(z.astype(bool), z.astype(jnp.int32),
+                                   z.astype(state.dtype),
+                                   z.astype(state.dtype))
+    lengths = jnp.asarray(lengths_np, jnp.int32)
+    carry, started, pos = state.carry, state.started, state.pos
+    outs, lo = [], 0
+    for w in _pow2_pieces(n):
+        carry, started, pos, out = _masked_scan(
+            state.method, state.max_run, state.window, carry, started, pos,
+            state.eps, y[:, lo:lo + w],
+            jnp.clip(lengths - lo, 0, w))
+        outs.append(out)
+        lo += w
+    if len(outs) > 1:
+        out = MaskedEvents(*(jnp.concatenate(parts, axis=1)
+                             for parts in zip(*outs)))
+    else:
+        out = outs[0]
+    new = dataclasses.replace(state, carry=carry, started=started, pos=pos)
+    return new, out
+
+
+def masked_flush_rows(state: MaskedSegmenterState, rows
+                      ) -> tuple[MaskedSegmenterState, tuple]:
+    """Close the trailing run of the selected rows (eviction).
+
+    ``rows`` is an (S,) bool mask.  Returns the updated state (selected
+    rows zeroed and never-started) and one event column ``(ev, pos, a,
+    v)``: a forced break at each closed row's last local position (rows
+    that never consumed a point emit nothing)."""
+    mask = jnp.asarray(np.asarray(rows, bool))
+    carry, started, pos, evs = _masked_flush_rows(
+        state.method, state.max_run, state.window, state.carry,
+        state.started, state.pos, state.eps, mask)
+    new = dataclasses.replace(state, carry=carry, started=started, pos=pos)
+    return new, evs
+
+
+def masked_set_eps(state: MaskedSegmenterState, eps) -> MaskedSegmenterState:
+    """Swap the per-row ε plane (traced — no recompile)."""
+    eps = jnp.broadcast_to(jnp.asarray(eps, state.dtype),
+                           (state.n_streams,))
+    return dataclasses.replace(state, eps=eps)
 
 
 # ---------------------------------------------------------------------------

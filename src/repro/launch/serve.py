@@ -3,6 +3,18 @@
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
         --prompt-len 128 --gen 32 [--pla-kv --kv-hot 64 --kv-chunk 32]
 
+``--no-smoke`` disables the shrunk config (the old ``--smoke`` flag
+defaulted on and could never be turned off from the CLI).
+
+Fleet-serving mode (paper scenario 1, ROADMAP "Million-stream serving
+front-end") drives the admission-controlled front-end instead of the KV
+demo — churny synthetic sensors through :class:`repro.serving.ServeLoop`
+with an optional fleet-wide egress budget:
+
+    PYTHONPATH=src python -m repro.launch.serve --fleet \
+        --fleet-streams 32 --fleet-ticks 60 --churn 0.1 \
+        --budget-bytes-per-s 2000
+
 Prefills a batch of synthetic prompts, then decodes.  With ``--pla-kv``,
 KV tokens are compressed *as they cross the hot window* (paper scenario
 2): every ``--kv-chunk`` prefill steps the newly cold token columns of
@@ -35,10 +47,17 @@ def _push_cold(comps, blocks, cache, lo: int, hi: int) -> None:
                                        cache.v[layer, :, lo:hi]))
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        formatter_class=argparse.ArgumentDefaultsHelpFormatter)
+    # BooleanOptionalAction so --no-smoke actually exists: the old
+    # ``action="store_true", default=True`` spelling made smoke mode
+    # impossible to disable from the CLI.
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="shrunk model config (use --no-smoke for full)")
     ap.add_argument("--arch", default="yi-6b", choices=list(ALIASES))
-    ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=128)
     ap.add_argument("--gen", type=int, default=32)
@@ -48,7 +67,88 @@ def main():
                     help="hot window: most recent tokens kept raw")
     ap.add_argument("--kv-chunk", type=int, default=32,
                     help="push cold tokens to the compressor every N steps")
-    args = ap.parse_args()
+    # Fleet-serving mode (repro.serving).
+    ap.add_argument("--fleet", action="store_true",
+                    help="serve a churny synthetic sensor fleet instead "
+                         "of the KV demo")
+    ap.add_argument("--fleet-streams", type=int, default=32,
+                    help="live streams held in the slot plane")
+    ap.add_argument("--fleet-capacity", type=int, default=0,
+                    help="slot capacity (0: 2x the live streams)")
+    ap.add_argument("--fleet-ticks", type=int, default=60)
+    ap.add_argument("--tick-width", type=int, default=64)
+    ap.add_argument("--churn", type=float, default=0.1,
+                    help="fraction of live streams replaced per tick")
+    ap.add_argument("--method", default="linear")
+    ap.add_argument("--protocol", default="singlestream")
+    ap.add_argument("--eps", type=float, default=0.5)
+    ap.add_argument("--budget-bytes-per-s", type=float, default=0.0,
+                    help="fleet egress budget (0: fixed eps, no "
+                         "controller)")
+    return ap
+
+
+def serve_fleet(args) -> None:
+    """Churny synthetic fleet through the admission-controlled loop."""
+    import numpy as np
+
+    from repro.serving import GlobalEpsBudget, ServeLoop, SlotManager
+
+    rng = np.random.default_rng(0)
+    cap = args.fleet_capacity or 2 * args.fleet_streams
+    budget = None
+    if args.budget_bytes_per_s > 0:
+        budget = GlobalEpsBudget(args.budget_bytes_per_s,
+                                 sample_hz=float(args.tick_width))
+    mgr = SlotManager(args.method, args.protocol, capacity=cap,
+                      eps0=args.eps)
+    loop = ServeLoop(mgr, tick_width=args.tick_width,
+                     queue_cap=8 * args.tick_width, budget=budget)
+
+    def fresh(name):
+        loop.admit(name, eps=args.eps)
+
+    n_admitted = 0
+    live = []
+    for _ in range(args.fleet_streams):
+        fresh(f"sensor-{n_admitted}")
+        live.append(f"sensor-{n_admitted}")
+        n_admitted += 1
+    t0 = time.time()
+    total_bytes = total_points = 0
+    for k in range(args.fleet_ticks):
+        # churn: replace a fraction of the fleet, out of phase
+        for _ in range(int(len(live) * args.churn)):
+            gone = live.pop(int(rng.integers(len(live))))
+            rep = loop.evict(gone)
+            total_bytes += len(rep.tail)
+            fresh(f"sensor-{n_admitted}")
+            live.append(f"sensor-{n_admitted}")
+            n_admitted += 1
+        for name in live:
+            loop.offer(name, rng.normal(0, 1, args.tick_width)
+                       .astype(np.float32).cumsum())
+        rep = loop.tick()
+        total_bytes += rep.nbytes
+        total_points += rep.consumed
+        if k % 10 == 0 or k == args.fleet_ticks - 1:
+            pool = (f" pool={rep.budget_pool:.0f}B"
+                    if rep.budget_pool is not None else "")
+            print(f"tick {rep.tick:4d}: live={rep.live} "
+                  f"consumed={rep.consumed} bytes={rep.nbytes} "
+                  f"eps=[{rep.eps_lo:.3g}, {rep.eps_hi:.3g}]"
+                  f"{pool} shed={rep.shed_total}")
+    dt_s = time.time() - t0
+    print(f"served {total_points} points / {total_bytes} wire bytes "
+          f"across {n_admitted} stream admissions in {dt_s:.2f}s "
+          f"({total_points / max(dt_s, 1e-9):,.0f} pts/s)")
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+    if args.fleet:
+        serve_fleet(args)
+        return
 
     cfg = get_config(args.arch, smoke=args.smoke)
     api = build_model(cfg)

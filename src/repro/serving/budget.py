@@ -1,0 +1,99 @@
+"""Global ε controller: one egress budget in bytes/s over the fleet.
+
+The per-stream :class:`~repro.core.adaptive.StreamingAdaptiveEps` holds a
+*ratio*; an operator runs a fleet against a *pipe* — a fixed egress
+budget in bytes per second.  :class:`GlobalEpsBudget` converts that
+budget into a per-accounting-interval byte pool (stream time: every live
+stream produces ``sample_hz`` points per second, so ``P`` consumed
+points across ``L`` live streams span ``P / (L * sample_hz)`` seconds)
+and hands the pool to :func:`repro.core.adaptive.allocate_eps_budget`,
+the water-filling allocator in log-ε space.
+
+Measurements are smoothed with a per-slot EMA so single-tick burstiness
+(a regime change on one stream, an admission wave) does not whipsaw the
+whole fleet's ε plane; slot rows are reset at admission so a recycled
+slot never inherits the previous occupant's rate history (the
+measurement-side generation tag).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.adaptive import allocate_eps_budget
+
+__all__ = ["GlobalEpsBudget"]
+
+
+@dataclasses.dataclass
+class GlobalEpsBudget:
+    """Water-filling fleet allocator with EMA-smoothed per-slot rates.
+
+    ``budget_bytes_per_s`` — the single operator knob: total wire bytes
+    the fleet may emit per second of stream time.  ``smoothing`` is the
+    EMA weight of history (0 = trust the last tick only).
+    """
+
+    budget_bytes_per_s: float
+    sample_hz: float = 1.0
+    eps_min: float = 1e-6
+    eps_max: float = 1e6
+    alpha: float = 1.0
+    max_step: float = 8.0
+    deadband: float = 0.05
+    rounds: int = 3
+    smoothing: float = 0.5
+
+    def __post_init__(self):
+        if self.budget_bytes_per_s <= 0:
+            raise ValueError("budget_bytes_per_s must be positive")
+        if not 0.0 <= self.smoothing < 1.0:
+            raise ValueError("smoothing must lie in [0, 1)")
+        self._ema_bytes: Optional[np.ndarray] = None
+        self._ema_points: Optional[np.ndarray] = None
+        self.last_targets: Optional[np.ndarray] = None
+        self.last_pool: float = 0.0
+
+    def reset_rows(self, rows) -> None:
+        """Clear the rate history of recycled slots (admission/eviction)."""
+        if self._ema_bytes is not None:
+            mask = np.asarray(rows, bool)
+            self._ema_bytes[mask] = 0.0
+            self._ema_points[mask] = 0.0
+
+    def retune(self, eps, tick_bytes, tick_points, live) -> np.ndarray:
+        """One allocation round from this tick's measured per-slot rates.
+
+        ``eps`` is the current (S,) ε plane; ``tick_bytes`` /
+        ``tick_points`` the bytes and points each slot produced this
+        interval; ``live`` the slot-occupancy mask.  Returns the new ε
+        plane for the live rows (free rows pass through unchanged).
+        """
+        eps = np.asarray(eps, np.float64)
+        b = np.asarray(tick_bytes, np.float64)
+        p = np.asarray(tick_points, np.float64)
+        live = np.asarray(live, bool)
+        if self._ema_bytes is None:
+            self._ema_bytes = b.copy()
+            self._ema_points = p.copy()
+        else:
+            g = self.smoothing
+            self._ema_bytes = g * self._ema_bytes + (1 - g) * b
+            self._ema_points = g * self._ema_points + (1 - g) * p
+        n_live = int(live.sum())
+        if n_live == 0:
+            return eps
+        seconds = self._ema_points[live].sum() / (n_live * self.sample_hz)
+        pool = self.budget_bytes_per_s * seconds
+        self.last_pool = float(pool)
+        new_eps, targets = allocate_eps_budget(
+            eps, np.where(live, self._ema_bytes, 0.0),
+            np.where(live, self._ema_points, 0.0), pool,
+            eps_min=self.eps_min, eps_max=self.eps_max, alpha=self.alpha,
+            max_step=self.max_step, deadband=self.deadband,
+            rounds=self.rounds)
+        self.last_targets = targets
+        return np.where(live, new_eps, eps)

@@ -1,0 +1,315 @@
+"""Slot manager: churny streams multiplexed onto padded per-device slots.
+
+The paper's scenario 1 (sensor-fleet data reduction) has streams that
+come and go; the fixed ``(S, T)`` fleet layer cannot admit or evict
+without resharding.  :class:`SlotManager` owns a *padded* slot plane —
+``capacity`` rounded up to a multiple of the device count, one masked
+segmenter shard per device — and maps short-lived streams onto slots:
+
+- **admit** binds a stream to a free slot and bumps the slot's
+  *generation*.  No device work happens at admission: the masked engine
+  (:func:`repro.core.jax_pla.masked_step_chunk`) rebuilds the slot's
+  carry row from the stream's own first point, so a recycled slot is
+  structurally incapable of leaking the previous occupant's segmenter
+  state; the codec geometry is fresh too (a new per-slot
+  :class:`~repro.core.protocol_engine.ProtocolEmitter` per admission).
+- **step** pushes one ``(S_pad, n)`` tick plane with per-slot valid
+  lengths; the jit shape never changes with churn (empty slots ride
+  along as length-0 rows with ε = :data:`INACTIVE_EPS`).
+- **evict** force-closes the slot's trailing run on device and drains
+  the slot's wire emitter; the returned bytes are bit-identical to the
+  offline :func:`~repro.core.protocol_engine.encode_batch` of the
+  stream's own data (pinned in tests/test_serving.py).
+
+Wire framing is per-stream and stream-local (position 0 = the stream's
+first point), so slot placement and tick phasing leave no trace in the
+bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import jax_pla
+from repro.core.evaluate import METHOD_KNOT_KINDS
+from repro.core.protocol_engine import ProtocolEmitter
+
+__all__ = ["INACTIVE_EPS", "FleetFull", "Slot", "EvictReport",
+           "SlotManager"]
+
+# ε mask for empty slots.  Masked rows never step (their tick lengths
+# are 0), so the value is never read by the math — it exists so a slot
+# dump is self-describing and so a hypothetical stray step could never
+# emit a break.  Largest finite f32 below the engine's _BIG sentinel.
+INACTIVE_EPS = 3.0e38
+
+
+class FleetFull(RuntimeError):
+    """Admission refused: every slot is occupied."""
+
+
+@dataclasses.dataclass
+class Slot:
+    """Host bookkeeping for one padded slot."""
+
+    index: int                          # global row in the slot plane
+    stream_id: Optional[str] = None     # None = free
+    generation: int = 0                 # bumped at every admission
+    points: int = 0                     # consumed since admission
+    emitted: int = 0                    # event columns fed to the emitter
+    nbytes: int = 0                     # wire bytes emitted since admission
+    emitter: Optional[ProtocolEmitter] = None
+
+    @property
+    def live(self) -> bool:
+        return self.stream_id is not None
+
+
+@dataclasses.dataclass
+class EvictReport:
+    """Outcome of closing a stream: identity tags plus the tail bytes."""
+
+    stream_id: str
+    slot: int
+    generation: int
+    points: int
+    nbytes: int           # total wire bytes over the stream's lifetime
+    tail: bytes           # bytes produced by the close itself
+
+
+class SlotManager:
+    """Padded per-device slot plane over the masked streaming engine.
+
+    ``capacity`` is rounded up to a multiple of ``len(devices)`` (the
+    padded-slot answer to ``_check_shards``: quiet rows are cheap, so the
+    plane always shards evenly).  Deferred methods are rejected by
+    :func:`~repro.core.jax_pla.masked_init_state`.
+    """
+
+    def __init__(self, method: str = "linear",
+                 protocol: str = "singlestream", *,
+                 capacity: int = 8,
+                 devices: Optional[Sequence] = None,
+                 eps0: float = 1.0, max_run: int = 256,
+                 window: Optional[int] = None,
+                 knot_kind: Optional[str] = None,
+                 burst_cap: int = 127, dtype=jnp.float32):
+        if capacity <= 0:
+            raise ValueError("capacity must be positive")
+        self.method = method
+        self.protocol = protocol
+        self.knot_kind = knot_kind or METHOD_KNOT_KINDS.get(method,
+                                                            "disjoint")
+        self.max_run = max_run
+        self.burst_cap = burst_cap
+        self.eps0 = float(eps0)
+        self.dtype = dtype
+        self.devices = list(devices) if devices is not None \
+            else list(jax.devices())
+        d = len(self.devices)
+        self.rows_per_shard = -(-capacity // d)
+        self.capacity = self.rows_per_shard * d          # padded
+        self._eps = np.full((self.capacity,), INACTIVE_EPS, np.float32)
+        self._states = []
+        for dev in self.devices:
+            st = jax_pla.masked_init_state(
+                method, self.rows_per_shard,
+                self._eps[:self.rows_per_shard], max_run=max_run,
+                window=window, dtype=dtype)
+            moved = jax.device_put(
+                (st.carry, st.started, st.pos, st.eps), dev)
+            self._states.append(dataclasses.replace(
+                st, carry=moved[0], started=moved[1], pos=moved[2],
+                eps=moved[3]))
+        self.slots: List[Slot] = [Slot(index=i)
+                                  for i in range(self.capacity)]
+        self._free: List[int] = list(range(self.capacity - 1, -1, -1))
+        self._by_stream: Dict[str, int] = {}
+        self.total_points = 0
+        self.total_bytes = 0
+
+    # -- admission / eviction ----------------------------------------------
+
+    def admit(self, stream_id: str, eps: Optional[float] = None) -> Slot:
+        """Bind ``stream_id`` to a free slot (LIFO — slots recycle hot)."""
+        if stream_id in self._by_stream:
+            raise ValueError(f"stream {stream_id!r} is already admitted")
+        if not self._free:
+            raise FleetFull(
+                f"all {self.capacity} slots occupied; evict a stream or "
+                f"grow the plane")
+        i = self._free.pop()
+        slot = self.slots[i]
+        slot.stream_id = stream_id
+        slot.generation += 1
+        slot.points = 0
+        slot.emitted = 0
+        slot.nbytes = 0
+        slot.emitter = ProtocolEmitter(self.protocol, 1,
+                                       knot_kind=self.knot_kind,
+                                       burst_cap=self.burst_cap)
+        self._by_stream[stream_id] = i
+        self._set_row_eps(i, self.eps0 if eps is None else float(eps))
+        return slot
+
+    def evict(self, stream_id: str) -> EvictReport:
+        """Close the stream: flush its carry row and drain its emitter."""
+        i = self._by_stream.pop(stream_id, None)
+        if i is None:
+            raise KeyError(f"stream {stream_id!r} is not admitted")
+        slot = self.slots[i]
+        d, r = divmod(i, self.rows_per_shard)
+        mask = np.zeros((self.rows_per_shard,), bool)
+        mask[r] = True
+        self._states[d], (ev, pos, a_f, v_f) = jax_pla.masked_flush_rows(
+            self._states[d], mask)
+        tail = b""
+        if slot.points > 0:
+            assert bool(np.asarray(ev)[r])
+            tail = self._feed_slot(
+                slot, np.asarray(pos)[r:r + 1, None],
+                np.asarray(a_f)[r:r + 1, None],
+                np.asarray(v_f)[r:r + 1, None],
+                np.ones((1, 1), bool), None)
+            tail += b"".join(self._blob(p) for p in slot.emitter.flush())
+            slot.nbytes += len(tail)
+            self.total_bytes += len(tail)
+        rep = EvictReport(stream_id=stream_id, slot=i,
+                          generation=slot.generation, points=slot.points,
+                          nbytes=slot.nbytes, tail=tail)
+        slot.stream_id = None
+        slot.emitter = None
+        self._set_row_eps(i, INACTIVE_EPS)
+        self._free.append(i)
+        return rep
+
+    # -- ε plane -----------------------------------------------------------
+
+    @property
+    def eps(self) -> np.ndarray:
+        """Current per-slot ε plane (inactive rows = INACTIVE_EPS)."""
+        return self._eps.copy()
+
+    def live_mask(self) -> np.ndarray:
+        return np.asarray([s.live for s in self.slots], bool)
+
+    def _set_row_eps(self, i: int, value: float) -> None:
+        self._eps[i] = value
+        d, r = divmod(i, self.rows_per_shard)
+        self._push_shard_eps(d)
+
+    def set_eps(self, eps) -> None:
+        """Retune the live rows' ε (traced swap — no recompilation).
+
+        ``eps`` is a ``(capacity,)`` vector; entries of free slots are
+        ignored and forced back to :data:`INACTIVE_EPS`."""
+        eps = np.asarray(eps, np.float32)
+        if eps.shape != (self.capacity,):
+            raise ValueError(f"eps must be ({self.capacity},); "
+                             f"got {eps.shape}")
+        live = self.live_mask()
+        self._eps = np.where(live, eps, INACTIVE_EPS).astype(np.float32)
+        for d in range(len(self.devices)):
+            self._push_shard_eps(d)
+
+    def _push_shard_eps(self, d: int) -> None:
+        lo = d * self.rows_per_shard
+        row = jax.device_put(
+            jnp.asarray(self._eps[lo:lo + self.rows_per_shard]),
+            self.devices[d])
+        self._states[d] = jax_pla.masked_set_eps(self._states[d], row)
+
+    # -- tick stepping -------------------------------------------------------
+
+    def step(self, plane, lengths) -> List[Tuple[str, int, bytes]]:
+        """Consume one ``(capacity, n)`` tick plane.
+
+        ``lengths[i]`` valid points for slot ``i`` (0 for free slots).
+        Returns ``(stream_id, generation, wire_bytes)`` per slot that
+        produced bytes this tick.  Shard launches are all dispatched
+        before any host packing blocks on their results."""
+        plane = np.asarray(plane, np.float32)
+        lengths = np.asarray(lengths, np.int64)
+        if plane.ndim != 2 or plane.shape[0] != self.capacity:
+            raise ValueError(f"plane must be ({self.capacity}, n); "
+                             f"got {plane.shape}")
+        if lengths.shape != (self.capacity,):
+            raise ValueError(f"lengths must be ({self.capacity},)")
+        free = ~self.live_mask()
+        if (lengths[free] > 0).any():
+            raise ValueError("data offered to a free slot")
+        R = self.rows_per_shard
+        outs: Dict[int, jax_pla.MaskedEvents] = {}
+        for d, dev in enumerate(self.devices):
+            rows = slice(d * R, (d + 1) * R)
+            if lengths[rows].max(initial=0) == 0:
+                continue
+            shard_y = jax.device_put(jnp.asarray(plane[rows]), dev)
+            self._states[d], outs[d] = jax_pla.masked_step_chunk(
+                self._states[d], shard_y, lengths[rows])
+        wire: List[Tuple[str, int, bytes]] = []
+        for d, out in outs.items():
+            ev = np.asarray(out.ev)
+            pos = np.asarray(out.pos)
+            a = np.asarray(out.a)
+            v = np.asarray(out.v)
+            for r in range(R):
+                i = d * R + r
+                c = int(lengths[i])
+                if c == 0:
+                    continue
+                slot = self.slots[i]
+                js = np.flatnonzero(ev[r])
+                blob = self._feed_slot(slot, pos[r:r + 1, js],
+                                       a[r:r + 1, js], v[r:r + 1, js],
+                                       np.ones((1, js.size), bool),
+                                       plane[i, :c][None])
+                slot.points += c
+                self.total_points += c
+                if blob:
+                    slot.nbytes += len(blob)
+                    self.total_bytes += len(blob)
+                    wire.append((slot.stream_id, slot.generation, blob))
+        return wire
+
+    def _feed_slot(self, slot: Slot, pos, a, v, ev, values) -> bytes:
+        """Feed one slot's new events/values to its wire emitter.
+
+        Events arrive position-tagged (row-local); the emitter wants
+        aligned columns, so they are scattered onto the contiguous span
+        of newly finalized positions ``[slot.emitted, frontier)``.
+        """
+        c = 0 if values is None else values.shape[1]
+        # Positions < frontier are finalized: the engine emits events for
+        # local position p-1 when consuming p (the close event for p-1
+        # arrives via evict's forced flush, where the frontier is points).
+        frontier = slot.points + c - 1 if values is not None \
+            else slot.points
+        w = max(frontier - slot.emitted, 0)
+        events = None
+        if w > 0:
+            brk = np.zeros((1, w), bool)
+            A = np.zeros((1, w), np.float32)
+            V = np.zeros((1, w), np.float32)
+            cols = np.asarray(pos)[ev] - slot.emitted
+            assert (cols >= 0).all() and (cols < w).all()
+            brk[0, cols] = True
+            A[0, cols] = np.asarray(a)[ev]
+            V[0, cols] = np.asarray(v)[ev]
+            events = jax_pla.SegmentOutput(brk, A, V)
+            slot.emitted += w
+        elif not np.asarray(ev).any() and c == 0:
+            return b""
+        parts = slot.emitter.step_chunk(events, values)
+        return self._blob(parts[0]) if parts else b""
+
+    @staticmethod
+    def _blob(part) -> bytes:
+        """Flatten a per-stream emitter return (bytes, or a pair of
+        byte strings for the twostreams protocol) into one blob."""
+        return part if isinstance(part, bytes) else b"".join(part)

@@ -71,7 +71,7 @@ from repro.core.jax_pla import SegmentOutput
 
 __all__ = ["FLEET_AXIS", "FleetPointMetrics", "FleetStream", "FleetWire",
            "fleet_mesh", "fleet_shard", "fleet_point_metrics",
-           "fleet_encode", "fleet_wire"]
+           "fleet_encode", "fleet_wire", "pad_to_mesh"]
 
 FLEET_AXIS = "streams"
 
@@ -113,9 +113,33 @@ def _mesh_axes(mesh: jax.sharding.Mesh) -> Tuple[Optional[Tuple[str, ...]],
 
 def _check_shards(S: int, d: int) -> None:
     if S % d:
+        pad = -S % d
         raise ValueError(
             f"{S} streams do not shard evenly over {d} devices — pad the "
-            f"batch (quiet rows are cheap) or resize the mesh")
+            f"batch with {pad} quiet row(s) (see pad_to_mesh(), quiet "
+            f"rows are cheap), resize the mesh, or let the serving layer "
+            f"manage padding for you: repro.serving.SlotManager rounds "
+            f"its slot plane up to a multiple of the device count and "
+            f"masks the padding rows with eps=INACTIVE_EPS")
+
+
+def pad_to_mesh(y, mesh: jax.sharding.Mesh):
+    """Pad ``(S, T)`` rows up to a multiple of the mesh's device count.
+
+    Returns ``(y_padded, S)`` where the ``y_padded.shape[0] - S`` extra
+    rows are zeros — quiet streams that segment into one run each and
+    cost a constant handful of wire bytes.  Callers slice per-stream
+    outputs back to ``[:S]``; fleet byte totals include the (tiny,
+    deterministic) padding contribution, so compare like against like.
+    """
+    _, d = _mesh_axes(mesh)
+    y = jnp.asarray(y, jnp.float32)
+    S = y.shape[0]
+    pad = -S % d
+    if pad:
+        y = jnp.concatenate(
+            [y, jnp.zeros((pad, y.shape[1]), y.dtype)], axis=0)
+    return y, S
 
 
 def fleet_shard(y, mesh: jax.sharding.Mesh) -> jax.Array:

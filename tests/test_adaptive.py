@@ -55,3 +55,70 @@ def test_adaptive_stationary_stream_converges():
     out = ctl.run(ts, ys)
     # converges: the last windows sit near the target
     assert abs(np.median(out["window_ratios"][-4:]) - 0.1) < 0.06
+
+
+# ---------------------------------------------------------------------------
+# Streaming controller accounting (ISSUE 9 bugfix sweep)
+# ---------------------------------------------------------------------------
+
+def test_streaming_finish_routes_flush_through_accounting():
+    """The trailing flush's bytes land in stream_bytes: the accumulated
+    total equals an offline recount over the full concatenated break
+    plane (previously every stream's final segment was missing)."""
+    from repro.core.adaptive import StreamingAdaptiveEps
+
+    rng = np.random.default_rng(0)
+    ys = np.cumsum(rng.normal(0, 0.5, 2000)).astype(np.float32)
+    ctl = StreamingAdaptiveEps(target_ratio=0.2, eps0=0.1, max_run=64)
+    outs = [ctl.push(ys[None, w0:w0 + 512]) for w0 in range(0, 2000, 512)]
+    outs.append(ctl.finish())
+    breaks = np.concatenate([np.asarray(o.breaks) for o in outs], axis=1)
+    total, covered, prev = StreamingAdaptiveEps._segment_bytes(
+        breaks[0], -1)
+    assert ctl.stream_bytes[0] == total
+    assert ctl.stream_points[0] == covered == 2000
+    assert prev == 1999  # the flush finalized the last point
+
+
+def test_streaming_run_total_matches_offline_recount():
+    from repro.core.adaptive import StreamingAdaptiveEps
+    from repro.core.types import VALUE_BYTES
+
+    rng = np.random.default_rng(3)
+    ys = np.cumsum(rng.normal(0, 0.5, 3000)).astype(np.float32)
+    ctl = StreamingAdaptiveEps(target_ratio=0.15, eps0=0.05)
+    out = ctl.run(ys, chunk=512)
+    assert out["overall_ratio"] == ctl.stream_bytes[0] / (VALUE_BYTES
+                                                          * 3000)
+    assert ctl.stream_points[0] == 3000
+
+
+def test_segment_bytes_batch_equals_scalar():
+    """The vectorized (S, w) accounting is bit-identical to the per-row
+    scalar reference, including chunk-boundary carry of ``prev``."""
+    from repro.core.adaptive import StreamingAdaptiveEps
+
+    rng = np.random.default_rng(7)
+    for _ in range(50):
+        S = int(rng.integers(1, 6))
+        prev = np.full(S, -1, np.int64)
+        offset = 0
+        for _chunk in range(int(rng.integers(1, 5))):
+            w = int(rng.integers(1, 40))
+            brk = rng.random((S, w)) < rng.uniform(0, 0.5)
+            nb, cov, nprev = StreamingAdaptiveEps._segment_bytes_batch(
+                brk, prev, offset)
+            for s in range(S):
+                t, c, p = StreamingAdaptiveEps._segment_bytes(
+                    brk[s], int(prev[s]), offset)
+                assert nb[s] == t and cov[s] == c and nprev[s] == p
+            prev = nprev
+            offset += w
+
+
+def test_target_bytes_per_point_budget_api():
+    from repro.core.adaptive import StreamingAdaptiveEps
+    from repro.core.types import VALUE_BYTES
+
+    ctl = StreamingAdaptiveEps(target_bytes_per_point=2.0)
+    assert ctl.target_ratio == 2.0 / VALUE_BYTES

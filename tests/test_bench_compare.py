@@ -1,0 +1,60 @@
+"""Benchmark gate defaults: glob discovery, disappeared-baseline warning.
+
+The artifact list used to be a hardcoded tuple — a benchmark added in
+the same commit as its artifact was silently skipped by the gate, and a
+bench that *stopped* writing its artifact vanished without a word.  Now
+defaults come from globbing ``BENCH_*.json`` (working tree ∪ baseline
+ref) and a baseline with no working-tree counterpart warns loudly.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+
+import bench_compare  # noqa: E402
+
+
+def test_default_artifacts_glob_picks_up_new_files(tmp_path, monkeypatch):
+    repo = tmp_path
+    subprocess.run(["git", "init", "-q"], cwd=repo, check=True)
+    subprocess.run(["git", "-c", "user.email=t@t", "-c", "user.name=t",
+                    "commit", "-q", "--allow-empty", "-m", "seed"],
+                   cwd=repo, check=True)
+    (repo / "BENCH_new.json").write_text(
+        json.dumps({"x": {"points_per_s": 10.0}}))
+    monkeypatch.setattr(bench_compare, "REPO", str(repo))
+    files = bench_compare.default_artifacts("HEAD")
+    assert files == ["BENCH_new.json"]   # uncommitted, found by glob
+    # a brand-new artifact has no baseline: reported as skipped, exit 0
+    assert bench_compare.main(["bench_compare"]) == 0
+
+
+def test_disappeared_baseline_warns(tmp_path, monkeypatch, capsys):
+    repo = tmp_path
+    subprocess.run(["git", "init", "-q"], cwd=repo, check=True)
+    (repo / "BENCH_gone.json").write_text(
+        json.dumps({"x": {"points_per_s": 10.0}}))
+    subprocess.run(["git", "add", "BENCH_gone.json"], cwd=repo, check=True)
+    subprocess.run(["git", "-c", "user.email=t@t", "-c", "user.name=t",
+                    "commit", "-q", "-m", "baseline"], cwd=repo, check=True)
+    (repo / "BENCH_gone.json").unlink()
+    monkeypatch.setattr(bench_compare, "REPO", str(repo))
+    assert bench_compare.default_artifacts("HEAD") == ["BENCH_gone.json"]
+    # default mode: warn but do not fail (the bench may be gated off)
+    assert bench_compare.main(["bench_compare"]) == 0
+    err = capsys.readouterr().err
+    assert "missing from the working tree" in err
+    # explicitly requested: hard failure
+    assert bench_compare.main(["bench_compare", "BENCH_gone.json"]) == 1
+
+
+def test_repo_defaults_cover_committed_artifacts():
+    files = bench_compare.default_artifacts("HEAD")
+    assert "BENCH_fleet.json" in files
+    assert all(f.startswith("BENCH_") and f.endswith(".json")
+               for f in files)

@@ -27,6 +27,7 @@ non-zero if any shared metric regresses past the threshold.
 from __future__ import annotations
 
 import argparse
+import glob
 import json
 import os
 import statistics
@@ -34,9 +35,27 @@ import subprocess
 import sys
 
 REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
-ARTIFACTS = ("BENCH_streaming.json", "BENCH_protocols.json",
-             "BENCH_paper.json", "BENCH_fleet.json")
 RATE_KEYS = ("points_per_s", "bytes_per_s")
+
+
+def default_artifacts(ref: str):
+    """Every ``BENCH_*.json`` in the repo root or committed at ``ref``.
+
+    Globbing (rather than a hardcoded tuple) means a benchmark added in
+    this very commit is picked up without editing this file.  Baselines
+    that exist at ``ref`` but have *disappeared* from the working tree
+    are still returned so the main loop can warn about them — a bench
+    that silently stops running is itself a regression.
+    """
+    present = {os.path.basename(p)
+               for p in glob.glob(os.path.join(REPO, "BENCH_*.json"))}
+    proc = subprocess.run(["git", "ls-tree", "--name-only", ref],
+                          cwd=REPO, capture_output=True, text=True)
+    committed = set()
+    if proc.returncode == 0:
+        committed = {n for n in proc.stdout.split()
+                     if n.startswith("BENCH_") and n.endswith(".json")}
+    return sorted(present | committed)
 
 
 def _rate_leaves(node, path=()):
@@ -73,8 +92,9 @@ def compare_file(base: dict, new: dict, threshold: float, mode: str):
 def main(argv) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("files", nargs="*", default=None,
-                    help="artifacts to check (default: every committed "
-                         "BENCH_*.json present in the working tree)")
+                    help="artifacts to check (default: glob BENCH_*.json "
+                         "in the repo root, plus any committed at the "
+                         "baseline ref)")
     ap.add_argument("--baseline-ref", default="HEAD",
                     help="git ref holding the baseline JSONs (default "
                          "HEAD)")
@@ -84,15 +104,19 @@ def main(argv) -> int:
                     default="relative")
     args = ap.parse_args(argv[1:])
 
-    files = args.files or [f for f in ARTIFACTS
-                           if os.path.exists(os.path.join(REPO, f))]
+    files = args.files or default_artifacts(args.baseline_ref)
     failed = False
     for name in files:
         new_path = os.path.join(REPO, name)
         if not os.path.exists(new_path):
-            print(f"bench-compare: {name}: missing from working tree",
+            # A baseline committed at --baseline-ref with no working-tree
+            # counterpart: the bench disappeared or stopped writing its
+            # artifact.  Warn loudly but only fail if explicitly listed.
+            print(f"bench-compare: {name}: baseline exists at "
+                  f"{args.baseline_ref} but artifact is missing from the "
+                  f"working tree — did the bench stop running?",
                   file=sys.stderr)
-            failed = True
+            failed = bool(args.files) or failed
             continue
         base = _baseline(name, args.baseline_ref)
         if base is None:
