@@ -75,7 +75,8 @@ def _drive(loop, rng, ticks, budget_target):
         nbytes = 0
         for _ in range(int(len(live) * CHURN)):
             gone = live.pop(int(rng.integers(len(live))))
-            nbytes += len(loop.evict(gone).tail)
+            rep = loop.evict(gone)
+            nbytes += len(rep.tail) + sum(len(b) for _, _, b in rep.wire)
             fresh()
         for sid in live:
             loop.offer(sid, np.cumsum(

@@ -329,7 +329,8 @@ def allocate_eps_budget(eps, nbytes, npoints, budget_bytes: float, *,
     and receive no share.
 
     Returns ``(new_eps, targets)`` — both ``(S,)`` float64; ``targets``
-    holds the byte share each live stream was allocated this round.
+    holds the byte share each live stream was last allocated (a pinned
+    stream keeps the share from the round it hit its bound).
     """
     eps0 = np.asarray(eps, np.float64)
     nbytes = np.asarray(nbytes, np.float64)
@@ -346,12 +347,15 @@ def allocate_eps_budget(eps, nbytes, npoints, budget_bytes: float, *,
             break
         pool = max(float(budget_bytes) - float(nbytes[live & pinned].sum()),
                    0.0)
-        target = np.zeros_like(eps0)
         target[free] = pool * npoints[free] / npoints[free].sum()
         err = np.where(free, nbytes / np.maximum(target, 1e-300), 1.0)
         step = np.clip(err ** alpha, 1.0 / max_step, max_step)
+        # Only the still-free rows move each round; a row pinned in an
+        # earlier round keeps the clamped value from the round it hit the
+        # bound (rebuilding from eps0 would undo the very move whose
+        # measured bytes are charged against the pool).
         new_eps = np.where(free & (np.abs(err - 1.0) > deadband),
-                           np.clip(eps0 * step, eps_min, eps_max), eps0)
+                           np.clip(eps0 * step, eps_min, eps_max), new_eps)
         # A stream pushed into a bound can't close its share gap — pin
         # it, charge its measured bytes, redistribute what's left.
         hit = free & (((new_eps >= eps_max) & (err > 1.0)) |

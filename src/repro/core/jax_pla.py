@@ -1866,7 +1866,11 @@ class MaskedSegmenterState:
     (zero rows before first data) so that admission/eviction never
     changes the jit shape; ``started`` marks rows with >= 1 consumed
     point and ``pos`` counts each row's consumed points since its last
-    reset."""
+    reset.  ``pos_host`` mirrors ``pos`` on the host — it is fully
+    determined by the lengths fed so far, and lets the per-chunk
+    ``MAX_STREAM_T`` validation run without materializing the device
+    value (which would block on the row's previous launch and serialize
+    multi-shard dispatch)."""
 
     method: str
     n_streams: int
@@ -1877,6 +1881,7 @@ class MaskedSegmenterState:
     carry: Any
     started: jax.Array        # (S,) bool
     pos: jax.Array            # (S,) int32
+    pos_host: np.ndarray      # (S,) int64, host twin of ``pos``
 
 
 def _row_mask(mask, leaf):
@@ -1910,7 +1915,8 @@ def masked_init_state(method: str, n_streams: int, eps, *,
         method=method, n_streams=n_streams, max_run=max_run, window=W,
         dtype=dtype, eps=eps, carry=carry,
         started=jnp.zeros((n_streams,), bool),
-        pos=jnp.zeros((n_streams,), jnp.int32))
+        pos=jnp.zeros((n_streams,), jnp.int32),
+        pos_host=np.zeros((n_streams,), np.int64))
 
 
 @functools.partial(jax.jit, static_argnames=("method", "max_run", "window"))
@@ -1994,7 +2000,10 @@ def masked_step_chunk(state: MaskedSegmenterState, y_chunk, lengths
     n = y.shape[1]
     if lengths_np.min() < 0 or lengths_np.max() > n:
         raise ValueError(f"lengths must lie in [0, {n}]")
-    pos_np = np.asarray(state.pos, np.int64)
+    # Validate against the host mirror — np.asarray(state.pos) would
+    # synchronize on this shard's previous launch and serialize the
+    # caller's multi-shard dispatch loop (SlotManager.step's contract).
+    pos_np = state.pos_host
     if (pos_np + lengths_np).max() > MAX_STREAM_T:
         raise ValueError(
             f"a row would reach {(pos_np + lengths_np).max()} points "
@@ -2021,7 +2030,8 @@ def masked_step_chunk(state: MaskedSegmenterState, y_chunk, lengths
                              for parts in zip(*outs)))
     else:
         out = outs[0]
-    new = dataclasses.replace(state, carry=carry, started=started, pos=pos)
+    new = dataclasses.replace(state, carry=carry, started=started, pos=pos,
+                              pos_host=pos_np + lengths_np)
     return new, out
 
 
@@ -2033,11 +2043,13 @@ def masked_flush_rows(state: MaskedSegmenterState, rows
     rows zeroed and never-started) and one event column ``(ev, pos, a,
     v)``: a forced break at each closed row's last local position (rows
     that never consumed a point emit nothing)."""
-    mask = jnp.asarray(np.asarray(rows, bool))
+    mask_np = np.asarray(rows, bool)
+    mask = jnp.asarray(mask_np)
     carry, started, pos, evs = _masked_flush_rows(
         state.method, state.max_run, state.window, state.carry,
         state.started, state.pos, state.eps, mask)
-    new = dataclasses.replace(state, carry=carry, started=started, pos=pos)
+    new = dataclasses.replace(state, carry=carry, started=started, pos=pos,
+                              pos_host=np.where(mask_np, 0, state.pos_host))
     return new, evs
 
 

@@ -121,7 +121,8 @@ def serve_fleet(args) -> None:
         for _ in range(int(len(live) * args.churn)):
             gone = live.pop(int(rng.integers(len(live))))
             rep = loop.evict(gone)
-            total_bytes += len(rep.tail)
+            total_bytes += len(rep.tail) \
+                + sum(len(b) for _, _, b in rep.wire)
             fresh(f"sensor-{n_admitted}")
             live.append(f"sensor-{n_admitted}")
             n_admitted += 1

@@ -80,6 +80,12 @@ class EvictReport:
     points: int
     nbytes: int           # total wire bytes over the stream's lifetime
     tail: bytes           # bytes produced by the close itself
+    # Blobs emitted by the drain ticks ServeLoop.evict runs before the
+    # close — (stream_id, generation, blob) tuples, possibly for *other*
+    # streams whose queues drained alongside.  Empty for a bare
+    # SlotManager.evict (no queues to drain at this layer).
+    wire: List[Tuple[str, int, bytes]] = dataclasses.field(
+        default_factory=list)
 
 
 class SlotManager:

@@ -112,16 +112,21 @@ class ServeLoop:
 
     def evict(self, stream_id: str, *, drain: bool = True) -> EvictReport:
         """Close a stream.  With ``drain`` (default) queued points are
-        pushed through first, so the wire covers everything accepted;
+        pushed through first, so the wire covers everything accepted:
+        the blobs those drain ticks emit — for this stream *and* for any
+        other stream whose queue drained alongside — come back on
+        ``EvictReport.wire``, with ``tail`` holding the close bytes.
         ``drain=False`` discards the backlog."""
         i = self.slots._by_stream.get(stream_id)
         if i is None:
             raise KeyError(f"stream {stream_id!r} is not admitted")
+        drained: List[Tuple[str, int, bytes]] = []
         if drain:
             while self._queues[i].n:
-                self.tick()
+                drained.extend(self.tick().wire)
         self._queues.pop(i, None)
         rep = self.slots.evict(stream_id)
+        rep.wire = drained
         if self.budget is not None:
             rows = np.zeros(self.slots.capacity, bool)
             rows[i] = True

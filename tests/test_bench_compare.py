@@ -1,10 +1,13 @@
-"""Benchmark gate defaults: glob discovery, disappeared-baseline warning.
+"""Benchmark gate defaults: glob discovery, disappeared-baseline failure.
 
 The artifact list used to be a hardcoded tuple — a benchmark added in
 the same commit as its artifact was silently skipped by the gate, and a
 bench that *stopped* writing its artifact vanished without a word.  Now
 defaults come from globbing ``BENCH_*.json`` (working tree ∪ baseline
-ref) and a baseline with no working-tree counterpart warns loudly.
+ref) and a baseline with no working-tree counterpart fails the gate
+(CI runs every bench before comparing, so a missing artifact means one
+silently stopped writing; ``--allow-missing`` downgrades it to a
+warning for partial local runs).
 """
 
 import json
@@ -34,7 +37,7 @@ def test_default_artifacts_glob_picks_up_new_files(tmp_path, monkeypatch):
     assert bench_compare.main(["bench_compare"]) == 0
 
 
-def test_disappeared_baseline_warns(tmp_path, monkeypatch, capsys):
+def test_disappeared_baseline_fails(tmp_path, monkeypatch, capsys):
     repo = tmp_path
     subprocess.run(["git", "init", "-q"], cwd=repo, check=True)
     (repo / "BENCH_gone.json").write_text(
@@ -45,12 +48,16 @@ def test_disappeared_baseline_warns(tmp_path, monkeypatch, capsys):
     (repo / "BENCH_gone.json").unlink()
     monkeypatch.setattr(bench_compare, "REPO", str(repo))
     assert bench_compare.default_artifacts("HEAD") == ["BENCH_gone.json"]
-    # default mode: warn but do not fail (the bench may be gated off)
-    assert bench_compare.main(["bench_compare"]) == 0
+    # default (the CI path): a bench that stopped writing its artifact
+    # is itself a regression — hard failure
+    assert bench_compare.main(["bench_compare"]) == 1
     err = capsys.readouterr().err
     assert "missing from the working tree" in err
-    # explicitly requested: hard failure
+    # explicitly listed: still a hard failure
     assert bench_compare.main(["bench_compare", "BENCH_gone.json"]) == 1
+    # opt-in for partial local runs: warn only
+    assert bench_compare.main(["bench_compare", "--allow-missing"]) == 0
+    assert "missing from the working tree" in capsys.readouterr().err
 
 
 def test_repo_defaults_cover_committed_artifacts():

@@ -265,10 +265,39 @@ def test_evict_drains_backlog_by_default():
     for _, _, b in rep0.wire:
         blobs += b
     rep = loop.evict("a")        # drain=True pushes the other 184 points
-    # wire over the whole lifetime == offline encode of everything offered
     assert rep.points == 200
-    lifetime = rep.nbytes
-    assert lifetime == len(_offline_bytes(y))
+    # the drain ticks' blobs are *delivered* on the report, not just
+    # counted: concatenated per-tick wire + tail == the offline encode
+    for sid, _, b in rep.wire:
+        assert sid == "a"
+        blobs += b
+    blobs += rep.tail
+    assert blobs == _offline_bytes(y)
+    assert rep.nbytes == len(blobs)
+
+
+def test_evict_drain_delivers_bystander_wire():
+    """Drain ticks also step other streams with queued data; their blobs
+    must reach the caller via EvictReport.wire, not vanish."""
+    rng = np.random.default_rng(13)
+    ya, yb = _walk(rng, 180), _walk(rng, 180)
+    loop = ServeLoop(SlotManager("linear", capacity=2, eps0=EPS),
+                     tick_width=16, queue_cap=1024)
+    loop.admit("a")
+    loop.admit("b")
+    loop.offer("a", ya)
+    loop.offer("b", yb)
+    got = {"a": b"", "b": b""}
+    rep = loop.evict("a")             # drains both queues tick by tick
+    for sid, _, b in rep.wire:
+        got[sid] += b
+    got["a"] += rep.tail
+    assert got["a"] == _offline_bytes(ya)
+    assert loop.backlog().sum() == 0  # b's queue drained alongside
+    rep_b = loop.evict("b")
+    assert rep_b.wire == []           # nothing left to drain
+    got["b"] += rep_b.tail
+    assert got["b"] == _offline_bytes(yb)
 
 
 # ---------------------------------------------------------------------------
@@ -298,6 +327,21 @@ def test_budget_water_filling_redistributes_pinned_share():
     # (coarser, fewer bytes) by the full clamped step.
     assert new_eps[0] == 1e6
     assert new_eps[1] == 8.0    # max_step, loosening to shed bytes
+
+
+def test_budget_pinned_rows_keep_their_bound():
+    """A stream pinned at a bound in round 1 must *stay* at that bound
+    through later redistribution rounds — rebuilding from eps0 each
+    round used to snap it back while its bytes were still charged
+    against the pool (ε plane vs pool accounting disagreement)."""
+    from repro.core.adaptive import allocate_eps_budget
+    eps = np.ones(3)
+    # row 0 is 10x over its share -> clamps at eps_max in round 1 and
+    # pins; rounds 2+ redistribute the (exhausted) pool over rows 1-2.
+    new_eps, _ = allocate_eps_budget(
+        eps, [100.0, 1.0, 1.0], [100.0, 100.0, 100.0], 30.0,
+        eps_max=4.0, max_step=8.0, rounds=3)
+    assert new_eps[0] == 4.0    # clamped value survives round 2
 
 
 def test_budget_converges_within_band():
@@ -330,6 +374,28 @@ def test_budget_resets_rate_history_on_recycle():
     assert budget._ema_bytes is not None and budget._ema_bytes[0] == 50.0
     budget.reset_rows([True, False])
     assert budget._ema_bytes[0] == 0.0 and budget._ema_bytes[1] == 50.0
+
+
+# ---------------------------------------------------------------------------
+# Masked engine host bookkeeping
+# ---------------------------------------------------------------------------
+
+def test_masked_pos_host_mirrors_device_pos():
+    """The host-side position twin (used so per-chunk validation never
+    synchronizes on the device value) tracks the traced ``pos`` exactly
+    through steps and row flushes."""
+    from repro.core import jax_pla
+    st = jax_pla.masked_init_state("linear", 4, 0.4)
+    rng = np.random.default_rng(3)
+    for lengths in ([3, 0, 7, 5], [0, 2, 1, 0], [8, 8, 0, 8]):
+        y = rng.normal(size=(4, 8)).astype(np.float32)
+        st, _ = jax_pla.masked_step_chunk(st, y,
+                                          np.asarray(lengths, np.int64))
+        np.testing.assert_array_equal(st.pos_host,
+                                      np.asarray(st.pos, np.int64))
+    st, _ = jax_pla.masked_flush_rows(st, [True, False, True, False])
+    np.testing.assert_array_equal(st.pos_host,
+                                  np.asarray(st.pos, np.int64))
 
 
 # ---------------------------------------------------------------------------

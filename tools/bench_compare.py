@@ -44,8 +44,9 @@ def default_artifacts(ref: str):
     Globbing (rather than a hardcoded tuple) means a benchmark added in
     this very commit is picked up without editing this file.  Baselines
     that exist at ``ref`` but have *disappeared* from the working tree
-    are still returned so the main loop can warn about them — a bench
-    that silently stops running is itself a regression.
+    are still returned so the main loop can fail on them — a bench that
+    silently stops running is itself a regression (``--allow-missing``
+    downgrades that to a warning for partial local runs).
     """
     present = {os.path.basename(p)
                for p in glob.glob(os.path.join(REPO, "BENCH_*.json"))}
@@ -102,6 +103,12 @@ def main(argv) -> int:
                     help="max tolerated fractional drop (default 0.25)")
     ap.add_argument("--mode", choices=("relative", "absolute"),
                     default="relative")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="only warn when a baseline committed at "
+                         "--baseline-ref has no working-tree artifact "
+                         "(default: fail — CI runs every bench first, so "
+                         "a missing artifact means one silently stopped "
+                         "writing)")
     args = ap.parse_args(argv[1:])
 
     files = args.files or default_artifacts(args.baseline_ref)
@@ -111,12 +118,13 @@ def main(argv) -> int:
         if not os.path.exists(new_path):
             # A baseline committed at --baseline-ref with no working-tree
             # counterpart: the bench disappeared or stopped writing its
-            # artifact.  Warn loudly but only fail if explicitly listed.
+            # artifact — itself a regression, so it fails unless the
+            # caller opted into partial coverage with --allow-missing.
             print(f"bench-compare: {name}: baseline exists at "
                   f"{args.baseline_ref} but artifact is missing from the "
                   f"working tree — did the bench stop running?",
                   file=sys.stderr)
-            failed = bool(args.files) or failed
+            failed = failed or not args.allow_missing
             continue
         base = _baseline(name, args.baseline_ref)
         if base is None:
