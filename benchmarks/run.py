@@ -10,7 +10,7 @@ import time
 def main() -> None:
     t0 = time.time()
     from . import (figures, fleet_bench, framework_bench, protocol_bench,
-                   serve_bench, streaming_bench)
+                   serve_bench, store_bench, streaming_bench)
 
     csv_rows = []
 
@@ -40,6 +40,7 @@ def main() -> None:
     # the ambient device count; run it standalone for the full curve.
     csv_rows.extend(fleet_bench.fleet_bench())          # -> BENCH_fleet.json
     csv_rows.extend(serve_bench.serve_bench())          # -> BENCH_serve.json
+    csv_rows.extend(store_bench.store_bench())          # -> BENCH_store.json
 
     print("\nname,us_per_call,derived")
     for name, us, derived in csv_rows:

@@ -1,0 +1,153 @@
+"""Segment-store benchmark: ingest rate + indexed query speedup.
+
+The store's reason to exist is answering windowed analytics *without*
+decompressing the archive: a query touches the sparse index, a few
+payload bytes around the window, and a closed-form jit aggregate.  This
+bench pins that claim against the brute-force alternative
+(decompress-then-compute: full descriptor decode + full reconstruction
++ numpy over the window slice):
+
+- **ingest** — wire blobs/s through ``SegmentStore.append`` including
+  incremental parse + index build;
+- **query/indexed** — random 1%-of-stream windows answered via the
+  index (the acceptance bar: ``speedup_small_window >= 5`` vs brute
+  force);
+- **query/brute** — the same windows decompress-then-compute.
+
+Results land in the top-level ``BENCH_store.json``.  ``BENCH_SMOKE=1``
+shrinks the run for CI smoke.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_store.json")
+
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+STREAMS, POINTS, QUERIES = (2, 30_000, 40) if SMOKE else (4, 120_000, 200)
+WINDOW_FRAC = 0.01           # the small-window regime of the bar
+METHOD, PROTOCOL = "linear", "singlestream"
+EPS = 0.3
+KINDS = ("sum", "avg", "min", "max")
+
+
+def _data():
+    rng = np.random.default_rng(0)
+    y = np.cumsum(rng.normal(0, 0.4, (STREAMS, POINTS)),
+                  axis=1).astype(np.float32)
+    return rng, y
+
+
+def _encode(y):
+    import jax.numpy as jnp
+    from repro.core.evaluate import BATCHED_SEGMENTERS, METHOD_KNOT_KINDS
+    from repro.core.protocol_engine import encode_batch
+    from repro.core.protocols import PROTOCOL_CAPS
+
+    seg = BATCHED_SEGMENTERS[METHOD](
+        jnp.asarray(y), jnp.full((STREAMS,), EPS, jnp.float32),
+        max_run=PROTOCOL_CAPS[PROTOCOL] or 256)
+    return encode_batch(seg, y, PROTOCOL,
+                        METHOD_KNOT_KINDS.get(METHOD, "disjoint"))
+
+
+def store_bench():
+    """CSV rows for benchmarks.run + the BENCH_store.json artifact."""
+    from repro.store import SegmentStore
+
+    rng, y = _data()
+    wire = _encode(y)
+    wire_bytes = sum(len(b) for b in wire)
+    report = {
+        "config": {"streams": STREAMS, "points": POINTS,
+                   "queries": QUERIES, "window_frac": WINDOW_FRAC,
+                   "method": METHOD, "protocol": PROTOCOL, "eps": EPS,
+                   "wire_bytes": wire_bytes, "smoke": SMOKE},
+    }
+    rows = []
+
+    # -- ingest: incremental parse + index build over the blobs -----------
+    t0 = time.perf_counter()
+    store = SegmentStore(PROTOCOL, eps=EPS, index_every=32)
+    store.append(wire, close=True)
+    wall = time.perf_counter() - t0
+    report["ingest"] = {
+        "seconds": wall,
+        "points_per_s": STREAMS * POINTS / wall,
+        "bytes_per_s": wire_bytes / wall,
+    }
+    rows.append(("store/ingest", wall * 1e6,
+                 f"{STREAMS * POINTS / wall / 1e6:.2f}Mpts/s"))
+
+    # Shared query plan: random 1% windows, kinds round-robin.
+    w = max(int(POINTS * WINDOW_FRAC), 1)
+    plan = [(KINDS[q % len(KINDS)], q % STREAMS,
+             int(rng.integers(0, POINTS - w)))
+            for q in range(QUERIES)]
+
+    # jit warmup: the aggregate kernels compile once per bucket shape.
+    for kind in KINDS:
+        store.query(kind, [0], 0.0, float(w))
+    store.reset_stats()
+
+    # -- indexed: locate + windowed decode + closed-form aggregate --------
+    t0 = time.perf_counter()
+    answers = [store.query(kind, [s], float(lo), float(lo + w))[0]
+               for kind, s, lo in plan]
+    indexed_wall = time.perf_counter() - t0
+    touched_frac = store.stats["bytes_touched"] \
+        / (QUERIES * wire_bytes / STREAMS)
+    report["indexed"] = {
+        "seconds": indexed_wall,
+        "queries_per_s": QUERIES / indexed_wall,
+        "points_per_s": QUERIES * w / indexed_wall,
+        "mean_window_bytes_frac": touched_frac,
+    }
+    rows.append(("store/query-indexed", indexed_wall / QUERIES * 1e6,
+                 f"{QUERIES / indexed_wall:.0f}q/s "
+                 f"touch {touched_frac:.2%}"))
+
+    # -- brute force: decompress the stream, then numpy the window --------
+    from repro.core.wire_decode import decode_records
+    brute_fns = {"sum": np.sum, "avg": np.mean, "min": np.min,
+                 "max": np.max}
+    t0 = time.perf_counter()
+    brute = []
+    for kind, s, lo in plan:
+        recs = decode_records(wire[s], PROTOCOL)
+        series = recs.reconstruct(0, POINTS, 0.0, 1.0)
+        brute.append(float(brute_fns[kind](series[lo:lo + w])))
+    brute_wall = time.perf_counter() - t0
+    report["brute_force"] = {
+        "seconds": brute_wall,
+        "queries_per_s": QUERIES / brute_wall,
+        "points_per_s": QUERIES * w / brute_wall,
+    }
+    speedup = brute_wall / indexed_wall
+    report["speedup_small_window"] = speedup
+    # The indexed answers must agree with brute force within their own
+    # reported bounds — a fast wrong answer is not a speedup.
+    worst = max(abs(v - b) - e for (v, e), b in zip(answers, brute))
+    report["worst_bound_slack"] = worst
+    assert worst <= 1e-6, f"indexed answer escaped its bound by {worst}"
+    rows.append(("store/query-brute", brute_wall / QUERIES * 1e6,
+                 f"{QUERIES / brute_wall:.0f}q/s "
+                 f"speedup x{speedup:.1f}"))
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    # Run as a module: PYTHONPATH=src python -m benchmarks.store_bench
+    # (BENCH_SMOKE=1 shrinks the sweep).
+    for name, us, derived in store_bench():
+        print(f"{name},{us:.1f},{derived}")
+    print(f"[wrote {os.path.abspath(OUT_PATH)}]")

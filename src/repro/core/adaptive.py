@@ -309,7 +309,8 @@ class StreamingAdaptiveEps:
 def allocate_eps_budget(eps, nbytes, npoints, budget_bytes: float, *,
                         eps_min: float = 1e-6, eps_max: float = 1e6,
                         alpha: float = 1.0, max_step: float = 8.0,
-                        deadband: float = 0.1, rounds: int = 3
+                        deadband: float = 0.1, rounds: int = 3,
+                        overshoot: float = 0.0
                         ) -> Tuple[np.ndarray, np.ndarray]:
     """Fleet-wide ε allocation: water-filling in log-ε space.
 
@@ -328,6 +329,17 @@ def allocate_eps_budget(eps, nbytes, npoints, budget_bytes: float, *,
     ``npoints == 0`` (empty slots, just-admitted streams) keep their ε
     and receive no share.
 
+    The byte response ``b(log eps)`` is convex (empirically close to
+    ``exp(-beta * log eps + c)``), so symmetric log-ε steps around the
+    target are *asymmetric in bytes*: the controller's steady-state
+    dither inflates mean egress above the budget (Jensen's inequality).
+    ``overshoot`` is the measured fractional excess of realized bytes
+    over the pool (``realized/pool - 1``); the pool is deflated by
+    ``1 + overshoot`` so the dither's mean lands on the true budget.
+    Callers that track steady state (:class:`repro.serving.budget.
+    GlobalEpsBudget`) integrate it; the default 0 is the uncompensated
+    allocator.
+
     Returns ``(new_eps, targets)`` — both ``(S,)`` float64; ``targets``
     holds the byte share each live stream was last allocated (a pinned
     stream keeps the share from the round it hit its bound).
@@ -335,6 +347,8 @@ def allocate_eps_budget(eps, nbytes, npoints, budget_bytes: float, *,
     eps0 = np.asarray(eps, np.float64)
     nbytes = np.asarray(nbytes, np.float64)
     npoints = np.asarray(npoints, np.float64)
+    budget_bytes = float(budget_bytes) \
+        / (1.0 + float(np.clip(overshoot, -0.5, 4.0)))
     live = npoints > 0
     new_eps = eps0.copy()
     target = np.zeros_like(eps0)

@@ -58,6 +58,7 @@ import numpy as np
 
 from .jax_pla import SegmentOutput
 from .metrics import BatchedPointMetrics
+from .wire_decode import WireRecords, decode_records
 from .types import (COUNTER_BYTES, DisjointKnot, JointKnot, Line,
                     MethodOutput, Segment, VALUE_BYTES)
 
@@ -67,7 +68,7 @@ __all__ = [
     "protocol_descriptors", "protocol_point_metrics", "protocol_nbytes",
     "metrics_from_descriptors", "descriptors_point_metrics",
     "batched_point_metrics", "encode_batch", "to_method_outputs",
-    "ProtocolEmitter",
+    "ProtocolEmitter", "WireRecords", "decode_records", "decode_batch",
 ]
 
 ENGINE_PROTOCOLS = ("implicit", "twostreams", "singlestream",
@@ -556,6 +557,23 @@ def encode_batch(seg: SegmentOutput, ys, protocol: str,
     ys = np.asarray(ys)
     return [_encode_row(protocol, brk[s], a[s], v[s], ys[s], knot_kind,
                         t0, dt, burst_cap) for s in range(brk.shape[0])]
+
+
+def decode_batch(wire: Sequence, protocol: str, *, t0: float = 0.0,
+                 dt: float = 1.0, closed: bool = True
+                 ) -> List["WireRecords"]:
+    """Descriptor-decode every stream of an ``encode_batch`` blob list.
+
+    The inverse of :func:`encode_batch` one level above raw samples:
+    each blob becomes a :class:`~repro.core.wire_decode.WireRecords`
+    column table — one row per wire record with its byte offset, grid
+    span and anchored line (or exact values) — so callers can window,
+    index or run closed-form analytics without materializing the
+    series.  ``records.reconstruct(0, n, t0, dt)`` is bit-identical to
+    the legacy ``repro.core.protocols.decode_*`` codecs.
+    """
+    return [decode_records(blob, protocol, t0=t0, dt=dt, closed=closed)
+            for blob in wire]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,384 @@
+"""Descriptor decode of the §5 wire formats — records with byte offsets.
+
+Every encoder in the repo (offline :func:`~repro.core.protocol_engine.
+encode_batch`, the chunked :class:`~repro.core.protocol_engine.
+ProtocolEmitter`, the device-resident packer) produces the same
+per-stream blobs; this module is their inverse *descriptor* view.
+Instead of materializing a reconstructed series it walks the bytes and
+yields one record per wire unit — an approximated segment or a run of
+exact values — tagged with
+
+- its byte offset and size (``off``/``size``; ``sub`` distinguishes the
+  two byte streams of the twostreams protocol),
+- its grid coverage ``[start, start + length)`` in sample positions,
+- its line in the legacy decoders' *anchored* form
+  ``y(t) = yref + a * (t - tref)``, so :meth:`WireRecords.reconstruct`
+  is bit-identical to ``repro.core.protocols.decode_*``.
+
+The walk is *incremental*: each ``_parse_*`` function consumes as many
+complete records as the buffer holds and leaves its cursor state in a
+small dataclass, so blobs can arrive in arbitrary chunks (the
+``ProtocolEmitter`` hand-off) and the parse is invariant to the
+chunking.  Each emitted record also carries a *resume snapshot* — the
+minimal ``(pos, off, off2, aux)`` state from which a fresh parse
+re-decodes that record and everything after it.  The snapshots are what
+``repro.store.index`` persists as its sparse time index.
+
+Coverage conventions (matching ``decode_implicit``'s timestamp walk):
+knot records cover ``[pos(knot_k), pos(knot_{k+1}))`` — a shared knot
+position belongs to the *right* segment, whose line passes through the
+knot exactly — and the final record of a closed stream extends one
+position past its closing knot.  Stream-protocol records carry explicit
+lengths, so closing changes nothing there.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+from typing import List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+__all__ = ["KIND_SEGMENT", "KIND_EXACT", "WireRecords", "new_state",
+           "parse_available", "decode_records"]
+
+KIND_SEGMENT = 1   # approximated line segment (error <= the active eps)
+KIND_EXACT = 2     # literal values (singletons / bursts): error 0
+
+# Row layout used by the parsers (lists so the implicit close-extension
+# can mutate the final record's length in place).
+R_OFF, R_SUB, R_SIZE, R_KIND, R_START, R_LEN = 0, 1, 2, 3, 4, 5
+R_A, R_TREF, R_YREF, R_VALUES, R_SNAP = 6, 7, 8, 9, 10
+
+_F64 = struct.Struct("<d")
+_KNOT = struct.Struct("<dd")
+_TWOSEG = struct.Struct("<dBdd")
+_PAIR = struct.Struct("<dd")
+
+
+@dataclasses.dataclass
+class WireRecords:
+    """Columnar batch of decoded wire records (host numpy arrays).
+
+    ``values`` is the flat array of exact values; an exact record's
+    values live at ``values[vpos : vpos + length]`` (``vpos`` is -1 for
+    segment records).
+    """
+
+    off: np.ndarray       # int64 byte offset of the record
+    sub: np.ndarray       # int8  byte stream (0 = main, 1 = two-singles)
+    size: np.ndarray      # int64 bytes (implicit: anchor..closing group)
+    kind: np.ndarray      # int8  KIND_SEGMENT | KIND_EXACT
+    start: np.ndarray     # int64 first covered grid position
+    length: np.ndarray    # int64 covered positions
+    a: np.ndarray         # f64 slope in real time (exact records: 0)
+    tref: np.ndarray      # f64 line anchor time (exact records: 0)
+    yref: np.ndarray      # f64 line value at the anchor
+    vpos: np.ndarray      # int64 offset into values (segments: -1)
+    values: np.ndarray    # f64 flat exact values
+
+    def __len__(self) -> int:
+        return int(self.off.size)
+
+    @staticmethod
+    def from_rows(rows: Sequence[list]) -> "WireRecords":
+        n = len(rows)
+        off = np.empty(n, np.int64)
+        sub = np.empty(n, np.int8)
+        size = np.empty(n, np.int64)
+        kind = np.empty(n, np.int8)
+        start = np.empty(n, np.int64)
+        length = np.empty(n, np.int64)
+        a = np.zeros(n, np.float64)
+        tref = np.zeros(n, np.float64)
+        yref = np.zeros(n, np.float64)
+        vpos = np.full(n, -1, np.int64)
+        flat: List[float] = []
+        for i, r in enumerate(rows):
+            off[i], sub[i], size[i] = r[R_OFF], r[R_SUB], r[R_SIZE]
+            kind[i], start[i], length[i] = r[R_KIND], r[R_START], r[R_LEN]
+            a[i], tref[i], yref[i] = r[R_A], r[R_TREF], r[R_YREF]
+            if r[R_VALUES] is not None:
+                vpos[i] = len(flat)
+                flat.extend(r[R_VALUES])
+        return WireRecords(off=off, sub=sub, size=size, kind=kind,
+                           start=start, length=length, a=a, tref=tref,
+                           yref=yref, vpos=vpos,
+                           values=np.asarray(flat, np.float64))
+
+    def reconstruct(self, lo: int, hi: int, t0: float, dt: float
+                    ) -> np.ndarray:
+        """Materialize ``y[lo:hi]`` exactly as the legacy decoders do.
+
+        Segment records evaluate ``yref + a * (t - tref)`` on the f64
+        time grid ``t = t0 + dt * i``; exact records copy their values.
+        """
+        out = np.full(hi - lo, np.nan, np.float64)
+        for i in range(len(self)):
+            s = max(int(self.start[i]), lo)
+            e = min(int(self.start[i] + self.length[i]), hi)
+            if s >= e:
+                continue
+            idx = np.arange(s, e, dtype=np.int64)
+            if self.kind[i] == KIND_SEGMENT:
+                t = t0 + dt * idx.astype(np.float64)
+                out[s - lo:e - lo] = self.yref[i] \
+                    + self.a[i] * (t - self.tref[i])
+            else:
+                v0 = int(self.vpos[i] + (s - self.start[i]))
+                out[s - lo:e - lo] = self.values[v0:v0 + (e - s)]
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Parser states — one per protocol; doubles as the index resume snapshot
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _ImplicitState:
+    off: int = 0            # next unparsed byte
+    pend: bool = False      # next group opens with the prior knot's y2
+    # The anchor: the previous knot, i.e. the start of the next record.
+    have_anchor: bool = False
+    a_t: float = 0.0
+    a_right: float = 0.0    # line value leaving the anchor knot
+    a_pos: int = 0
+    a_off: int = 0          # byte offset of the anchor's knot group
+    a_pend: bool = False    # pend flag when the anchor group began
+
+    def frontier(self) -> int:
+        return self.a_pos if self.have_anchor else 0
+
+
+@dataclasses.dataclass
+class _SingleState:
+    off: int = 0
+    pos: int = 0
+
+    def frontier(self) -> int:
+        return self.pos
+
+
+@dataclasses.dataclass
+class _TwoState:
+    off: int = 0            # emit cursor in the segment byte stream
+    off2: int = 0           # emit cursor in the singleton byte stream
+    pos: int = 0
+
+    def frontier(self) -> int:
+        return self.pos
+
+
+def new_state(protocol: str, *, pos: int = 0, off: int = 0, off2: int = 0,
+              aux: int = 0):
+    """Fresh (or snapshot-seeded) parser state for ``protocol``."""
+    if protocol == "implicit":
+        return _ImplicitState(off=off, pend=bool(aux), a_pos=pos)
+    if protocol in ("singlestream", "singlestreamv"):
+        return _SingleState(off=off, pos=pos)
+    if protocol == "twostreams":
+        return _TwoState(off=off, off2=off2, pos=pos)
+    raise ValueError(f"unknown protocol {protocol!r}")
+
+
+# ---------------------------------------------------------------------------
+# Per-protocol incremental walks
+# ---------------------------------------------------------------------------
+
+def _parse_implicit(buf, st: _ImplicitState, t0: float, dt: float,
+                    closed: bool, stop_hi: Optional[int],
+                    out: List[list]) -> None:
+    """Walk knot groups; each knot after the first closes one record.
+
+    A group is ``[y2 of the previous disjoint knot][±t, y]`` (Luo's sign
+    trick: t >= 0 joint, t < 0 disjoint with the landing value deferred
+    to the next group).  The record between knots k and k+1 is the line
+    through ``(t_k, right_k)`` and ``(t_{k+1}, y_{k+1})`` covering
+    ``[pos_k, pos_{k+1})`` — plus one closing position when the stream
+    is closed and this is its final record.
+    """
+    n = len(buf)
+    while True:
+        need = 24 if st.pend else 16
+        if st.off + need > n:
+            break
+        g_off, g_pend = st.off, st.pend
+        p = st.off
+        if st.pend:
+            st.a_right = _F64.unpack_from(buf, p)[0]
+            p += 8
+        t, y = _KNOT.unpack_from(buf, p)
+        st.off = p + 16
+        disjoint = t < 0
+        tt = -t if disjoint else t
+        pos = int(round((tt - t0) / dt))
+        st.pend = disjoint
+        if st.have_anchor:
+            if tt == st.a_t:
+                # Degenerate single-point stream: legacy emits y1 as-is.
+                slope, tref, yref = 0.0, tt, y
+            else:
+                slope = (y - st.a_right) / (tt - st.a_t)
+                tref, yref = st.a_t, st.a_right
+            out.append([st.a_off, 0, st.off - st.a_off, KIND_SEGMENT,
+                        st.a_pos, pos - st.a_pos, slope, tref, yref, None,
+                        (st.a_pos, st.a_off, 0, int(st.a_pend))])
+        st.have_anchor = True
+        st.a_t, st.a_pos = tt, pos
+        st.a_off, st.a_pend = g_off, g_pend
+        if not disjoint:
+            st.a_right = y    # joint knot: right value known immediately
+        if stop_hi is not None and out and out[-1][R_START] >= stop_hi:
+            return
+    if closed and st.off == n and out:
+        # Closing knot sits at the last *position*; the legacy timestamp
+        # walk lets the final line cover it, so extend by one.
+        out[-1][R_LEN] += 1
+
+
+def _parse_singlestream(buf, st: _SingleState, stop_hi: Optional[int],
+                        out: List[list]) -> None:
+    n = len(buf)
+    while st.off < n:
+        c = buf[st.off]
+        if c == 0:
+            if st.off + 9 > n:
+                break
+            v = _F64.unpack_from(buf, st.off + 1)[0]
+            out.append([st.off, 0, 9, KIND_EXACT, st.pos, 1,
+                        0.0, 0.0, 0.0, [v], (st.pos, st.off, 0, 0)])
+            st.off += 9
+            st.pos += 1
+        else:
+            if st.off + 17 > n:
+                break
+            a, b = _PAIR.unpack_from(buf, st.off + 1)
+            out.append([st.off, 0, 17, KIND_SEGMENT, st.pos, c + 1,
+                        a, 0.0, b, None, (st.pos, st.off, 0, 0)])
+            st.off += 17
+            st.pos += c + 1
+        if stop_hi is not None and out[-1][R_START] >= stop_hi:
+            return
+
+
+def _parse_singlestreamv(buf, st: _SingleState, stop_hi: Optional[int],
+                         out: List[list]) -> None:
+    n = len(buf)
+    while st.off < n:
+        c = struct.unpack_from("<b", buf, st.off)[0]
+        if c > 0:
+            if st.off + 17 > n:
+                break
+            a, b = _PAIR.unpack_from(buf, st.off + 1)
+            out.append([st.off, 0, 17, KIND_SEGMENT, st.pos, c,
+                        a, 0.0, b, None, (st.pos, st.off, 0, 0)])
+            st.off += 17
+            st.pos += c
+        elif c < 0:
+            m = -c
+            if st.off + 1 + 8 * m > n:
+                break
+            vals = [_F64.unpack_from(buf, st.off + 1 + 8 * j)[0]
+                    for j in range(m)]
+            out.append([st.off, 0, 1 + 8 * m, KIND_EXACT, st.pos, m,
+                        0.0, 0.0, 0.0, vals, (st.pos, st.off, 0, 0)])
+            st.off += 1 + 8 * m
+            st.pos += m
+        else:
+            raise ValueError(f"singlestreamv: zero counter at byte "
+                             f"{st.off}")
+        if stop_hi is not None and out[-1][R_START] >= stop_hi:
+            return
+
+
+def _parse_twostreams(seg_buf, single_buf, st: _TwoState, t0: float,
+                      dt: float, stop_hi: Optional[int],
+                      out: List[list]) -> None:
+    """Interleave the two byte streams by grid position.
+
+    Runs tile the positions in time order, so a gap before the next
+    segment record is exactly the singles emitted ahead of it — and once
+    the segment stream is exhausted, every remaining single is final (a
+    later segment record can only start past positions already claimed).
+    """
+    ns, nv = len(seg_buf), len(single_buf)
+    while True:
+        if st.off + 25 <= ns:
+            ts, nm1, a, b = _TWOSEG.unpack_from(seg_buf, st.off)
+            spos = int(round((ts - t0) / dt))
+            if spos < st.pos:
+                raise ValueError(f"twostreams: segment at t={ts} starts "
+                                 f"before position {st.pos}")
+            if spos > st.pos:            # gap — owed to the singles
+                if st.off2 + 8 > nv:
+                    break                # singles not delivered yet
+                v = _F64.unpack_from(single_buf, st.off2)[0]
+                out.append([st.off2, 1, 8, KIND_EXACT, st.pos, 1,
+                            0.0, 0.0, 0.0, [v],
+                            (st.pos, st.off, st.off2, 0)])
+                st.off2 += 8
+                st.pos += 1
+            else:
+                out.append([st.off, 0, 25, KIND_SEGMENT, st.pos, nm1 + 1,
+                            a, 0.0, b, None, (st.pos, st.off, st.off2, 0)])
+                st.off += 25
+                st.pos += nm1 + 1
+        elif st.off == ns and st.off2 + 8 <= nv:
+            # Segment stream drained: trailing singles are final.
+            v = _F64.unpack_from(single_buf, st.off2)[0]
+            out.append([st.off2, 1, 8, KIND_EXACT, st.pos, 1,
+                        0.0, 0.0, 0.0, [v], (st.pos, st.off, st.off2, 0)])
+            st.off2 += 8
+            st.pos += 1
+        else:
+            break
+        if stop_hi is not None and out[-1][R_START] >= stop_hi:
+            return
+
+
+def parse_available(protocol: str, payload, st, *, payload2=b"",
+                    t0: float = 0.0, dt: float = 1.0,
+                    closed: bool = False, stop_hi: Optional[int] = None
+                    ) -> List[list]:
+    """Consume every complete record available in ``payload`` from ``st``.
+
+    Returns the emitted record rows (see the ``R_*`` layout constants);
+    ``st`` is advanced in place.  ``stop_hi`` stops the walk once a
+    record starting at or past that grid position has been emitted (the
+    windowed-decode early exit).  ``closed`` marks end-of-stream so the
+    implicit walk can extend its final record over the closing knot.
+    """
+    out: List[list] = []
+    if protocol == "implicit":
+        _parse_implicit(payload, st, t0, dt, closed, stop_hi, out)
+    elif protocol == "singlestream":
+        _parse_singlestream(payload, st, stop_hi, out)
+    elif protocol == "singlestreamv":
+        _parse_singlestreamv(payload, st, stop_hi, out)
+    elif protocol == "twostreams":
+        _parse_twostreams(payload, payload2, st, t0, dt, stop_hi, out)
+    else:
+        raise ValueError(f"unknown protocol {protocol!r}")
+    return out
+
+
+def decode_records(blob: Union[bytes, Tuple[bytes, bytes]], protocol: str,
+                   *, t0: float = 0.0, dt: float = 1.0,
+                   closed: bool = True) -> WireRecords:
+    """One-shot descriptor decode of a whole wire blob.
+
+    ``blob`` is one stream's bytes (a ``(seg, single)`` pair for the
+    twostreams protocol).  Set ``closed=False`` for a stream whose tail
+    has not been flushed yet — the implicit walk then leaves the final
+    position uncovered, exactly like the incremental store frontier.
+    """
+    st = new_state(protocol)
+    if protocol == "twostreams":
+        seg, single = blob
+        rows = parse_available(protocol, seg, st, payload2=single,
+                               t0=t0, dt=dt, closed=closed)
+    else:
+        rows = parse_available(protocol, blob, st, t0=t0, dt=dt,
+                               closed=closed)
+    return WireRecords.from_rows(rows)

@@ -46,16 +46,27 @@ class GlobalEpsBudget:
     deadband: float = 0.05
     rounds: int = 3
     smoothing: float = 0.5
+    # Integral gain on the realized-vs-pool byte excess.  The byte
+    # response to ε is convex, so the controller's symmetric log-ε
+    # dither overshoots the budget on average (Jensen); the integrator
+    # accumulates the measured fractional excess and hands it to
+    # ``allocate_eps_budget(overshoot=...)``, which deflates the pool
+    # until the *signed* steady-state bias is zero-mean.  0 disables
+    # compensation (the PR-9 behaviour).
+    bias_gain: float = 0.2
 
     def __post_init__(self):
         if self.budget_bytes_per_s <= 0:
             raise ValueError("budget_bytes_per_s must be positive")
         if not 0.0 <= self.smoothing < 1.0:
             raise ValueError("smoothing must lie in [0, 1)")
+        if self.bias_gain < 0:
+            raise ValueError("bias_gain must be >= 0")
         self._ema_bytes: Optional[np.ndarray] = None
         self._ema_points: Optional[np.ndarray] = None
         self.last_targets: Optional[np.ndarray] = None
         self.last_pool: float = 0.0
+        self.overshoot: float = 0.0
 
     def reset_rows(self, rows) -> None:
         """Clear the rate history of recycled slots (admission/eviction)."""
@@ -89,11 +100,18 @@ class GlobalEpsBudget:
         seconds = self._ema_points[live].sum() / (n_live * self.sample_hz)
         pool = self.budget_bytes_per_s * seconds
         self.last_pool = float(pool)
+        if pool > 0:
+            # True integrator on the smoothed fractional excess; the
+            # clip mirrors the allocator's own guard so a transient
+            # (admission wave, regime change) cannot wind it up.
+            excess = float(self._ema_bytes[live].sum()) / pool - 1.0
+            self.overshoot = float(np.clip(
+                self.overshoot + self.bias_gain * excess, -0.5, 4.0))
         new_eps, targets = allocate_eps_budget(
             eps, np.where(live, self._ema_bytes, 0.0),
             np.where(live, self._ema_points, 0.0), pool,
             eps_min=self.eps_min, eps_max=self.eps_max, alpha=self.alpha,
             max_step=self.max_step, deadband=self.deadband,
-            rounds=self.rounds)
+            rounds=self.rounds, overshoot=self.overshoot)
         self.last_targets = targets
         return np.where(live, new_eps, eps)

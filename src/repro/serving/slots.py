@@ -104,9 +104,12 @@ class SlotManager:
                  eps0: float = 1.0, max_run: int = 256,
                  window: Optional[int] = None,
                  knot_kind: Optional[str] = None,
-                 burst_cap: int = 127, dtype=jnp.float32):
+                 burst_cap: int = 127, dtype=jnp.float32, store=None):
         if capacity <= 0:
             raise ValueError("capacity must be positive")
+        if store is not None and store.protocol != protocol:
+            raise ValueError(f"store speaks {store.protocol!r}, "
+                             f"slots emit {protocol!r}")
         self.method = method
         self.protocol = protocol
         self.knot_kind = knot_kind or METHOD_KNOT_KINDS.get(method,
@@ -138,6 +141,11 @@ class SlotManager:
         self._by_stream: Dict[str, int] = {}
         self.total_points = 0
         self.total_bytes = 0
+        # Optional archive: every blob a slot emits is appended under
+        # the admission-unique key (stream_id, slot, generation), and
+        # the key is closed at evict — so the store's copy of a churny
+        # stream equals an offline encode of that stream's own data.
+        self.store = store
 
     # -- admission / eviction ----------------------------------------------
 
@@ -161,7 +169,23 @@ class SlotManager:
                                        burst_cap=self.burst_cap)
         self._by_stream[stream_id] = i
         self._set_row_eps(i, self.eps0 if eps is None else float(eps))
+        if self.store is not None:
+            self.store.add_stream(self._store_key(slot),
+                                  eps=float(self._eps[i]))
         return slot
+
+    @staticmethod
+    def _store_key(slot: Slot) -> Tuple[str, int, int]:
+        """Archive key for one admission (unique: generation is a
+        monotone per-slot counter, so slot+generation never repeats)."""
+        return (slot.stream_id, slot.index, slot.generation)
+
+    def _archive(self, slot: Slot, parts) -> None:
+        key = self._store_key(slot)
+        for p in parts:
+            if self._blob(p):
+                self.store.append_stream(key, p,
+                                         eps=float(self._eps[slot.index]))
 
     def evict(self, stream_id: str) -> EvictReport:
         """Close the stream: flush its carry row and drain its emitter."""
@@ -177,14 +201,20 @@ class SlotManager:
         tail = b""
         if slot.points > 0:
             assert bool(np.asarray(ev)[r])
-            tail = self._feed_slot(
+            part = self._feed_slot(
                 slot, np.asarray(pos)[r:r + 1, None],
                 np.asarray(a_f)[r:r + 1, None],
                 np.asarray(v_f)[r:r + 1, None],
                 np.ones((1, 1), bool), None)
-            tail += b"".join(self._blob(p) for p in slot.emitter.flush())
+            drained = slot.emitter.flush()
+            tail = self._blob(part) \
+                + b"".join(self._blob(p) for p in drained)
+            if self.store is not None:
+                self._archive(slot, [part, *drained])
             slot.nbytes += len(tail)
             self.total_bytes += len(tail)
+        if self.store is not None:
+            self.store.close([self._store_key(slot)])
         rep = EvictReport(stream_id=stream_id, slot=i,
                           generation=slot.generation, points=slot.points,
                           nbytes=slot.nbytes, tail=tail)
@@ -271,24 +301,30 @@ class SlotManager:
                     continue
                 slot = self.slots[i]
                 js = np.flatnonzero(ev[r])
-                blob = self._feed_slot(slot, pos[r:r + 1, js],
+                part = self._feed_slot(slot, pos[r:r + 1, js],
                                        a[r:r + 1, js], v[r:r + 1, js],
                                        np.ones((1, js.size), bool),
                                        plane[i, :c][None])
                 slot.points += c
                 self.total_points += c
+                blob = self._blob(part)
                 if blob:
+                    if self.store is not None:
+                        self._archive(slot, [part])
                     slot.nbytes += len(blob)
                     self.total_bytes += len(blob)
                     wire.append((slot.stream_id, slot.generation, blob))
         return wire
 
-    def _feed_slot(self, slot: Slot, pos, a, v, ev, values) -> bytes:
+    def _feed_slot(self, slot: Slot, pos, a, v, ev, values):
         """Feed one slot's new events/values to its wire emitter.
 
         Events arrive position-tagged (row-local); the emitter wants
         aligned columns, so they are scattered onto the contiguous span
         of newly finalized positions ``[slot.emitted, frontier)``.
+        Returns the emitter's raw per-stream part (``bytes``, or the
+        twostreams ``(segment, singleton)`` pair — callers flatten with
+        :meth:`_blob` for the wire and keep the pair for the store).
         """
         c = 0 if values is None else values.shape[1]
         # Positions < frontier are finalized: the engine emits events for
@@ -312,7 +348,7 @@ class SlotManager:
         elif not np.asarray(ev).any() and c == 0:
             return b""
         parts = slot.emitter.step_chunk(events, values)
-        return self._blob(parts[0]) if parts else b""
+        return parts[0] if parts else b""
 
     @staticmethod
     def _blob(part) -> bytes:

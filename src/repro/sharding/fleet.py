@@ -561,11 +561,15 @@ class FleetStream:
                  eps: float, *, devices=None, knot_kind: Optional[str] = None,
                  max_run: Optional[int] = None,
                  window: Optional[int] = None, t0: float = 0.0,
-                 dt: float = 1.0, burst_cap: int = 127, **segmenter_kw):
+                 dt: float = 1.0, burst_cap: int = 127, store=None,
+                 **segmenter_kw):
         from repro.kernels.ops import StreamingSegmenter  # lazy: layering
         if protocol not in ENGINE_PROTOCOLS:
             raise ValueError(f"unknown protocol {protocol!r}; "
                              f"have {sorted(ENGINE_PROTOCOLS)}")
+        if store is not None and store.protocol != protocol:
+            raise ValueError(f"store speaks {store.protocol!r}, "
+                             f"fleet emits {protocol!r}")
         self.devices = list(devices) if devices is not None \
             else jax.devices()
         d = len(self.devices)
@@ -593,6 +597,15 @@ class FleetStream:
         self.shard_bytes = np.zeros(d, np.int64)
         self.pushed = 0
         self._finished = False
+        # Optional hand-off: every blob this fleet emits is appended to
+        # the SegmentStore under the stream's global row number, so
+        # serving and storage share one wire format (and the store's
+        # differential guarantee makes the archive equal to an offline
+        # encode_batch of the same data).
+        self.store = store
+        if store is not None:
+            for k in range(n_streams):
+                store.add_stream(k, eps=float(np.max(eps)))
 
     @property
     def n_devices(self) -> int:
@@ -633,6 +646,8 @@ class FleetStream:
             self._account(d, blobs)
             out.extend(blobs)
         self.pushed += y.shape[1]
+        if self.store is not None:
+            self.store.append(out)
         return out
 
     def finish(self) -> List:
@@ -652,4 +667,6 @@ class FleetStream:
                            for (a, b), (c, e) in zip(blobs, tails))
             else:
                 out.extend(b + t for b, t in zip(blobs, tails))
+        if self.store is not None:
+            self.store.append(out, close=True)
         return out

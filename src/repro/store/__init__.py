@@ -1,0 +1,17 @@
+"""Queryable compressed segment store over the PLA wire formats.
+
+- :mod:`repro.store.index` — per-stream sparse time index + payload
+  (index/payload separation per arXiv 2509.07827);
+- :mod:`repro.store.analytics` — Plato-style closed-form aggregates
+  with deterministic eps-derived error bounds (arXiv 1808.04876);
+- :mod:`repro.store.store` — :class:`SegmentStore`, the archive fed by
+  ``encode_batch`` / ``FleetStream`` / serving-slot blobs.
+"""
+
+from .analytics import AGG_KINDS, Cover, cover_arrays, window_aggregate, \
+    window_correlation
+from .index import StreamIndex
+from .store import SegmentStore
+
+__all__ = ["AGG_KINDS", "Cover", "SegmentStore", "StreamIndex",
+           "cover_arrays", "window_aggregate", "window_correlation"]

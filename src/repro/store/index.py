@@ -1,0 +1,139 @@
+"""Per-stream sparse time index over an append-only wire payload.
+
+Index/payload separation in the style of the succinct-PLA layouts
+(arXiv 2509.07827): the payload is the untouched wire blob exactly as
+the emitters produced it; the index is a small sorted table of every
+k-th record's resume snapshot ``(pos, off, off2, aux)`` — grid position,
+byte offset(s), and the one bit of parser state the implicit walk needs
+(whether a deferred disjoint landing value precedes the anchor knot).
+
+``locate`` is one ``bisect`` (O(log n)); a windowed decode seeds a fresh
+parser from the located snapshot and walks forward at most
+``index_every`` records before the window plus the window's own records,
+so small windows touch a correspondingly small slice of the payload
+(the ``touched`` byte count is returned so callers can assert exactly
+that).  Because the windowed walk runs the very same incremental parser
+that built the index at append time, windowed and full decodes are
+bit-identical by construction — pinned in tests/test_store_property.py.
+"""
+
+from __future__ import annotations
+
+import bisect
+from typing import List, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.wire_decode import (R_LEN, R_START, R_SNAP, WireRecords,
+                                    new_state, parse_available)
+
+__all__ = ["StreamIndex"]
+
+
+class StreamIndex:
+    """One stream's payload + sparse index + incremental parser state."""
+
+    def __init__(self, protocol: str, *, t0: float = 0.0, dt: float = 1.0,
+                 index_every: int = 32, eps: float = 1.0):
+        if index_every < 1:
+            raise ValueError("index_every must be >= 1")
+        self.protocol = protocol
+        self.t0 = float(t0)
+        self.dt = float(dt)
+        self.index_every = int(index_every)
+        self.eps = float(eps)        # running max of the eps in force
+        self.payload = bytearray()   # main byte stream
+        self.payload2 = bytearray()  # twostreams singleton stream
+        self._st = new_state(protocol)
+        # Entry 0 is the payload head; one entry per index_every records.
+        self.e_pos: List[int] = [0]
+        self.e_off: List[int] = [0]
+        self.e_off2: List[int] = [0]
+        self.e_aux: List[int] = [0]
+        self.n_records = 0
+        self.closed = False
+
+    # -- append-time ingest --------------------------------------------------
+
+    def note_eps(self, eps: Optional[float]) -> None:
+        if eps is not None:
+            self.eps = max(self.eps, float(eps))
+
+    def append(self, blob: Union[bytes, Tuple[bytes, bytes]],
+               eps: Optional[float] = None) -> int:
+        """Ingest one wire chunk; returns the records it completed.
+
+        ``blob`` is raw emitter output — ``bytes``, or a ``(segment,
+        singleton)`` pair for the twostreams protocol.  Chunk boundaries
+        are arbitrary; incomplete records simply wait in the payload for
+        the next append.
+        """
+        if self.closed:
+            raise ValueError("append to a closed stream")
+        self.note_eps(eps)
+        if self.protocol == "twostreams":
+            seg, single = blob
+            self.payload += seg
+            self.payload2 += single
+        else:
+            if not isinstance(blob, (bytes, bytearray, memoryview)):
+                raise TypeError(f"{self.protocol!r} expects bytes; "
+                                f"got {type(blob).__name__}")
+            self.payload += blob
+        rows = parse_available(self.protocol, self.payload, self._st,
+                               payload2=self.payload2, t0=self.t0,
+                               dt=self.dt, closed=False)
+        for row in rows:
+            self.n_records += 1
+            if self.n_records % self.index_every == 0:
+                pos, off, off2, aux = row[R_SNAP]
+                self.e_pos.append(pos)
+                self.e_off.append(off)
+                self.e_off2.append(off2)
+                self.e_aux.append(aux)
+        return len(rows)
+
+    def close(self) -> None:
+        """Mark end-of-stream (the tail bytes must already be appended)."""
+        self.closed = True
+
+    # -- random access -------------------------------------------------------
+
+    @property
+    def n_points(self) -> int:
+        """Readable grid frontier: positions ``[0, n_points)`` decode."""
+        n = self._st.frontier()
+        if self.closed and self.protocol == "implicit" \
+                and self.n_records > 0:
+            n += 1               # the closing knot's own position
+        return n
+
+    @property
+    def n_bytes(self) -> int:
+        return len(self.payload) + len(self.payload2)
+
+    def locate(self, pos: int) -> Tuple[int, int, int, int]:
+        """Snapshot of the last index entry at or before ``pos``."""
+        k = bisect.bisect_right(self.e_pos, pos) - 1
+        return (self.e_pos[k], self.e_off[k], self.e_off2[k],
+                self.e_aux[k])
+
+    def decode(self, lo: int, hi: int) -> Tuple[WireRecords, int]:
+        """Decode the records overlapping ``[lo, hi)``.
+
+        Returns ``(records, touched_bytes)``; the records are exactly
+        the overlap-filtered slice of a full-payload decode (same
+        parser, seeded mid-payload from the located snapshot).
+        """
+        if not 0 <= lo < hi <= self.n_points:
+            raise ValueError(f"window [{lo}, {hi}) outside the readable "
+                             f"range [0, {self.n_points})")
+        pos, off, off2, aux = self.locate(lo)
+        st = new_state(self.protocol, pos=pos, off=off, off2=off2, aux=aux)
+        rows = parse_available(self.protocol, self.payload, st,
+                               payload2=self.payload2, t0=self.t0,
+                               dt=self.dt, closed=self.closed, stop_hi=hi)
+        touched = (st.off - off) + (getattr(st, "off2", 0) - off2)
+        keep = [r for r in rows
+                if r[R_START] < hi and r[R_START] + r[R_LEN] > lo]
+        return WireRecords.from_rows(keep), touched

@@ -1,0 +1,204 @@
+"""SegmentStore: a queryable archive of PLA wire blobs.
+
+The paper's scenario 2 (datacenter storage) ends at wire bytes; the
+store makes that archive *usable without decompression*.  It keeps each
+stream's blobs verbatim (plus the sparse index of
+:class:`~repro.store.index.StreamIndex`) and answers
+
+- ``query(kind, streams, t0, t1)`` — SUM/AVG/MIN/MAX/COUNT per stream
+  and cross-stream correlation, every answer a ``(value, error_bound)``
+  pair computed in closed form on the decoded descriptors
+  (:mod:`repro.store.analytics`) — the raw series is never
+  materialized;
+- ``scan(...)`` — the brute-force reconstruction (the differential
+  baseline: bit-identical to the legacy byte codecs);
+- ``locate(key, t)`` — O(log n) time-to-byte-offset lookup.
+
+Feeding: ``append`` takes exactly what the encoders hand out — the
+per-stream blob list of :func:`~repro.core.protocol_engine.encode_batch`
+or :class:`~repro.sharding.fleet.FleetStream`, or single-stream chunks
+from a :class:`~repro.core.protocol_engine.ProtocolEmitter` /
+serving slot via ``append_stream`` — at arbitrary chunk boundaries.
+Serving and storage share one wire format, so a store fed incrementally
+answers every query identically to one built from the offline blobs
+(the PR-2/PR-5 bit-identity discipline, extended to storage).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.wire_decode import WireRecords
+from .analytics import (AGG_KINDS, cover_arrays, window_aggregate,
+                        window_correlation)
+from .index import StreamIndex
+
+__all__ = ["SegmentStore"]
+
+_PROTOCOLS = ("implicit", "twostreams", "singlestream", "singlestreamv")
+
+
+class SegmentStore:
+    """Indexed, queryable archive over one protocol's wire blobs."""
+
+    def __init__(self, protocol: str = "singlestream", *,
+                 eps: float = 1.0, t0: float = 0.0, dt: float = 1.0,
+                 index_every: int = 32):
+        if protocol not in _PROTOCOLS:
+            raise ValueError(f"unknown protocol {protocol!r}; "
+                             f"have {sorted(_PROTOCOLS)}")
+        self.protocol = protocol
+        self.eps0 = float(eps)
+        self.t0 = float(t0)
+        self.dt = float(dt)
+        self.index_every = int(index_every)
+        self._streams: Dict[Hashable, StreamIndex] = {}
+        self.stats = {"queries": 0, "decodes": 0, "bytes_touched": 0,
+                      "records_decoded": 0}
+
+    # -- ingest --------------------------------------------------------------
+
+    def keys(self) -> List[Hashable]:
+        return list(self._streams)
+
+    def add_stream(self, key: Hashable, *,
+                   eps: Optional[float] = None) -> StreamIndex:
+        if key in self._streams:
+            raise ValueError(f"stream {key!r} already exists")
+        idx = StreamIndex(self.protocol, t0=self.t0, dt=self.dt,
+                          index_every=self.index_every,
+                          eps=self.eps0 if eps is None else float(eps))
+        self._streams[key] = idx
+        return idx
+
+    def append_stream(self, key: Hashable, blob, *,
+                      eps: Optional[float] = None,
+                      close: bool = False) -> None:
+        """Ingest one stream's wire chunk (auto-registering ``key``)."""
+        idx = self._streams.get(key)
+        if idx is None:
+            idx = self.add_stream(key, eps=eps)
+        idx.append(blob, eps=eps)
+        if close:
+            idx.close()
+
+    def append(self, wire: Sequence, *, keys: Optional[Sequence] = None,
+               eps: Optional[float] = None, close: bool = False) -> None:
+        """Ingest a per-stream blob list (``encode_batch`` order)."""
+        keys = range(len(wire)) if keys is None else keys
+        for key, blob in zip(keys, wire):
+            self.append_stream(key, blob, eps=eps, close=close)
+
+    def close(self, keys: Optional[Sequence] = None) -> None:
+        for key in (self.keys() if keys is None else keys):
+            self._streams[key].close()
+
+    def note_eps(self, key: Hashable, eps: float) -> None:
+        """Record a retuned eps (bounds use the running max in force)."""
+        self._streams[key].note_eps(eps)
+
+    # -- window plumbing -----------------------------------------------------
+
+    def _index(self, key: Hashable) -> StreamIndex:
+        idx = self._streams.get(key)
+        if idx is None:
+            raise KeyError(f"unknown stream {key!r}")
+        return idx
+
+    def n_points(self, key: Hashable) -> int:
+        return self._index(key).n_points
+
+    def n_bytes(self, key: Hashable) -> int:
+        return self._index(key).n_bytes
+
+    def _grid(self, t: Optional[float], default: int, n: int) -> int:
+        if t is None:
+            return default
+        p = math.ceil((float(t) - self.t0) / self.dt - 1e-9)
+        return max(0, min(int(p), n))
+
+    def _window(self, key: Hashable, t0: Optional[float],
+                t1: Optional[float]) -> Tuple[int, int]:
+        n = self._index(key).n_points
+        lo = self._grid(t0, 0, n)
+        hi = self._grid(t1, n, n)
+        return lo, hi
+
+    def locate(self, key: Hashable, t: float) -> int:
+        """Byte offset of the index block covering time ``t``."""
+        idx = self._index(key)
+        pos = self._grid(t, 0, max(idx.n_points - 1, 0))
+        return idx.locate(pos)[1]
+
+    def decode(self, key: Hashable, t0: Optional[float] = None,
+               t1: Optional[float] = None) -> WireRecords:
+        """Windowed descriptor decode (only index-located blocks)."""
+        lo, hi = self._window(key, t0, t1)
+        idx = self._index(key)
+        recs, touched = idx.decode(lo, hi)
+        self.stats["decodes"] += 1
+        self.stats["bytes_touched"] += touched
+        self.stats["records_decoded"] += len(recs)
+        return recs
+
+    # -- queries -------------------------------------------------------------
+
+    def query(self, kind: str, streams: Sequence[Hashable],
+              t0: Optional[float] = None, t1: Optional[float] = None):
+        """Closed-form analytics over ``[t0, t1)``.
+
+        Aggregates return one ``(value, error_bound)`` pair per entry of
+        ``streams``; ``corr`` takes exactly two streams and returns a
+        single pair.  The brute-force decoded answer always lies within
+        ``error_bound`` of ``value`` (the property wall's invariant).
+        """
+        if kind not in AGG_KINDS:
+            raise ValueError(f"unknown query kind {kind!r}; "
+                             f"have {AGG_KINDS}")
+        if kind == "corr" and len(streams) != 2:
+            raise ValueError("corr takes exactly two streams")
+        self.stats["queries"] += 1
+        covers, eps = [], []
+        lo = hi = None
+        for key in streams:
+            klo, khi = self._window(key, t0, t1)
+            if lo is None:
+                lo, hi = klo, khi
+            elif (klo, khi) != (lo, hi):
+                raise ValueError("query window must resolve identically "
+                                 "across streams")
+            idx = self._index(key)
+            recs, touched = idx.decode(lo, hi)
+            self.stats["decodes"] += 1
+            self.stats["bytes_touched"] += touched
+            self.stats["records_decoded"] += len(recs)
+            covers.append(cover_arrays(recs, lo, hi, self.t0, self.dt))
+            eps.append(idx.eps)
+        if kind == "corr":
+            return window_correlation(covers[0], covers[1], eps[0],
+                                      eps[1], lo, hi)
+        vals, bounds = window_aggregate(kind, covers, np.asarray(eps),
+                                        lo, hi)
+        return list(zip(vals.tolist(), bounds.tolist()))
+
+    def scan(self, streams: Optional[Sequence[Hashable]] = None,
+             t0: Optional[float] = None, t1: Optional[float] = None
+             ) -> Dict[Hashable, np.ndarray]:
+        """Brute-force reconstruction (the decompress-then-compute path).
+
+        Returns ``{key: y[lo:hi]}`` — bit-identical to the legacy
+        ``repro.core.protocols.decode_*`` codecs on the same blobs.
+        """
+        out: Dict[Hashable, np.ndarray] = {}
+        for key in (self.keys() if streams is None else streams):
+            lo, hi = self._window(key, t0, t1)
+            recs = self.decode(key, t0, t1)
+            out[key] = recs.reconstruct(lo, hi, self.t0, self.dt)
+        return out
+
+    def reset_stats(self) -> None:
+        for k in self.stats:
+            self.stats[k] = 0

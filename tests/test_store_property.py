@@ -1,0 +1,227 @@
+"""Property wall for the queryable segment store (PR 10).
+
+Three invariants, swept with hypothesis over all 6 methods x 4
+protocols, random windows and random chunkings:
+
+1. **Bound validity** — every analytics answer ``(value, error_bound)``
+   contains the brute-force decode-then-numpy answer within its bound,
+   for all six query kinds;
+2. **Windowed = full** — an index-seeded windowed decode returns exactly
+   the overlap-filtered records of a full-payload decode (bit-identical
+   columns and reconstruction);
+3. **Differential chunking** — a store fed incrementally by
+   ``FleetStream`` blobs under *random splits* equals a store built from
+   one offline ``encode_batch`` blob: same payload bytes, same index
+   entries, same answer to every query.
+
+Every hypothesis test has a **deterministic fixed-draw twin** that runs
+the same check body on a handpicked set of draws, so the suite still
+exercises these code paths when hypothesis is absent (dev dep;
+requirements-dev.txt / CI install it) instead of silently skipping.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # fixed-draw twins below still run
+    HAVE_HYPOTHESIS = False
+
+from repro.core.evaluate import BATCHED_SEGMENTERS, METHOD_KNOT_KINDS
+from repro.core.protocol_engine import encode_batch
+from repro.core.protocols import PROTOCOL_CAPS
+from repro.store import SegmentStore
+
+METHODS = tuple(sorted(BATCHED_SEGMENTERS))
+PROTOCOLS = ("implicit", "twostreams", "singlestream", "singlestreamv")
+AGGS = ("sum", "avg", "min", "max", "count")
+
+# Fixed draws for the twins: every method and every protocol appears,
+# with windows hitting the head, the tail, a single point and the full
+# range.  (method, protocol, seed, T, eps, lo, hi)
+FIXED_BOUNDS = (
+    ("angle", "twostreams", 0, 211, 0.5, 0, 211),
+    ("swing", "implicit", 1, 160, 0.25, 40, 41),
+    ("disjoint", "singlestreamv", 2, 300, 1.0, 250, 300),
+    ("linear", "singlestream", 3, 257, 0.5, 0, 31),
+    ("continuous", "implicit", 4, 190, 0.75, 77, 150),
+    ("mixed", "singlestream", 5, 230, 0.5, 100, 170),
+    ("linear", "implicit", 6, 120, 0.5, 119, 120),
+    ("mixed", "twostreams", 7, 140, 0.25, 3, 139),
+)
+
+# (protocol, splits, seed) — chunk width 1, non-divisors, single chunk.
+FIXED_SPLITS = (
+    ("implicit", (1, 31, 32, 40, 1, 95), 0),
+    ("twostreams", (50, 47, 103), 1),
+    ("singlestream", (200,), 2),
+    ("singlestreamv", (3, 7, 1, 13, 17, 59, 100), 3),
+)
+
+
+def _make(seed, S, T):
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.normal(0, 0.5, (S, T)), axis=1).astype(
+        np.float32)
+
+
+def _encode(method, protocol, y, eps):
+    cap = PROTOCOL_CAPS[protocol] or 256
+    seg = BATCHED_SEGMENTERS[method](
+        jnp.asarray(y), jnp.full((y.shape[0],), eps, jnp.float32),
+        max_run=cap)
+    return encode_batch(seg, y, protocol,
+                        METHOD_KNOT_KINDS.get(method, "disjoint"))
+
+
+# ---------------------------------------------------------------------------
+# Check bodies (shared by the hypothesis sweeps and the fixed-draw twins)
+# ---------------------------------------------------------------------------
+
+def check_bounds_contain_brute_force(method, protocol, seed, T, eps,
+                                     lo, hi):
+    label = f"{method}/{protocol}/seed={seed}/[{lo},{hi})"
+    S = 2
+    y = _make(seed, S, T)
+    store = SegmentStore(protocol, eps=eps)
+    store.append(_encode(method, protocol, y, eps), close=True)
+    recon = np.stack([store.scan()[s] for s in range(S)])
+    np.testing.assert_array_equal(
+        np.abs(recon - y.astype(np.float64)) <= eps * (1 + 1e-3) + 1e-3,
+        True, err_msg=label)
+    sl = recon[:, lo:hi]
+    brute = {"sum": sl.sum(axis=1), "avg": sl.mean(axis=1),
+             "min": sl.min(axis=1), "max": sl.max(axis=1),
+             "count": np.full(S, hi - lo, float)}
+    orig = y[:, lo:hi].astype(np.float64)
+    brute_o = {"sum": orig.sum(axis=1), "avg": orig.mean(axis=1),
+               "min": orig.min(axis=1), "max": orig.max(axis=1),
+               "count": brute["count"]}
+    for kind in AGGS:
+        out = store.query(kind, list(range(S)), float(lo), float(hi))
+        for s, (val, bound) in enumerate(out):
+            assert np.isfinite(val) and bound >= 0, (label, kind, s)
+            tol = 1e-6 * (1.0 + abs(val))
+            assert abs(val - brute[kind][s]) <= bound + tol, \
+                (label, kind, s, val, brute[kind][s], bound)
+            assert abs(val - brute_o[kind][s]) \
+                <= bound * (1 + 1e-3) + 1e-3, (label, kind, s)
+    if hi - lo >= 3:
+        r_hat, bound = store.query("corr", [0, 1], float(lo), float(hi))
+        ref = np.corrcoef(sl[0], sl[1])[0, 1]
+        if np.isnan(ref):
+            assert np.isinf(bound), label
+        else:
+            assert abs(r_hat - ref) <= bound + 1e-6, \
+                (label, r_hat, ref, bound)
+    check_windowed_equals_full(store, 0, lo, hi, label)
+
+
+def check_windowed_equals_full(store, key, lo, hi, label):
+    idx = store._streams[key]
+    full, full_touched = idx.decode(0, idx.n_points)
+    win, touched = idx.decode(lo, hi)
+    assert touched <= full_touched, label
+    mask = (full.start < hi) & (full.start + full.length > lo)
+    for col in ("off", "sub", "size", "kind", "start", "length", "a",
+                "tref", "yref"):
+        np.testing.assert_array_equal(getattr(win, col),
+                                      getattr(full, col)[mask],
+                                      err_msg=f"{label}/{col}")
+    np.testing.assert_array_equal(
+        win.reconstruct(lo, hi, store.t0, store.dt),
+        full.reconstruct(lo, hi, store.t0, store.dt), err_msg=label)
+
+
+def check_chunked_equals_offline(protocol, splits, seed):
+    from repro.sharding.fleet import FleetStream
+
+    label = f"{protocol}/splits={splits}"
+    S, eps = 2, 0.5
+    T = sum(splits)
+    y = _make(seed, S, T)
+    inc = SegmentStore(protocol, eps=eps)
+    fs = FleetStream("linear", protocol, S, eps, store=inc)
+    pos = 0
+    for w in splits:
+        fs.push(y[:, pos:pos + w])
+        pos += w
+    fs.finish()
+    off = SegmentStore(protocol, eps=eps)
+    off.append(_encode("linear", protocol, y, eps), close=True)
+    assert inc.keys() == off.keys(), label
+    for k in inc.keys():
+        a, b = inc._streams[k], off._streams[k]
+        assert a.n_points == b.n_points == T, label
+        assert bytes(a.payload) == bytes(b.payload), label
+        assert bytes(a.payload2) == bytes(b.payload2), label
+        assert (a.e_pos, a.e_off, a.e_off2, a.e_aux) \
+            == (b.e_pos, b.e_off, b.e_off2, b.e_aux), label
+        np.testing.assert_array_equal(inc.scan([k])[k], off.scan([k])[k],
+                                      err_msg=label)
+    lo, hi = T // 4, max(T // 4 + 1, 3 * T // 4)
+    for kind in AGGS:
+        assert inc.query(kind, list(range(S)), float(lo), float(hi)) \
+            == off.query(kind, list(range(S)), float(lo), float(hi)), \
+            (label, kind)
+    assert inc.query("corr", [0, 1]) == off.query("corr", [0, 1]), label
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps (random methods/protocols/windows/splits)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def _window(draw, t_min=8, t_max=260):
+        T = draw(st.integers(t_min, t_max))
+        lo = draw(st.integers(0, T - 1))
+        hi = draw(st.integers(lo + 1, T))
+        return T, lo, hi
+
+    @st.composite
+    def _splits(draw, t_min=8, t_max=240):
+        T = draw(st.integers(t_min, t_max))
+        widths = []
+        left = T
+        while left:
+            w = draw(st.integers(1, left))
+            widths.append(w)
+            left -= w
+        return tuple(widths)
+
+    @settings(max_examples=12, deadline=None)
+    @given(data=st.data(), method=st.sampled_from(METHODS),
+           protocol=st.sampled_from(PROTOCOLS),
+           eps=st.sampled_from((0.25, 0.5, 1.0)),
+           seed=st.integers(0, 2**16))
+    def test_property_bounds_contain_brute_force(data, method, protocol,
+                                                 eps, seed):
+        T, lo, hi = data.draw(_window())
+        check_bounds_contain_brute_force(method, protocol, seed, T, eps,
+                                         lo, hi)
+
+    @settings(max_examples=6, deadline=None)
+    @given(data=st.data(), protocol=st.sampled_from(PROTOCOLS),
+           seed=st.integers(0, 2**16))
+    def test_property_chunked_equals_offline(data, protocol, seed):
+        check_chunked_equals_offline(protocol, data.draw(_splits()), seed)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic fixed-draw twins — always run
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", FIXED_BOUNDS,
+                         ids=[f"{m}-{p}" for m, p, *_ in FIXED_BOUNDS])
+def test_fixed_bounds_contain_brute_force(case):
+    check_bounds_contain_brute_force(*case)
+
+
+@pytest.mark.parametrize("case", FIXED_SPLITS, ids=[c[0] for c in
+                                                    FIXED_SPLITS])
+def test_fixed_chunked_equals_offline(case):
+    check_chunked_equals_offline(*case)
